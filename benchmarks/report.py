@@ -1,0 +1,67 @@
+"""Generate the EXPERIMENTS.md data tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_all(out_dir: str = "experiments/dryrun"):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        key = (d["arch"], d["shape"], d["mesh"], d.get("tag", ""))
+        recs[key] = d
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 0.01:
+        return f"{x:.3f}"
+    if x >= 1e-5:
+        return f"{x*1e3:.3f}m"
+    return f"{x*1e6:.1f}µ"
+
+
+def roofline_table(recs, mesh="16x16", tag="") -> str:
+    rows = [d for d in recs.values() if d["mesh"] == mesh and d.get("tag", "") == tag]
+    rows.sort(key=lambda d: (d["arch"], d["shape"]))
+    out = ("| arch | shape | step | compute | memory | collective | dominant "
+           "| useful | frac | peak GiB |\n" + "|---|" * 9 + "---|\n")
+    for d in rows:
+        r = d["roofline"]
+        peak = d["peak_bytes_per_device"] / 2**30
+        out += ("| {a} | {s} | {st} | {c} | {m} | {co} | **{dom}** | {u:.2f} "
+                "| {f:.3f} | {p:.1f}{w} |\n").format(
+                    a=d["arch"], s=d["shape"], st=d["step"],
+                    c=fmt_s(r["compute_s"]), m=fmt_s(r["memory_s"]),
+                    co=fmt_s(r["collective_s"]), dom=r["dominant"],
+                    u=min(r["useful_ratio"], 9.99), f=r["roofline_fraction"],
+                    p=peak, w="" if peak < 16 else " ⚠")
+    return out
+
+
+def dryrun_table(recs) -> str:
+    """Compile proof table: every cell on both meshes."""
+    cells = sorted({(d["arch"], d["shape"]) for d in recs.values()
+                    if not d.get("tag")})
+    out = ("| arch | shape | 16x16 compile | 2x16x16 compile | HLO GFLOPs/dev "
+           "(multi) | collectives (multi) |\n" + "|" + "---|" * 6 + "\n")
+    for a, s in cells:
+        single = recs.get((a, s, "16x16", ""))
+        multi = recs.get((a, s, "2x16x16", ""))
+        if not single or not multi:
+            continue
+        colls = ", ".join(f"{k}:{v['count']}" for k, v in multi["collectives"].items())
+        out += (f"| {a} | {s} | {single['compile_s']}s | {multi['compile_s']}s "
+                f"| {multi['corrected_flops_per_device']/1e9:.1f} | {colls} |\n")
+    return out
+
+
+if __name__ == "__main__":
+    recs = load_all()
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs))

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Renders EXPERIMENTS.md §Roofline: per (arch × shape × mesh) the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio and the projected roofline
+fraction. Also emits the markdown table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun", tag: str | None = None):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if tag is not None and d.get("tag", "") != tag:
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "tag": d.get("tag", ""),
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": r["model_flops_per_device"],
+            "hlo_flops": r["flops_per_device"],
+            "useful_ratio": r["useful_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "peak_gib": d["peak_bytes_per_device"] / 2**30,
+            "fits_16g": d["peak_bytes_per_device"] < 16 * 2**30,
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += ("| {arch} | {shape} | {mesh} | {compute_s:.4f} | {memory_s:.4f} "
+                 "| {collective_s:.4f} | **{dominant}** | {useful_ratio:.2f} "
+                 "| {roofline_fraction:.3f} | {peak_gib:.1f}{warn} |\n").format(
+                     warn="" if r["fits_16g"] else " ⚠", **r)
+    return hdr + body
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    rows = load(out_dir)
+    if not rows:
+        return [{"note": "no dry-run artifacts found; run python -m repro.launch.dryrun --all"}]
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown(load()))

@@ -1,0 +1,108 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+One benchmark per paper table/figure (+ framework-level extensions):
+  decode_speed       — Fig. 2 (scalar vs masked mis, by posting-list group)
+  buffered           — §V last ¶ (decode-to-L1-buffer vs full stream)
+  compression_ratio  — §V bits/int by group + blocked-layout overhead
+  integrations       — compression of the framework's real id streams
+  kernel_check       — Pallas kernel equivalence sweep (interpret mode)
+  roofline           — table from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def bench_kernel_check():
+    from repro.core.compressed_array import CompressedIntArray
+    from repro.kernels.vbyte_decode import (vbyte_decode_blocked,
+                                            vbyte_decode_blocked_ref)
+
+    rng = np.random.default_rng(0)
+    checked = 0
+    for n in (128, 1000, 4096):
+        for diff in (False, True):
+            vals = (np.sort(rng.integers(0, 2**31, n)) if diff
+                    else rng.integers(0, 2**32, n)).astype(np.uint64)
+            arr = CompressedIntArray.encode(vals, differential=diff)
+            ops = arr.device_operands()
+            a = vbyte_decode_blocked(**ops, block_size=128, differential=diff)
+            b = vbyte_decode_blocked_ref(**ops, block_size=128, differential=diff)
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+            checked += 1
+    return {"kernel_vs_oracle_cases": checked, "all_equal": True}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="decode_speed|compression|kernel|roofline")
+    ap.add_argument("--json", default="experiments/benchmarks.json")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    t0 = time.time()
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("decode_speed"):
+        from benchmarks import decode_speed
+
+        n = 1 << 16 if args.quick else 1 << 18
+        print("== decode speed by posting-list group (paper Fig. 2) ==")
+        rows = decode_speed.run(n_ints=n)
+        for r in rows:
+            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
+                  f"scalar={r['scalar_mis']:>7} mis  masked={r['masked_mis']:>8} mis "
+                  f" speedup={r['speedup']}x")
+        results["decode_speed"] = rows
+        print("== buffered vs full-stream decode (paper §V) ==")
+        b = decode_speed.run_buffered(n_ints=n)
+        print(f"  {b}")
+        results["buffered"] = b
+        proj = decode_speed.tpu_projection()
+        print(f"== TPU v5e kernel roofline projection ==\n  {proj}")
+        results["tpu_projection"] = proj
+
+    if want("compression"):
+        from benchmarks import compression_ratio
+
+        print("== compression by group (paper §V) ==")
+        rows = compression_ratio.run()
+        for r in rows:
+            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
+                  f"ratio={r['ratio_vs_u32']}x overhead={r['block_overhead']}")
+        results["compression_ratio"] = rows
+        integ = compression_ratio.run_integrations()
+        print(f"== framework id-stream compression ==\n  {integ}")
+        results["integrations"] = integ
+
+    if want("kernel"):
+        print("== pallas kernel equivalence sweep ==")
+        results["kernel_check"] = bench_kernel_check()
+        print(f"  {results['kernel_check']}")
+
+    if want("roofline"):
+        from benchmarks import roofline
+
+        rows = roofline.run()
+        results["roofline_cells"] = len(rows)
+        print(f"== roofline table: {len(rows)} dry-run cells "
+              "(see EXPERIMENTS.md §Roofline) ==")
+
+    results["wall_s"] = round(time.time() - t0, 1)
+    import os
+    os.makedirs("experiments", exist_ok=True)
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"done in {results['wall_s']}s -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

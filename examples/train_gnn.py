@@ -1,0 +1,89 @@
+"""GIN training with VByte-compressed adjacency (full-graph) and with the
+neighbor sampler (mini-batch) — the paper's posting lists as neighbor lists.
+
+    PYTHONPATH=src python examples/train_gnn.py --steps 50
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.graph import compress_adjacency
+from repro.data.sampler import CSRGraph, NeighborSampler
+from repro.data.synthetic import random_graph
+from repro.models import gnn
+from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--nodes", type=int, default=2000)
+    ap.add_argument("--edges", type=int, default=20000)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    g = random_graph(rng, args.nodes, args.edges, 32, 7)
+    csr = CSRGraph.from_edges(g["edge_src"], g["edge_dst"], args.nodes)
+    comp = compress_adjacency(csr)
+    print(f"adjacency: {csr.n_edges} edges at "
+          f"{comp.pop('_bits_per_edge'):.2f} bits/edge (VByte, per-list delta)")
+
+    cfg = gnn.GNNConfig(name="gin", n_layers=3, d_hidden=64, d_feat=32,
+                        n_classes=7, compressed_adjacency=True)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"feats": jnp.asarray(g["feats"]), "labels": jnp.asarray(g["labels"]),
+             "label_mask": jnp.ones(args.nodes, bool),
+             "edge_valid": jnp.ones(csr.n_edges, bool),
+             **{k: jnp.asarray(v) for k, v in comp.items()}}
+
+    state = init_train_state(params)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: gnn.loss_fn(p, b, cfg),
+        OptimizerConfig(peak_lr=5e-3, warmup_steps=5, total_steps=args.steps)))
+    t0 = time.time()
+    for step in range(args.steps):
+        state, m = step_fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"full-graph step {step:>3} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['accuracy']):.3f}")
+    print(f"{(time.time()-t0)/args.steps*1e3:.1f} ms/step (compressed adjacency "
+          "decoded on device every step)")
+
+    # mini-batch regime with the real neighbor sampler (minibatch_lg shape)
+    sampler = NeighborSampler(csr, fanouts=(10, 5))
+    cfg_mb = gnn.GNNConfig(name="gin-mb", n_layers=2, d_hidden=64, d_feat=32,
+                           n_classes=7)
+    params_mb = gnn.init_params(jax.random.PRNGKey(1), cfg_mb)
+    state_mb = init_train_state(params_mb)
+    step_mb = jax.jit(make_train_step(
+        lambda p, b: gnn.loss_fn(p, b, cfg_mb),
+        OptimizerConfig(peak_lr=5e-3, warmup_steps=5, total_steps=args.steps)))
+    n_cap = None
+    for step in range(10):
+        seeds = rng.choice(args.nodes, 256, replace=False)
+        sub = sampler.sample(seeds, rng)
+        n = len(sub["node_ids"])
+        n_cap = n_cap or sampler.node_capacity(256)
+        feats = np.zeros((n_cap, 32), np.float32)
+        feats[:n] = g["feats"][sub["node_ids"]]
+        labels = np.zeros(n_cap, np.int32)
+        labels[:n] = g["labels"][sub["node_ids"]]
+        mask = np.zeros(n_cap, bool)
+        mask[sub["seed_ids"]] = True
+        mb = {"feats": jnp.asarray(feats), "labels": jnp.asarray(labels),
+              "label_mask": jnp.asarray(mask),
+              "edge_src": jnp.asarray(sub["edge_src"]),
+              "edge_dst": jnp.asarray(sub["edge_dst"]),
+              "edge_valid": jnp.asarray(sub["edge_valid"])}
+        state_mb, m = step_mb(state_mb, mb)
+        if step % 3 == 0:
+            print(f"minibatch step {step:>2} loss={float(m['loss']):.4f} "
+                  f"({int(sub['edge_valid'].sum())} sampled edges)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Checkpointing: atomic, resumable, async-capable, VByte-compressed ints.
+
+Layout: <dir>/step_<N>/{manifest.json, leaves.npz} written to a tmp dir and
+renamed (atomic on POSIX). Integer leaves are zigzag+VByte-compressed inside
+the npz (the paper's codec applied to checkpoint state — DESIGN.md §3).
+Restart: ``restore_latest(example_state)`` → (state, step); crash-consistent
+because partial writes never carry the final directory name.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.vbyte.encode import encode_stream
+from repro.core.vbyte.ref import decode_stream_scalar
+from repro.core.vbyte.masked import decode_stream
+
+import jax.numpy as jnp
+
+_INT_KINDS = ("i", "u")
+
+
+def _zigzag(x: np.ndarray) -> np.ndarray:
+    x64 = x.astype(np.int64)
+    return ((x64 << 1) ^ (x64 >> 63)).astype(np.uint64)
+
+
+def _unzigzag(z: np.ndarray) -> np.ndarray:
+    z = z.astype(np.int64)  # values < 2^33 after zigzag of int32 range
+    return (z >> 1) ^ -(z & 1)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, compress_ints: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.compress_ints = compress_ints
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, *, async_: bool = False):
+        leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+        host = [(_path_str(p), np.asarray(x)) for p, x in leaves]  # snapshot now
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(target=self._write, args=(step, host))
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}_{time.time_ns()}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays, manifest = {}, {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(host_leaves):
+            key = f"leaf_{i}"
+            entry = {"name": name, "key": key, "dtype": str(arr.dtype),
+                     "shape": list(arr.shape), "codec": "raw"}
+            if (self.compress_ints and arr.dtype.kind in _INT_KINDS
+                    and arr.size > 0 and arr.dtype.itemsize <= 8):
+                z = _zigzag(arr.reshape(-1))
+                if z.size and int(z.max()) <= 0xFFFFFFFF:
+                    stream = encode_stream(z)
+                    if stream.nbytes < arr.nbytes:  # only keep wins
+                        arrays[key] = stream
+                        entry["codec"] = "vbyte_zigzag"
+            if entry["codec"] == "raw":
+                if arr.dtype == jnp.bfloat16:
+                    arrays[key] = arr.view(np.uint16)
+                    entry["codec"] = "bf16_as_u16"
+                else:
+                    arrays[key] = arr
+            manifest["leaves"].append(entry)
+        np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+
+    def _prune(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, step: int, example_state):
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "leaves.npz"))
+        leaves = []
+        for entry in manifest["leaves"]:
+            raw = data[entry["key"]]
+            dt = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" else None
+            shape = tuple(entry["shape"])
+            if entry["codec"] == "vbyte_zigzag":
+                n = int(np.prod(shape)) if shape else 1
+                z = decode_stream_scalar(raw, n) if n < 4096 else np.asarray(
+                    decode_stream(jnp.asarray(raw), n, nbytes=len(raw))[0]
+                ).astype(np.uint64)
+                arr = _unzigzag(z).astype(dt).reshape(shape)
+            elif entry["codec"] == "bf16_as_u16":
+                arr = raw.view(jnp.bfloat16).reshape(shape)
+            else:
+                arr = raw.astype(dt).reshape(shape)
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(example_state)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, example_state):
+        steps = self.steps()
+        if not steps:
+            return None, -1
+        return self.restore(steps[-1], example_state), steps[-1]

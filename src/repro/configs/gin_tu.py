@@ -1,0 +1,17 @@
+"""GIN [arXiv:1810.00826] — 5 layers, d_hidden 64, sum aggregator, learnable ε.
+
+d_feat / n_classes / adjacency mode vary per shape (cora, reddit-scale
+sampled, ogbn-products, batched molecules) — resolved by the registry.
+Adjacency for the full-graph shapes is VByte-compressed (DESIGN.md §3/§5:
+the most paper-representative integration).
+"""
+from repro.models.gnn import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gin-tu",
+    n_layers=5,
+    d_hidden=64,
+)
+
+FAMILY = "gnn"
+SKIPS = {}

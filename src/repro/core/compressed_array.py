@@ -1,0 +1,104 @@
+"""Public API: device-resident compressed integer arrays.
+
+``CompressedIntArray`` is the framework's first-class compressed-id type
+(DESIGN.md §3): posting lists, token streams, adjacency lists, user
+histories and retrieval candidate lists are all stored in this form and
+decoded on device by the vectorized Masked-VByte decoder (or its Pallas
+kernel, see ``repro.kernels.vbyte_decode``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .vbyte import encode as venc
+from .vbyte import masked as vmasked
+from .vbyte import ref as vref
+
+
+@dataclass(frozen=True)
+class CompressedIntArray:
+    """A VByte-compressed, block-decodable array of uint32."""
+
+    enc: venc.BlockedEncoding
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def encode(
+        cls,
+        values: np.ndarray,
+        *,
+        block_size: int = 128,
+        differential: bool = False,
+        stride_multiple: int = 128,
+    ) -> "CompressedIntArray":
+        return cls(
+            venc.encode_blocked(
+                values,
+                block_size=block_size,
+                differential=differential,
+                stride_multiple=stride_multiple,
+            )
+        )
+
+    # -- metadata ----------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.enc.n
+
+    @property
+    def n_blocks(self) -> int:
+        return self.enc.n_blocks
+
+    @property
+    def bits_per_int(self) -> float:
+        return self.enc.bits_per_int
+
+    @property
+    def compression_ratio(self) -> float:
+        """Raw uint32 bytes / tight compressed bytes (the paper's framing)."""
+        return 4.0 * self.n / max(self.enc.payload_bytes, 1)
+
+    # -- device form --------------------------------------------------------
+    def device_operands(self) -> dict[str, Any]:
+        """Arrays consumed by the decoders / the Pallas kernel."""
+        return {
+            "payload": jnp.asarray(self.enc.payload),
+            "counts": jnp.asarray(self.enc.counts),
+            "bases": jnp.asarray(self.enc.bases),
+        }
+
+    # -- decoding ------------------------------------------------------------
+    def decode(self, *, use_kernel: bool = False) -> np.ndarray:
+        """Decode to uint32[n] (host-visible)."""
+        if use_kernel:
+            from repro.kernels.vbyte_decode import ops as kops
+
+            out = kops.vbyte_decode_blocked(
+                **self.device_operands(),
+                block_size=self.enc.block_size,
+                differential=self.enc.differential,
+            )
+        else:
+            out = vmasked.decode_blocked(
+                **self.device_operands(),
+                block_size=self.enc.block_size,
+                differential=self.enc.differential,
+            )
+        flat = np.asarray(out).reshape(-1)[: self.n]
+        return flat.astype(np.uint32)
+
+    def decode_scalar_oracle(self) -> np.ndarray:
+        """Algorithm-1 decode (slow; tests/benchmarks only)."""
+        out = vref.decode_blocked_scalar(
+            self.enc.payload,
+            self.enc.counts,
+            self.enc.bases,
+            self.enc.block_size,
+            differential=self.enc.differential,
+        )
+        return out.reshape(-1)[: self.n].astype(np.uint32)

@@ -1,0 +1,9 @@
+from . import encode, masked, ref  # noqa: F401
+from .encode import (  # noqa: F401
+    BlockedEncoding,
+    delta_decode,
+    delta_encode,
+    encode_blocked,
+    encode_stream,
+    vbyte_lengths,
+)

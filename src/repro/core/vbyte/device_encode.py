@@ -1,0 +1,81 @@
+"""Device-side vectorized VByte *encoder* (pure jnp).
+
+The inverse of the masked decoder, with the same branch-free structure:
+per-value byte lengths from threshold compares (the decoder's continuation
+mask, run backwards), destination offsets from a prefix sum, and a
+scatter-set of payload bytes. Used for on-device checkpoint compression and
+re-encoding pipelines; the host path (``encode.py``, numpy) remains the
+bulk-ingest tool.
+
+Emits the blocked layout directly: uint8[n_blocks, stride] + counts + bases.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+_THRESH = (1 << 7, 1 << 14, 1 << 21, 1 << 28)
+
+
+def vbyte_lengths_device(values: jax.Array) -> jax.Array:
+    """Encoded byte count per value (1..5), vectorized."""
+    v = values.astype(_U32)
+    n = jnp.ones(v.shape, jnp.int32)
+    for t in _THRESH:
+        n = n + (v >= _U32(t)).astype(jnp.int32)
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "stride", "differential"))
+def encode_blocked_device(
+    values: jax.Array,  # uint32[n] (n % block_size == 0, pad with zeros)
+    *,
+    block_size: int = 128,
+    stride: int = 640,  # must fit the worst block: block_size * 5
+    differential: bool = False,
+) -> dict:
+    """Encode to the blocked layout on device.
+
+    Returns {"payload": u8[nb, stride], "counts": i32[nb], "bases": u32[nb]}
+    — bit-compatible with the host encoder given the same stride, and
+    round-trippable through every decoder in this package.
+    """
+    n = values.shape[0]
+    assert n % block_size == 0, (n, block_size)
+    nb = n // block_size
+    v = values.astype(_U32).reshape(nb, block_size)
+
+    if differential:
+        first = v[:, :1]
+        gaps = jnp.concatenate([first, v[:, 1:] - v[:, :-1]], axis=1)
+        prev_last = jnp.concatenate([jnp.zeros((1,), _U32), v[:-1, -1]])
+        gaps = gaps.at[:, 0].set(v[:, 0] - prev_last)  # cross-block delta
+        bases = prev_last
+        enc = gaps
+    else:
+        enc = v
+        bases = jnp.zeros((nb,), _U32)
+
+    lengths = vbyte_lengths_device(enc)  # [nb, B]
+    offs = jnp.cumsum(lengths, axis=1) - lengths  # byte offset per value
+
+    # payload byte k of value j: (enc >> 7k) & 0x7F, continuation bit if k<len-1
+    k = jnp.arange(5, dtype=jnp.int32)
+    chunks = (enc[..., None] >> (7 * k).astype(_U32)) & _U32(0x7F)  # [nb, B, 5]
+    cont = (k[None, None] < lengths[..., None] - 1).astype(_U32) << _U32(7)
+    data = (chunks | cont).astype(jnp.uint8)
+    used = k[None, None] < lengths[..., None]
+
+    dst = offs[..., None] + k[None, None]  # [nb, B, 5]
+    dst = jnp.where(used, dst, stride)  # drop unused slots
+    row = jnp.arange(nb, dtype=jnp.int32)[:, None, None]
+    flat = (row * (stride + 1) + jnp.minimum(dst, stride)).reshape(-1)
+    payload = jnp.zeros((nb * (stride + 1),), jnp.uint8).at[flat].set(
+        data.reshape(-1), mode="drop", unique_indices=True)
+    payload = payload.reshape(nb, stride + 1)[:, :stride]
+
+    counts = jnp.full((nb,), block_size, jnp.int32)
+    return {"payload": payload, "counts": counts, "bases": bases}

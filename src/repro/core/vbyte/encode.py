@@ -1,0 +1,189 @@
+"""Host-side VByte encoding (numpy, vectorized).
+
+Implements the format of Plaisance, Kurz & Lemire (2015), §I:
+
+    Starting from the least significant bits, an integer is written seven
+    bits per byte; the most significant bit of each byte is 1 in all bytes
+    except the last (the terminator), where it is 0.
+
+Two layouts are produced:
+
+* **stream**: the paper's byte stream — ``concat(vbyte(x) for x in values)``.
+* **blocked**: fixed-shape SPMD layout (DESIGN.md §2) — ``block_size``
+  integers per block, each block padded to a common byte ``stride``; per-block
+  ``counts`` (tail masking) and ``bases`` (differential-coding carry) make
+  every block independently decodable, which is what lets 1000+ chips decode
+  in parallel.
+
+Encoding is vectorized: no python loop over integers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+MAX_BYTES_PER_INT = 5  # 32-bit integers need at most ceil(32/7) = 5 bytes
+_LEN_THRESHOLDS = np.array([1 << 7, 1 << 14, 1 << 21, 1 << 28], dtype=np.uint64)
+
+
+def vbyte_lengths(values: np.ndarray) -> np.ndarray:
+    """Number of encoded bytes for each value (1..5)."""
+    v = np.asarray(values, dtype=np.uint64)
+    return (np.searchsorted(_LEN_THRESHOLDS, v, side="right") + 1).astype(np.int64)
+
+
+def _byte_matrix(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return ([n, 5] uint8 byte matrix incl. continuation bits, [n] lengths)."""
+    v = np.asarray(values, dtype=np.uint64)
+    if v.ndim != 1:
+        raise ValueError(f"expected 1-D values, got shape {v.shape}")
+    if v.size and int(v.max()) > 0xFFFFFFFF:
+        raise ValueError("VByte encoder supports 32-bit unsigned integers")
+    lengths = vbyte_lengths(v)
+    shifts = np.arange(MAX_BYTES_PER_INT, dtype=np.uint64) * np.uint64(7)
+    chunks = (v[:, None] >> shifts[None, :]) & np.uint64(0x7F)  # [n, 5]
+    k = np.arange(MAX_BYTES_PER_INT, dtype=np.int64)
+    cont = k[None, :] < (lengths[:, None] - 1)  # continuation flag per byte
+    data = chunks.astype(np.uint8) | (cont.astype(np.uint8) << 7)
+    return data, lengths
+
+
+def encode_stream(values: np.ndarray) -> np.ndarray:
+    """Encode to the paper's tight byte stream. Returns uint8[total_bytes]."""
+    data, lengths = _byte_matrix(values)
+    keep = np.arange(MAX_BYTES_PER_INT)[None, :] < lengths[:, None]
+    return data[keep]  # row-major boolean take preserves byte order
+
+
+def delta_encode(values: np.ndarray) -> np.ndarray:
+    """Successive differences (x1-0, x2-x1, ...) per the paper's convention.
+
+    Requires a non-decreasing sequence (sorted ids, possibly with repeats).
+    """
+    v = np.asarray(values, dtype=np.uint64)
+    if v.size and np.any(np.diff(v.astype(np.int64)) < 0):
+        raise ValueError("differential coding requires a non-decreasing sequence")
+    return np.diff(v, prepend=np.uint64(0))
+
+
+def delta_decode(gaps: np.ndarray) -> np.ndarray:
+    return np.cumsum(np.asarray(gaps, dtype=np.uint64)).astype(np.uint64)
+
+
+@dataclass(frozen=True)
+class BlockedEncoding:
+    """Fixed-shape blocked VByte encoding (see module docstring)."""
+
+    payload: np.ndarray  # uint8 [n_blocks, stride]
+    counts: np.ndarray  # int32 [n_blocks] — valid integers per block
+    bases: np.ndarray  # uint32 [n_blocks] — differential carry-in (0 if not differential)
+    n: int  # total integers
+    block_size: int
+    differential: bool
+
+    @property
+    def n_blocks(self) -> int:
+        return self.payload.shape[0]
+
+    @property
+    def stride(self) -> int:
+        return self.payload.shape[1]
+
+    @property
+    def payload_bytes(self) -> int:
+        """Tight compressed size (excludes block padding): the paper's metric."""
+        return int(vbyte_lengths(self._encoded_values()).sum()) if self.n else 0
+
+    def _encoded_values(self) -> np.ndarray:
+        # re-derive gap/raw values from the payload for size accounting
+        from .ref import decode_stream_scalar  # local import to avoid cycle
+
+        out = []
+        for b in range(self.n_blocks):
+            out.append(decode_stream_scalar(self.payload[b], int(self.counts[b])))
+        return np.concatenate(out) if out else np.zeros(0, np.uint64)
+
+    @property
+    def device_bytes(self) -> int:
+        """Bytes actually shipped to device (payload incl. padding + metadata)."""
+        return self.payload.nbytes + self.counts.nbytes + self.bases.nbytes
+
+    @property
+    def bits_per_int(self) -> float:
+        return 8.0 * self.payload_bytes / max(self.n, 1)
+
+
+def encode_blocked(
+    values: np.ndarray,
+    *,
+    block_size: int = 128,
+    differential: bool = False,
+    stride_multiple: int = 128,
+    min_stride: int | None = None,
+) -> BlockedEncoding:
+    """Encode ``values`` into the blocked layout.
+
+    With ``differential=True`` the *gaps* are encoded and each block's
+    ``bases[b]`` holds the absolute value preceding the block, so
+    ``decode(block b) = bases[b] + cumsum(gaps in block b)`` — every block is
+    independent (the TPU analogue of inverted-index skip blocks).
+    """
+    v = np.asarray(values, dtype=np.uint64).ravel()
+    n = int(v.size)
+    n_blocks = max(1, -(-n // block_size))
+
+    if differential:
+        enc_values = delta_encode(v)
+        # carry-in for block b = last absolute value of block b-1
+        last_idx = np.minimum(np.arange(1, n_blocks) * block_size, max(n, 1)) - 1
+        bases = np.zeros(n_blocks, dtype=np.uint32)
+        if n:
+            bases[1:] = v[last_idx].astype(np.uint32)
+    else:
+        enc_values = v
+        bases = np.zeros(n_blocks, dtype=np.uint32)
+
+    data, lengths = _byte_matrix(enc_values)
+
+    counts = np.full(n_blocks, block_size, dtype=np.int32)
+    if n:
+        counts[-1] = n - (n_blocks - 1) * block_size
+    else:
+        counts[0] = 0
+
+    # bytes per block, stride = max rounded up for aligned VMEM tiles
+    pad_n = n_blocks * block_size
+    lengths_p = np.zeros(pad_n, dtype=np.int64)
+    lengths_p[:n] = lengths
+    block_bytes = lengths_p.reshape(n_blocks, block_size).sum(axis=1)
+    stride = int(block_bytes.max(initial=1))
+    stride = max(stride, min_stride or 0, 1)
+    stride = -(-stride // stride_multiple) * stride_multiple
+    if stride > block_size * MAX_BYTES_PER_INT:
+        stride = block_size * MAX_BYTES_PER_INT
+
+    payload = np.zeros((n_blocks, stride), dtype=np.uint8)
+    if n:
+        # destination offset of every encoded byte, all vectorized
+        within = np.arange(MAX_BYTES_PER_INT)[None, :]
+        keep = within < lengths[:, None]  # [n, 5]
+        block_id = np.arange(n) // block_size
+        # byte offset of each integer inside its block:
+        # exclusive cumsum of lengths, reset at every block boundary
+        csum = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+        block_start = np.repeat(
+            np.concatenate([[0], np.cumsum(block_bytes)[:-1]]), block_size
+        )[:n]
+        off_in_block = csum - block_start
+        dst = block_id[:, None] * stride + off_in_block[:, None] + within  # [n, 5]
+        payload.reshape(-1)[dst[keep]] = data[keep]
+
+    return BlockedEncoding(
+        payload=payload,
+        counts=counts,
+        bases=bases,
+        n=n,
+        block_size=block_size,
+        differential=differential,
+    )

@@ -1,0 +1,108 @@
+"""Scalar reference decoders — the paper's Algorithm 1 (conventional VByte).
+
+``decode_stream_scalar`` is the pure-python/numpy oracle used by every test.
+``decode_stream_scalar_jax`` is the same algorithm as a ``lax.while_loop`` —
+branch-per-byte with a loop-carried dependence, so XLA cannot vectorize it.
+It is the faithful "conventional decoder" baseline the paper measures MASKED
+VBYTE against (§V), and it is what our benchmarks compare the vectorized
+decoder to.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def decode_stream_scalar(data: np.ndarray, n: int, *, differential: bool = False,
+                         base: int = 0) -> np.ndarray:
+    """Decode ``n`` integers from a VByte byte stream (Algorithm 1)."""
+    data = np.asarray(data, dtype=np.uint8)
+    out = np.zeros(n, dtype=np.uint64)
+    i = 0
+    prev = np.uint64(base)
+    for j in range(n):
+        x = np.uint64(0)
+        shift = np.uint64(0)
+        while True:
+            b = np.uint64(data[i])
+            i += 1
+            x |= (b & np.uint64(0x7F)) << shift
+            if b < 128:
+                break
+            shift += np.uint64(7)
+        if differential:
+            prev = np.uint64((prev + x) & np.uint64(0xFFFFFFFF))
+            out[j] = prev
+        else:
+            out[j] = x
+    return out
+
+
+def consumed_bytes(data: np.ndarray, n: int) -> int:
+    """Bytes consumed decoding the first ``n`` integers of a stream."""
+    data = np.asarray(data, dtype=np.uint8)
+    seen = 0
+    for i, b in enumerate(data):
+        if b < 128:
+            seen += 1
+            if seen == n:
+                return i + 1
+    if n == 0:
+        return 0
+    raise ValueError("stream ended before n integers were decoded")
+
+
+def decode_stream_scalar_jax(data: jax.Array, n_max: int, *, differential: bool = False,
+                             base=0, nbytes=None):
+    """Algorithm 1 as a jax while_loop: one byte per iteration, fully serial.
+
+    Returns ``(out[n_max] uint32, n_decoded)``. Fixed-shape: decodes at most
+    ``n_max`` integers or until the stream is exhausted.
+    """
+    data = data.astype(jnp.uint32)
+    nbytes = data.shape[0] if nbytes is None else jnp.asarray(nbytes, jnp.int32)
+
+    def cond(state):
+        i, j, _, _, _, _ = state
+        return jnp.logical_and(i < nbytes, j < n_max)
+
+    def body(state):
+        i, j, acc, shift, prev, out = state
+        b = data[i]
+        acc = acc | ((b & 0x7F) << shift)
+        done = b < 128
+        value = jnp.where(differential, prev + acc, acc)
+        out = jnp.where(done, out.at[j].set(value), out)
+        prev = jnp.where(done, value, prev)
+        j = j + done.astype(jnp.int32)
+        acc = jnp.where(done, 0, acc)
+        shift = jnp.where(done, 0, shift + 7)
+        return (i + 1, j, acc, shift, prev, out)
+
+    out0 = jnp.zeros((n_max,), jnp.uint32)
+    state = (
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.uint32(0),
+        jnp.uint32(0),
+        jnp.uint32(base),
+        out0,
+    )
+    _, j, _, _, _, out = lax.while_loop(cond, body, state)
+    return out, j
+
+
+def decode_blocked_scalar(payload: np.ndarray, counts: np.ndarray, bases: np.ndarray,
+                          block_size: int, *, differential: bool) -> np.ndarray:
+    """Oracle for the blocked layout: [n_blocks, block_size] uint64, zero-padded."""
+    n_blocks = payload.shape[0]
+    out = np.zeros((n_blocks, block_size), dtype=np.uint64)
+    for b in range(n_blocks):
+        c = int(counts[b])
+        out[b, :c] = decode_stream_scalar(
+            payload[b], c, differential=differential, base=int(bases[b])
+        )
+    return out

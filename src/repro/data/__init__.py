@@ -1,0 +1,1 @@
+from . import graph, pipeline, sampler, synthetic  # noqa: F401

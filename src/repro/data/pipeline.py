@@ -1,0 +1,50 @@
+"""Compressed input pipeline: VByte token shards decoded on device.
+
+The LM data path stores token streams VByte-compressed (Lucene-vInt style).
+One training step consumes one shard of B×(S+1) tokens; the shard's blocked
+payload is shipped to device and decoded by the Masked-VByte decoder (Pallas
+kernel on TPU) straight into the [B, S+1] token batch — decompression rides
+the training step instead of the host CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.compressed_array import CompressedIntArray
+
+
+class CompressedTokenPipeline:
+    def __init__(self, tokens: np.ndarray, batch: int, seq_len: int,
+                 *, use_kernel: bool = True, block_size: int = 128):
+        self.tokens = np.asarray(tokens, dtype=np.uint64)
+        self.batch = batch
+        self.seq_len = seq_len
+        self.step_tokens = batch * (seq_len + 1)
+        self.n_steps = len(self.tokens) // self.step_tokens
+        self.use_kernel = use_kernel
+        self.block_size = block_size
+        if self.n_steps == 0:
+            raise ValueError("token stream shorter than one step")
+
+    def shard(self, step: int) -> CompressedIntArray:
+        lo = (step % self.n_steps) * self.step_tokens
+        return CompressedIntArray.encode(
+            self.tokens[lo : lo + self.step_tokens],
+            block_size=self.block_size, differential=False,
+        )
+
+    def get_batch(self, step: int) -> dict:
+        """Decode shard `step` on device -> {"tokens": [B, S+1] int32}."""
+        arr = self.shard(step)
+        flat = arr.decode(use_kernel=self.use_kernel)[: self.step_tokens]
+        toks = jnp.asarray(flat.astype(np.int32)).reshape(self.batch, self.seq_len + 1)
+        return {"tokens": toks}
+
+    def compression_ratio(self) -> float:
+        return self.shard(0).compression_ratio
+
+    def __iter__(self):
+        for s in range(self.n_steps):
+            yield self.get_batch(s)

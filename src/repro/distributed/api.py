@@ -1,0 +1,60 @@
+"""Sharding-constraint plumbing.
+
+Model code never imports a concrete mesh: it calls ``constrain(x, *axes)``
+with *logical* per-dim mesh-axis names (or None). When a mesh context is
+active (set by dryrun/train/serve via ``activate_mesh``), this applies
+``with_sharding_constraint``; otherwise it is a no-op, so smoke tests on one
+CPU device run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh):
+    """Thread-local mesh context; ``constrain`` builds explicit NamedShardings
+    against it (no jax global mesh state is touched)."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _resolve_axes(axes, mesh: Mesh):
+    """Drop axis names not present in the active mesh (e.g. 'pod' on 1 pod)."""
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif isinstance(a, (tuple, list)):
+            kept = tuple(x for x in a if x in mesh.axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(a if a in mesh.axis_names else None)
+    return tuple(out)
+
+
+def constrain(x: jax.Array, *axes):
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = P(*_resolve_axes(axes, mesh))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*_resolve_axes(axes, mesh)))

@@ -1,0 +1,86 @@
+"""Collective-traffic extraction from post-SPMD HLO text.
+
+``cost_analysis()`` has no collective bytes, so we parse the compiled module:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes per-device *wire bytes* using standard
+ring-algorithm factors (n = replica-group size):
+
+    all-reduce        2·(n−1)/n · result_bytes
+    all-gather          (n−1)/n · result_bytes      (result = gathered)
+    reduce-scatter      (n−1)   · result_bytes      (result = scattered)
+    all-to-all          (n−1)/n · result_bytes
+    collective-permute            result_bytes      (one hop)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+# "%name = TYPE op-name(" — result type may be a tuple
+_OP_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|\S+)\s+(?P<op>" + _COLL + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind {count, result_bytes, wire_bytes} + totals."""
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if "-done" in line and "start" not in line:
+            continue  # counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("rtype"))
+        n = _group_size(line)
+        wire = _WIRE_FACTOR[op](max(n, 1)) * rb
+        s = stats[op]
+        s["count"] += 1
+        s["result_bytes"] += rb
+        s["wire_bytes"] += wire
+    total_wire = sum(s["wire_bytes"] for s in stats.values())
+    return {"ops": dict(stats), "total_wire_bytes": total_wire}

@@ -1,0 +1,157 @@
+"""Per-family sharding rules (DP/TP/EP/SP) as path-pattern → PartitionSpec.
+
+Rules are expressed over parameter-tree path strings, applied with
+``tree_map_with_path`` — one rule table per family, reused for params and
+both Adam moments. Batch/cache specs are built per (arch, shape) by the
+registry using the helpers here. See DESIGN.md §6 for the parallelism map.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .api import _resolve_axes
+
+DP = ("pod", "data")
+TP = "model"
+ALL = ("pod", "data", "model")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ----------------------------------------------------------------------------
+# LM parameter rules
+# ----------------------------------------------------------------------------
+def zero1_extend(spec: P, leaf, *, min_size: int = 1 << 20, divisor: int = 32) -> P:
+    """ZeRO-1: additionally shard a (master/moment) leaf over the DP axes on
+    the first unsharded dim divisible by pod×data — storage only; the compute
+    copy is re-gathered (bf16) by the train step."""
+    if leaf.size < min_size:
+        return spec
+    axes = list(spec) + [None] * (leaf.ndim - len(spec))
+    for i, (ax, dim) in enumerate(zip(axes, leaf.shape)):
+        if ax is None and dim % divisor == 0:
+            axes[i] = DP
+            return P(*axes)
+    return spec
+
+
+def lm_param_spec(cfg, *, zero1: bool = False) -> "callable":
+    tp_divides_kv = (cfg.n_kv_heads * cfg.dh) % 16 == 0 and cfg.n_kv_heads % 16 == 0
+    ep = bool(cfg.moe and cfg.moe.ep_shard)
+
+    def rule(path, leaf):
+        spec = _base_rule(path, leaf)
+        return zero1_extend(spec, leaf) if zero1 else spec
+
+    def _base_rule(path, leaf):
+        s = _path_str(path)
+        if s.endswith("embed/emb"):
+            return P(TP, None)
+        if s.endswith("lm_head/w"):
+            return P(None, TP)
+        if "attn/wq" in s:
+            return P(None, None, TP)
+        if "attn/wk" in s or "attn/wv" in s:
+            return P(None, None, TP) if tp_divides_kv else P(None, None, None)
+        if "attn/wo" in s:
+            return P(None, TP, None)
+        if "ffn/gate" in s or "ffn/up" in s:
+            return P(None, None, TP)
+        if "ffn/down" in s:
+            return P(None, TP, None)
+        if "moe/router" in s:
+            return P(None, None, None)
+        if "moe/gate" in s or "moe/up" in s:  # [L, E, d, f]
+            return P(None, TP, None, None) if ep else P(None, None, None, TP)
+        if "moe/down" in s:  # [L, E, f, d]
+            return P(None, TP, None, None) if ep else P(None, None, TP, None)
+        return P(*([None] * leaf.ndim))
+
+    return rule
+
+
+def lm_cache_spec(cfg, batch: int, mesh_dp: int):
+    """[L, B, Sc, Hk, dh] cache spec: DP on batch when divisible, else
+    sequence-parallel cache (long_500k); heads or head-dim on TP."""
+    from repro.models.lm import cache_head_axes
+
+    head_axes = cache_head_axes(cfg)
+    if batch % mesh_dp == 0 and batch >= mesh_dp:
+        return P(None, DP, None, *head_axes)
+    return P(None, None, "data", *head_axes)  # SP over cache length
+
+
+# ----------------------------------------------------------------------------
+# GNN / RecSys parameter rules
+# ----------------------------------------------------------------------------
+def gnn_param_spec(cfg):
+    def rule(path, leaf):
+        return P(*([None] * leaf.ndim))  # tiny params: replicate
+
+    return rule
+
+
+def recsys_param_spec(cfg, *, serving: bool = False):
+    table_mode = getattr(cfg, "serve_table_mode", "row") if serving else "row"
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        if table_mode == "replicated" and serving:
+            return P(*([None] * leaf.ndim))  # replicate-everything serving
+        if s.endswith("_emb/emb") and leaf.shape[0] >= 1 << 16:
+            if table_mode == "column":
+                return P(None, TP)
+            return P(TP, None)  # row-sharded big tables
+        if "_mlp/" in s or s.startswith("mlp/") or "/mlp/" in s:
+            # megatron-style alternation col/row across MLP layers
+            try:
+                layer_idx = int(s.split("layer_")[1].split("/")[0])
+            except (IndexError, ValueError):
+                layer_idx = 0
+            col = layer_idx % 2 == 0
+            if s.endswith("/w"):
+                if leaf.shape[-1] % 16 != 0:  # final logit layer etc.
+                    return P(*([None] * leaf.ndim))
+                return P(None, TP) if col else P(TP, None)
+            if s.endswith("/b"):
+                return P(TP) if col and leaf.shape[-1] % 16 == 0 else P(None)
+        return P(*([None] * leaf.ndim))
+
+    return rule
+
+
+# ----------------------------------------------------------------------------
+# assembling full state / batch shardings
+# ----------------------------------------------------------------------------
+def tree_specs(params, rule):
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def state_specs(params, rule, *, has_ef: bool = False):
+    pspec = tree_specs(params, rule)
+    out = {
+        "params": pspec,
+        "opt": {"m": pspec, "v": pspec, "step": P()},
+    }
+    if has_ef:
+        out["ef"] = pspec
+    return out
+
+
+def to_named(mesh: Mesh, spec_tree):
+    def conv(s):
+        return NamedSharding(mesh, P(*_resolve_axes(tuple(s), mesh)))
+
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spot the paper optimizes:
+vectorized VByte decoding (with fused differential prefix sum)."""

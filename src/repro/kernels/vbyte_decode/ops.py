@@ -1,0 +1,58 @@
+"""Public jit'd wrapper for the Pallas vbyte-decode kernel.
+
+On CPU (this container) the kernel executes in interpret mode; on TPU it
+compiles through Mosaic. Semantics identical to ``ref.vbyte_decode_blocked_ref``
+and ``repro.core.vbyte.masked.decode_blocked``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_blocked_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "differential", "block_tile", "interpret")
+)
+def vbyte_decode_blocked(
+    payload: jax.Array,  # uint8 [n_blocks, stride]
+    counts: jax.Array,  # int   [n_blocks]
+    bases: jax.Array,  # uint32/int32 [n_blocks]
+    *,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode a blocked VByte payload to uint32[n_blocks, block_size]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    nb, stride = payload.shape
+
+    pad = (-nb) % block_tile
+    if pad:
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+        counts = jnp.pad(counts, ((0, pad),))
+        bases = jnp.pad(bases, ((0, pad),))
+
+    counts2 = counts.astype(jnp.int32)[:, None]
+    bases2 = jax.lax.bitcast_convert_type(bases.astype(jnp.uint32), jnp.int32)[:, None]
+
+    out = decode_blocked_pallas(
+        payload,
+        counts2,
+        bases2,
+        block_size=block_size,
+        differential=differential,
+        block_tile=block_tile,
+        interpret=interpret,
+    )
+    out = jax.lax.bitcast_convert_type(out, jnp.uint32)
+    return out[:nb]

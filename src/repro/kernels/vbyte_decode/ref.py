@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Pallas vbyte-decode kernel's blocked semantics.
+
+Deliberately implemented with a *different* strategy than both the kernel
+(one-hot MXU scatter) and ``repro.core.vbyte.masked`` (segment-sum): here each
+output integer *gathers* its ≤5 source bytes via searchsorted offsets. Three
+independent implementations agreeing is the correctness story.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+
+
+def _decode_one_block(payload_row: jax.Array, count: jax.Array, base: jax.Array,
+                      block_size: int, differential: bool) -> jax.Array:
+    S = payload_row.shape[0]
+    b = payload_row.astype(jnp.int32)
+    end = 1 - (b >> 7)  # terminator flags
+    term_count = jnp.cumsum(end)  # inclusive count of terminators
+    j = jnp.arange(block_size, dtype=jnp.int32)
+    # index of the j-th terminator byte (end of integer j)
+    term_idx = jnp.searchsorted(term_count, j + 1, side="left").astype(jnp.int32)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32), term_idx[:-1] + 1])
+    length = term_idx - start + 1
+    k = jnp.arange(5, dtype=jnp.int32)[None, :]
+    src = jnp.clip(start[:, None] + k, 0, S - 1)
+    bytes_jk = jnp.take(payload_row, src).astype(_U32)
+    used = k < length[:, None]
+    vals = jnp.where(used, (bytes_jk & _U32(0x7F)) << (7 * k).astype(_U32), _U32(0))
+    out = vals.sum(axis=1, dtype=_U32)
+    out = jnp.where(j < count, out, _U32(0))
+    if differential:
+        out = base.astype(_U32) + jnp.cumsum(out, dtype=_U32)
+        out = jnp.where(j < count, out, _U32(0))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "differential"))
+def vbyte_decode_blocked_ref(payload: jax.Array, counts: jax.Array, bases: jax.Array,
+                             *, block_size: int, differential: bool) -> jax.Array:
+    """uint32[n_blocks, block_size], zero-padded — gather-based oracle."""
+    fn = functools.partial(
+        _decode_one_block, block_size=block_size, differential=differential
+    )
+    return jax.vmap(fn)(payload, counts.astype(jnp.int32), bases)

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:  jit(step, in_shardings).lower(*ShapeDtypeStructs).compile()
+on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh — no array is
+ever allocated. Records memory_analysis(), cost_analysis() and the parsed
+collective schedule into a JSON per cell (consumed by EXPERIMENTS.md §Dry-run
+/ §Roofline and the perf loop).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+      --override banded_attention=true --tag banded
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.distributed.api import activate_mesh
+from repro.distributed.hlo_analysis import collective_stats
+from repro.launch import cost_model as cm
+from repro.launch import roofline_math as rm
+from repro.launch.mesh import dp_degree, make_production_mesh
+from repro.models import registry
+
+
+def _parse_overrides(items):
+    out = {}
+    for kv in items or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             overrides: dict | None = None, keep_hlo: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cell = registry.build_cell(arch, shape, mesh_dp=dp_degree(mesh),
+                               overrides=overrides)
+    record = {
+        "arch": arch, "shape": shape, "step": cell.shape.step,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "n_chips": int(n_chips), "overrides": overrides or {},
+    }
+    t0 = time.time()
+    with activate_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings(mesh),
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        record[attr] = int(getattr(mem, attr, 0) or 0)
+    record["peak_bytes_per_device"] = (
+        record["argument_size_in_bytes"] + record["output_size_in_bytes"]
+        + record["temp_size_in_bytes"] - record["alias_size_in_bytes"]
+    )
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    record["hlo_flops_per_device"] = flops
+    record["hlo_bytes_per_device"] = bytes_
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    record["collectives"] = coll["ops"]
+    record["wire_bytes_parsed"] = coll["total_wire_bytes"]
+    if keep_hlo:
+        record["hlo_lines"] = len(hlo.splitlines())
+
+    # corrected per-device cost: XLA-CPU HloCostAnalysis counts scan bodies
+    # once and charges gathers for their WHOLE operand (see cost_model.py) —
+    # raw numbers kept above for comparison.
+    corr = cm.cell_cost(cell, n_chips=n_chips, dp=dp_degree(mesh))
+    record["corrected_flops_per_device"] = corr.flops
+    record["corrected_bytes_per_device"] = corr.bytes
+    # wire policy per family: LM lowers through scans (parsed under-counts ->
+    # max with the analytic model); GNN collectives are bf16 in the model but
+    # XLA-CPU *promotes bf16 all-reduce to f32* (TPU does them natively) ->
+    # trust the analytic model; recsys is scan-free and gather-dominated ->
+    # trust the parsed ops.
+    if cell.family == "lm":
+        wire = max(corr.wire_bytes, coll["total_wire_bytes"])
+    elif cell.family == "gnn":
+        wire = corr.wire_bytes
+    else:
+        wire = coll["total_wire_bytes"]
+    record["wire_bytes_per_device"] = wire
+
+    mf = rm.model_flops_global(cell) / n_chips
+    # bytes: LM lowers through scans (raw under-counts -> take max); gnn and
+    # recsys are scan-free but gather-heavy (raw over-counts whole embedding
+    # tables / node arrays per gather -> trust the analytic model)
+    eff_bytes = max(corr.bytes, bytes_) if cell.family == "lm" else corr.bytes
+    roof = rm.make_roofline(max(corr.flops, flops), eff_bytes, wire, mf)
+    record["roofline"] = roof.to_dict()
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    overrides = _parse_overrides(args.override)
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = (
+        [(a, s) for a, s, _ in registry.all_cells()]
+        if args.all else [(args.arch, args.shape)]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = ("multi" if mp else "single") + (f"_{args.tag}" if args.tag else "")
+            name = f"{arch}__{shape}__{tag}"
+            path = os.path.join(args.out, name + ".json")
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp, overrides=overrides)
+                rec["tag"] = args.tag
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                print(f"[OK] {name}: compile={rec['compile_s']}s "
+                      f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                      f"dominant={r['dominant']} "
+                      f"roofline_frac={r['roofline_fraction']:.3f} "
+                      f"peak_mem={rec['peak_bytes_per_device']/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:  # a failing cell is a bug; record + continue
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

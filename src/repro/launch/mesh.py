@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The dry-run forces 512 host-platform devices
+*before* any jax import (see dryrun.py); everything else sees 1 CPU device.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices, found {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py does this)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def dp_degree(mesh) -> int:
+    n = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            n *= mesh.shape[name]
+    return n
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,131 @@
+"""Production training launcher.
+
+Assembles: arch config (registry) + mesh + sharded train_step + compressed
+data pipeline + checkpoint/restart + straggler detection. On real hardware
+each host runs this under `jax.distributed.initialize`; on this container it
+drives reduced configs on the 1-device mesh (the 512-device path is exercised
+by dryrun.py, which shares all of this code through the registry).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gin-tu --steps 20 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.api import activate_mesh
+from repro.ft import StragglerDetector
+from repro.launch.mesh import dp_degree, make_host_mesh, make_production_mesh
+from repro.models import registry
+from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+
+def make_batch_fn(arch: str, cfg, shape, rng):
+    """Host data source feeding the sharded step (synthetic generators)."""
+    fam = registry.family_of(arch)
+    import jax.numpy as jnp
+
+    if fam == "lm":
+        from repro.data.pipeline import CompressedTokenPipeline
+        from repro.data.synthetic import token_stream
+
+        B, S = 4, 64
+        pipe = CompressedTokenPipeline(
+            token_stream(rng, B * (S + 1) * 32, cfg.vocab), B, S)
+        return lambda step: pipe.get_batch(step)
+    if fam == "gnn":
+        from repro.data.synthetic import random_graph
+
+        g = random_graph(rng, 256, 2048, cfg.d_feat, cfg.n_classes)
+        batch = {"feats": jnp.asarray(g["feats"]),
+                 "edge_src": jnp.asarray(g["edge_src"]),
+                 "edge_dst": jnp.asarray(g["edge_dst"]),
+                 "labels": jnp.asarray(g["labels"]),
+                 "label_mask": jnp.ones(256, bool)}
+        return lambda step: batch
+    from repro.data.synthetic import recsys_batch
+
+    def fn(step):
+        b = recsys_batch(rng, cfg.kind, 16, cfg.seq_len, cfg.n_items,
+                         n_mask=cfg.n_mask, n_negatives=cfg.n_negatives,
+                         n_users=cfg.n_users)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config on the 1-device host mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    fam = registry.family_of(args.arch)
+    if args.reduced:
+        mesh = make_host_mesh()
+        cfg = registry.reduced_config(args.arch)
+        if fam == "lm":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, microbatch=1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = list(registry.shapes_of(args.arch))[0]
+        cfg = registry.resolve_config(args.arch, shape, dp_degree=dp_degree(mesh))
+
+    init = registry._family_init(fam)
+    loss_mod = {"lm": "repro.models.lm", "gnn": "repro.models.gnn",
+                "recsys": "repro.models.recsys"}[fam]
+    import importlib
+    loss_fn = importlib.import_module(loss_mod).loss_fn
+
+    rng = np.random.default_rng(0)
+    opt = OptimizerConfig(peak_lr=args.peak_lr, warmup_steps=5,
+                          total_steps=args.steps)
+    with activate_mesh(mesh):
+        params = init(jax.random.PRNGKey(0), cfg)
+        state = init_train_state(params, grad_compression=args.grad_compression)
+        step_fn = jax.jit(make_train_step(
+            lambda p, b: loss_fn(p, b, cfg), opt,
+            grad_compression=args.grad_compression))
+
+        mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+        start = 0
+        if mgr is not None:
+            restored, at = mgr.restore_latest(state)
+            if restored is not None:
+                state = jax.tree.map(jax.numpy.asarray, restored)
+                start = at + 1
+                print(f"[resume] from step {at}")
+
+        det = StragglerDetector()
+        batch_fn = make_batch_fn(args.arch, cfg, None, rng)
+        t0 = time.time()
+        for step in range(start, args.steps):
+            state, metrics = step_fn(state, batch_fn(step))
+            det.heartbeat("host0", step)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:>4} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f}")
+            if mgr is not None and step and step % args.ckpt_every == 0:
+                mgr.save(step, state, async_=True)
+        stragglers = det.stragglers()
+        if mgr is not None:
+            mgr.wait()
+            mgr.save(args.steps - 1, state)
+        dt = (time.time() - t0) / max(args.steps - start, 1)
+        print(f"done: {dt*1e3:.1f} ms/step, stragglers={stragglers}")
+
+
+if __name__ == "__main__":
+    main()

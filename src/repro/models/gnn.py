@@ -1,0 +1,108 @@
+"""GIN (Xu et al., arXiv:1810.00826) — node & graph classification.
+
+Supports raw edge-index batches and VByte-compressed adjacency (the paper's
+posting-list format; decoded on device — DESIGN.md §3). Full-graph, sampled
+mini-batch (neighbor sampler in repro.data.sampler) and batched-small-graph
+regimes share this one implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.nn import layers as nn
+from repro.nn.gnn import MESH_ALL, decode_compressed_edges, gin_layer, gin_layer_init
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 7
+    task: str = "node"  # "node" | "graph"
+    compressed_adjacency: bool = False  # batch carries a VByte gap stream
+    use_kernel_decode: bool = False
+    agg_dtype: str = "f32"  # "bf16" halves aggregation collectives (§Perf)
+    feats_dtype: str = "f32"  # "bf16" halves feature all-gathers (§Perf)
+    extras: dict[str, Any] = field(default_factory=dict)
+
+    def param_count(self) -> int:
+        d, h = self.d_feat, self.d_hidden
+        per = lambda din: din * h + h + h * h + h + 1
+        return per(d) + (self.n_layers - 1) * per(h) + h * self.n_classes + self.n_classes
+
+
+def init_params(key, cfg: GNNConfig):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = {
+        f"gin_{i}": gin_layer_init(keys[i], cfg.d_feat if i == 0 else cfg.d_hidden,
+                                   cfg.d_hidden)
+        for i in range(cfg.n_layers)
+    }
+    head = {
+        **nn.dense_init(keys[-1], cfg.d_hidden, cfg.n_classes),
+        "b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+    return {"layers": layers, "head": head}
+
+
+def _edges_from_batch(batch, cfg: GNNConfig):
+    if cfg.compressed_adjacency:
+        n_edges = batch["edge_valid"].shape[0]  # static edge capacity
+        src, dst = decode_compressed_edges(
+            batch["gap_payload"], batch["gap_counts"], batch["gap_bases"],
+            batch["row_offsets"], n_edges,
+            row_gap_bases=batch.get("row_gap_bases"),
+            use_kernel=cfg.use_kernel_decode,
+        )
+        # decode_compressed_edges returns (neighbor=src-of-message, list-owner=dst)
+        return src, dst, batch.get("edge_valid")
+    return batch["edge_src"], batch["edge_dst"], batch.get("edge_valid")
+
+
+def forward(params, batch, cfg: GNNConfig, *, dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """Returns per-node logits [N, C] (node task) or per-graph [G, C]."""
+    import jax.numpy as jnp
+
+    agg_dtype = jnp.bfloat16 if cfg.agg_dtype == "bf16" else jnp.float32
+    h = batch["feats"].astype(dtype)
+    h = constrain(h, MESH_ALL, None)
+    n_nodes = h.shape[0]
+    src, dst, edge_valid = _edges_from_batch(batch, cfg)
+    for i in range(cfg.n_layers):
+        h = gin_layer(params["layers"][f"gin_{i}"], h, src, dst,
+                      n_nodes=n_nodes, edge_valid=edge_valid, dtype=dtype,
+                      agg_dtype=agg_dtype)
+        h = constrain(h, MESH_ALL, None)
+    if cfg.task == "graph":
+        # sum-pool readout per graph (n_graphs = static label count)
+        h = jax.ops.segment_sum(h, batch["graph_ids"],
+                                num_segments=batch["labels"].shape[0])
+    logits = h @ params["head"]["w"].astype(dtype) + params["head"]["b"].astype(dtype)
+    return logits.astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: GNNConfig, *, dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    logits = forward(params, batch, cfg, dtype=dtype)
+    labels = batch["labels"]
+    mask = batch.get("label_mask")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        nll = jnp.where(mask, nll, 0.0)
+        denom = jnp.maximum(mask.sum(), 1)
+    else:
+        denom = nll.shape[0]
+    loss = nll.sum() / denom
+    acc = jnp.argmax(logits, -1) == labels
+    if mask is not None:
+        acc = jnp.where(mask, acc, False).sum() / denom
+    else:
+        acc = acc.mean()
+    return loss, {"accuracy": acc}

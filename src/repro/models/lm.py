@@ -1,0 +1,415 @@
+"""Transformer LM family: dense + MoE, GQA, RoPE, sliding-window.
+
+One code path covers all five assigned LM archs (olmoe, mixtral, h2o-danube,
+yi, glm4). Layers are stacked on a leading L axis and iterated with
+``lax.scan`` (+ per-layer remat) — keeps HLO size O(1) in depth, which is what
+makes the 512-device dry-run compile fast.
+
+Entry points: ``init_params``, ``loss_fn`` (train), ``prefill`` (inference
+prefill, returns KV cache), ``decode_step`` (single-token serve with KV cache,
+ring-buffer for sliding-window archs).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.distributed.api import constrain
+from repro.nn import attention as attn
+from repro.nn import layers as nn
+from repro.nn import moe as moe_lib
+
+DP = ("pod", "data")  # logical batch axes
+TP = "model"
+
+
+@dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    ep_shard: bool = False  # expert-parallel iff E % model_axis == 0
+    dispatch_groups: int = 1  # set to DP degree by the launcher (local dispatch)
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    rotary_fraction: float = 1.0
+    window: int | None = None  # sliding-window attention (Mistral-style)
+    moe: MoESettings | None = None
+    norm_eps: float = 1e-5
+    remat: bool = True
+    # "full": recompute everything in bwd (min memory, refwd repeats the TP
+    # psums). "save_block_outputs": checkpoint the two psum'd block outputs
+    # per layer — refwd TP collectives vanish (wire x2/3) for ~2·t·d·L bytes
+    # of extra residuals (§Perf mixtral hillclimb iteration 3).
+    remat_policy: str = "full"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    banded_attention: bool = False  # SWA band slicing (perf lever, §Perf)
+    loss_chunk: int = 512
+    microbatch: int = 1  # gradient-accumulation microbatches per train step
+    extras: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def rotary_dim(self) -> int:
+        rd = int(self.dh * self.rotary_fraction)
+        return rd - rd % 2
+
+    def param_count(self) -> int:
+        d, dh, v = self.d_model, self.dh, self.vocab
+        att = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = att + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        att = d * self.dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = self.moe.top_k * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        return self.n_layers * (att + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def _layer_init(key, cfg: LMConfig):
+    d, dh = cfg.d_model, cfg.dh
+    kq, kk, kv, ko, kf = jax.random.split(key, 5)
+    p = {
+        "attn_norm": nn.rmsnorm_init(d),
+        "attn": {
+            "wq": nn.dense_init(kq, d, cfg.n_heads * dh),
+            "wk": nn.dense_init(kk, d, cfg.n_kv_heads * dh),
+            "wv": nn.dense_init(kv, d, cfg.n_kv_heads * dh),
+            "wo": nn.dense_init(ko, cfg.n_heads * dh, d),
+        },
+        "ffn_norm": nn.rmsnorm_init(d),
+    }
+    if cfg.moe:
+        p["moe"] = moe_lib.moe_init(kf, d, cfg.moe.d_ff, cfg.moe.n_experts)
+    else:
+        p["ffn"] = nn.swiglu_ffn_init(kf, d, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: LMConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": nn.embedding_init(ke, cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "final_norm": nn.rmsnorm_init(cfg.d_model),
+        "lm_head": nn.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+
+
+# ----------------------------------------------------------------------------
+# forward (train / prefill)
+# ----------------------------------------------------------------------------
+def _attention_block(layer, x, positions, cfg: LMConfig, dtype):
+    B, S, d = x.shape
+    h = nn.rmsnorm(layer["attn_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+    q = nn.dense(layer["attn"]["wq"], h, dtype=dtype).reshape(B, S, cfg.n_heads, cfg.dh)
+    k = nn.dense(layer["attn"]["wk"], h, dtype=dtype).reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    v = nn.dense(layer["attn"]["wv"], h, dtype=dtype).reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    q = attn.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_dim)
+    k = attn.apply_rope(k, positions, cfg.rope_theta, cfg.rotary_dim)
+    q = constrain(q, DP, None, TP, None)
+    k = constrain(k, DP, None, None, None)
+    o = attn.flash_attention(
+        q, k, v, causal=True, window=cfg.window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        banded=cfg.banded_attention, dtype=dtype,
+    )
+    o = nn.dense(layer["attn"]["wo"], o.reshape(B, S, cfg.n_heads * cfg.dh), dtype=dtype)
+    o = checkpoint_name(o, "attn_out")  # TP psum output (remat_policy)
+    return x + o, (k, v)
+
+
+def _ffn_block(layer, x, cfg: LMConfig, dtype):
+    B, S, d = x.shape
+    h = nn.rmsnorm(layer["ffn_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+    if cfg.moe:
+        out, aux = moe_lib.moe_apply(
+            layer["moe"], h.reshape(B * S, d),
+            top_k=cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor,
+            ep_shard=cfg.moe.ep_shard,
+            dispatch_groups=cfg.moe.dispatch_groups, dtype=dtype,
+        )
+        out = checkpoint_name(out.reshape(B, S, d), "ffn_out")
+        return x + out, aux
+    h = nn.swiglu_ffn(layer["ffn"], h, dtype=dtype)
+    h = constrain(h, DP, None, None)
+    h = checkpoint_name(h, "ffn_out")  # TP psum output (remat_policy)
+    return x + h, {"moe_aux_loss": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+
+
+def forward(params, tokens, cfg: LMConfig, *, collect_cache: bool = False,
+            dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """tokens [B, S] -> (hidden [B, S, d], aux, kv [L, ...] if collect_cache)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = nn.embedding_lookup(params["embed"], tokens, dtype=dtype)
+    x = constrain(x, DP, None, None)
+
+    def layer_fn(x, layer):
+        x, (k, v) = _attention_block(layer, x, positions, cfg, dtype)
+        x, aux = _ffn_block(layer, x, cfg, dtype)
+        x = constrain(x, DP, None, None)
+        ys = (aux, (k, v) if collect_cache else None)
+        return x, ys
+
+    if cfg.remat and cfg.remat_policy == "save_block_outputs":
+        body = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out"),
+        )
+    elif cfg.remat:
+        body = jax.checkpoint(layer_fn)
+    else:
+        body = layer_fn
+    x, (auxs, kvs) = lax.scan(body, x, params["layers"])
+    x = nn.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    return x, aux, kvs
+
+
+def loss_fn(params, batch, cfg: LMConfig, *, dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """batch: {"tokens": [B, S+1] int32}. Mean next-token cross-entropy."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    hidden, aux, _ = forward(params, inputs, cfg, dtype=dtype)
+    B, S, d = hidden.shape
+
+    n_chunks = max(1, S // cfg.loss_chunk) if S % cfg.loss_chunk == 0 else 1
+    hs = hidden.reshape(B, n_chunks, S // n_chunks, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xs):
+        h, t = xs
+        logits = nn.dense(params["lm_head"], h, dtype=dtype)  # [B, c, V]
+        logits = constrain(logits, DP, None, TP)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - true), None
+
+    total, _ = lax.scan(chunk_loss, jnp.float32(0.0), (hs, ts))
+    loss = total / (B * S)
+    if cfg.moe:
+        loss = loss + cfg.moe.aux_loss_coef * aux["moe_aux_loss"]
+    return loss, aux
+
+
+# ----------------------------------------------------------------------------
+# inference: prefill + single-token decode (KV cache)
+# ----------------------------------------------------------------------------
+def cache_size(cfg: LMConfig, seq_len: int) -> int:
+    """Ring buffer of `window` slots for SWA archs, else full length."""
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    sc = cache_size(cfg, seq_len)
+    shape = (cfg.n_layers, batch, sc, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "index": jnp.zeros((), jnp.int32),  # absolute position of next token
+    }
+
+
+def cache_head_axes(cfg: LMConfig, tp: int = 16):
+    """(Hk axis, dh axis) sharding for the KV cache — heads when divisible,
+    else head-dim (GSPMD psums the scores over the contracted shards)."""
+    if cfg.n_kv_heads % tp == 0:
+        return (TP, None)
+    if cfg.dh % 8 == 0 or cfg.dh % 16 == 0:
+        return (None, TP)
+    return (None, None)
+
+
+def prefill(params, tokens, cfg: LMConfig, *, cache_capacity: int | None = None,
+            dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """Run the prompt; return (last-token logits [B, V], cache)."""
+    B, S = tokens.shape
+    hidden, _, (ks, vs) = forward(params, tokens, cfg, collect_cache=True, dtype=dtype)
+    # cache leaves the prefill step sequence-sharded over the model axis
+    # (one reshard per layer at the scan boundary; decode re-shards on load)
+    ks = constrain(ks, None, DP, TP, None, None)  # [L, B, S, Hk, dh]
+    vs = constrain(vs, None, DP, TP, None, None)
+    sc = cache_size(cfg, cache_capacity or S)
+    if sc < S:  # SWA ring: keep last `sc` positions, aligned to slot = pos % sc
+        ks, vs = ks[:, :, S - sc :], vs[:, :, S - sc :]
+        shift = S % sc  # slot of position S-sc is (S-sc)%sc = S%sc
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    elif sc > S:
+        pad = sc - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = nn.dense(params["lm_head"], hidden[:, -1], dtype=dtype)
+    logits = constrain(logits, DP, TP)
+    cache = {"k": ks, "v": vs, "index": jnp.int32(S)}
+    return logits.astype(jnp.float32), cache
+
+
+def prefill_chunked(params, tokens, cfg: LMConfig, *, chunk: int = 4096,
+                    dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """Sarathi-style chunked prefill: the prompt runs through the model in
+    sequence chunks, each attending to the KV cache filled so far. Activation
+    and MoE-dispatch memory scale with `chunk`, not the prompt length —
+    the fix for MoE prefill memory (EXPERIMENTS.md §Dry-run notes). With a
+    sliding window + banded attention, compute also drops to O(S·window).
+
+    Returns (last-token logits [B, V], cache) — same contract as prefill().
+    """
+    B, S = tokens.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    Hk, dh = cfg.n_kv_heads, cfg.dh
+    # SWA fast path: with window <= chunk, chunk ci only needs chunk ci-1's
+    # KV; the carry is one chunk per layer, not the full prompt (and the
+    # final ring cache IS the last window of the prompt).
+    swa_local = bool(cfg.window) and cfg.window <= chunk
+    if swa_local:
+        kv_shape = (cfg.n_layers, B, chunk, Hk, dh)
+    else:
+        kv_shape = (cfg.n_layers, B, S, Hk, dh)
+    ks0 = jnp.zeros(kv_shape, dtype)
+    vs0 = jnp.zeros(kv_shape, dtype)
+
+    def chunk_step(carry, ci):
+        ks, vs = carry
+        offset = ci * chunk
+        toks = lax.dynamic_slice_in_dim(tokens, offset, chunk, axis=1)
+        x = nn.embedding_lookup(params["embed"], toks, dtype=dtype)
+        x = constrain(x, DP, None, None)
+        positions = offset + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        prev_valid = jnp.repeat(ci > 0, chunk)
+
+        def layer_fn(x, xs):
+            layer, kc, vc = xs  # this layer's cache (chunk or full length)
+            h = nn.rmsnorm(layer["attn_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+            q = nn.dense(layer["attn"]["wq"], h, dtype=dtype).reshape(
+                B, chunk, cfg.n_heads, dh)
+            k = nn.dense(layer["attn"]["wk"], h, dtype=dtype).reshape(B, chunk, Hk, dh)
+            v = nn.dense(layer["attn"]["wv"], h, dtype=dtype).reshape(B, chunk, Hk, dh)
+            q = attn.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_dim)
+            k = attn.apply_rope(k, positions, cfg.rope_theta, cfg.rotary_dim)
+            k = k.astype(dtype)
+            v = v.astype(dtype)
+            if swa_local:
+                kv_k = jnp.concatenate([kc, k], axis=1)  # [B, 2*chunk, ...]
+                kv_v = jnp.concatenate([vc, v], axis=1)
+                o = attn.flash_attention(
+                    q, kv_k, kv_v, causal=True, window=cfg.window,
+                    q_chunk=min(cfg.q_chunk, chunk), kv_chunk=cfg.kv_chunk,
+                    q_offset=offset, kv_offset=offset - chunk,
+                    kv_valid=jnp.concatenate(
+                        [prev_valid, jnp.ones((chunk,), bool)]),
+                    dtype=dtype)
+                kc, vc = k, v  # next chunk sees this one
+            else:
+                kc = lax.dynamic_update_slice_in_dim(kc, k, offset, axis=1)
+                vc = lax.dynamic_update_slice_in_dim(vc, v, offset, axis=1)
+                o = attn.flash_attention(
+                    q, kc, vc, causal=True, window=cfg.window,
+                    q_chunk=min(cfg.q_chunk, chunk), kv_chunk=cfg.kv_chunk,
+                    banded=cfg.banded_attention, q_offset=offset, dtype=dtype)
+            o = nn.dense(layer["attn"]["wo"],
+                         o.reshape(B, chunk, cfg.n_heads * dh), dtype=dtype)
+            x = x + o
+            x, _ = _ffn_block(layer, x, cfg, dtype)
+            x = constrain(x, DP, None, None)
+            return x, (kc, vc)
+
+        x, (ks, vs) = lax.scan(layer_fn, x, (params["layers"], ks, vs))
+        x = nn.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+        logits = nn.dense(params["lm_head"], x[:, -1], dtype=dtype)
+        logits = constrain(logits, DP, TP)
+        return (ks, vs), logits
+
+    (ks, vs), logits_all = lax.scan(chunk_step, (ks0, vs0),
+                                    jnp.arange(nc, dtype=jnp.int32))
+    logits = logits_all[-1]
+    sc = cache_size(cfg, S)
+    if swa_local:  # carry holds the last chunk = positions [S-chunk, S)
+        ks, vs = ks[:, :, chunk - sc:], vs[:, :, chunk - sc:]
+        shift = S % sc  # align slot = pos % sc (ring convention)
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    elif sc < S:  # SWA ring conversion (same as prefill())
+        ks, vs = ks[:, :, S - sc:], vs[:, :, S - sc:]
+        shift = S % sc
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    ks = constrain(ks, None, DP, TP, None, None)
+    vs = constrain(vs, None, DP, TP, None, None)
+    return logits.astype(jnp.float32), {"k": ks, "v": vs, "index": jnp.int32(S)}
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig, *, dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """One serve step: tokens [B] -> (logits [B, V], updated cache)."""
+    B = tokens.shape[0]
+    d, dh, Hk = cfg.d_model, cfg.dh, cfg.n_kv_heads
+    pos = cache["index"]  # absolute position of the new token
+    sc = cache["k"].shape[2]
+    slot = pos % sc if cfg.window else pos
+    n_valid = jnp.minimum(pos + 1, sc)
+    valid = jnp.arange(sc, dtype=jnp.int32) < n_valid
+
+    x = nn.embedding_lookup(params["embed"], tokens, dtype=dtype)  # [B, d]
+    x = constrain(x, DP, None)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+
+    def layer_fn(x, xs):
+        layer, kc, vc = xs
+        h = nn.rmsnorm(layer["attn_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+        q = nn.dense(layer["attn"]["wq"], h, dtype=dtype).reshape(B, 1, cfg.n_heads, dh)
+        k = nn.dense(layer["attn"]["wk"], h, dtype=dtype).reshape(B, 1, Hk, dh)
+        v = nn.dense(layer["attn"]["wv"], h, dtype=dtype).reshape(B, 1, Hk, dh)
+        q = attn.apply_rope(q, posv, cfg.rope_theta, cfg.rotary_dim)[:, 0]
+        k = attn.apply_rope(k, posv, cfg.rope_theta, cfg.rotary_dim)[:, 0]
+        kc = attn.cache_update(kc, k, slot)
+        vc = attn.cache_update(vc, v[:, 0], slot)
+        o = attn.decode_attention(q, kc, vc, valid, dtype=dtype)
+        x = x + nn.dense(layer["attn"]["wo"], o.reshape(B, cfg.n_heads * dh), dtype=dtype)
+        x2, _ = _ffn_block(layer, x[:, None], cfg, dtype)
+        return x2[:, 0], (kc, vc)
+
+    x, (ks, vs) = lax.scan(layer_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = nn.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps, dtype=dtype)
+    logits = nn.dense(params["lm_head"], x, dtype=dtype)
+    logits = constrain(logits, DP, TP)
+    new_cache = {"k": ks, "v": vs, "index": pos + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,487 @@
+"""Architecture × shape registry: configs, abstract inputs, step fns, shardings.
+
+Every dry-run cell, smoke test and benchmark goes through here, so shapes and
+shardings are defined in exactly one place. ``build_cell(arch, shape)``
+returns everything needed to ``jax.jit(fn, in_shardings=...).lower(*args)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, ShapeDef
+from repro.distributed import sharding as shd
+from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+ARCH_IDS = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "yi-6b": "repro.configs.yi_6b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "gin-tu": "repro.configs.gin_tu",
+    "sasrec": "repro.configs.sasrec",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "bert4rec": "repro.configs.bert4rec",
+    "bst": "repro.configs.bst",
+}
+
+
+def _module(arch_id: str):
+    return importlib.import_module(ARCH_IDS[arch_id])
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def family_of(arch_id: str) -> str:
+    return _module(arch_id).FAMILY
+
+
+def skips_of(arch_id: str) -> dict[str, str]:
+    return dict(_module(arch_id).SKIPS)
+
+
+def shapes_of(arch_id: str) -> dict[str, ShapeDef]:
+    fam = family_of(arch_id)
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[fam]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name, skip_reason|None) for the 40 cells."""
+    for arch in list_archs():
+        skips = skips_of(arch)
+        for shape in shapes_of(arch):
+            reason = skips.get(shape)
+            if reason is None or include_skipped:
+                yield arch, shape, reason
+
+
+# ----------------------------------------------------------------------------
+# config resolution (per-shape overrides; mesh-dependent knobs)
+# ----------------------------------------------------------------------------
+def resolve_config(arch_id: str, shape_name: str, *, dp_degree: int = 1,
+                   overrides: dict[str, Any] | None = None):
+    mod = _module(arch_id)
+    cfg = mod.CONFIG
+    fam = mod.FAMILY
+    shape = shapes_of(arch_id)[shape_name]
+    if fam == "gnn":
+        cfg = dataclasses.replace(
+            cfg,
+            d_feat=shape.dims["d_feat"],
+            n_classes=shape.dims["n_classes"],
+            task=shape.dims.get("task", "node"),
+            compressed_adjacency=shape.dims.get("compressed_adjacency", False),
+        )
+    if fam == "lm" and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=max(dp_degree, 1))
+        )
+    if overrides:
+        # nested override for moe settings
+        moe_over = {k[4:]: v for k, v in overrides.items() if k.startswith("moe.")}
+        flat_over = {k: v for k, v in overrides.items() if "." not in k}
+        if moe_over and getattr(cfg, "moe", None) is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+        if flat_over:
+            cfg = dataclasses.replace(cfg, **flat_over)
+    return cfg
+
+
+# ----------------------------------------------------------------------------
+# abstract params / state
+# ----------------------------------------------------------------------------
+def _family_init(fam: str):
+    if fam == "lm":
+        from repro.models import lm
+
+        return lm.init_params
+    if fam == "gnn":
+        from repro.models import gnn
+
+        return gnn.init_params
+    from repro.models import recsys
+
+    return recsys.init_params
+
+
+def abstract_params(cfg, fam: str, *, dtype=None):
+    init = _family_init(fam)
+    out = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:
+        out = jax.tree.map(
+            lambda s: SDS(s.shape, dtype) if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            out,
+        )
+    return out
+
+
+def abstract_train_state(cfg, fam: str):
+    init = _family_init(fam)
+    return jax.eval_shape(
+        lambda: init_train_state(init(jax.random.PRNGKey(0), cfg))
+    )
+
+
+# ----------------------------------------------------------------------------
+# batch builders: (ShapeDtypeStruct tree, PartitionSpec tree)
+# ----------------------------------------------------------------------------
+DP, TP, ALL = shd.DP, shd.TP, shd.ALL
+
+
+def _split(entries: dict[str, tuple]):
+    batch = {k: SDS(s, d) for k, (s, d, _) in entries.items()}
+    specs = {k: p for k, (s, d, p) in entries.items()}
+    return batch, specs
+
+
+def _lm_batch(cfg, shape: ShapeDef):
+    B = shape.dims["global_batch"]
+    S = shape.dims["seq_len"]
+    if shape.step == "train":
+        return _split({"tokens": ((B, S + 1), jnp.int32, P(DP, None))})
+    if shape.step == "prefill":
+        return _split({"tokens": ((B, S), jnp.int32, P(DP, None))})
+    if shape.step == "decode":
+        bspec = P(DP) if B >= 16 else P(None)
+        return _split({"tokens": ((B,), jnp.int32, bspec)})
+    raise ValueError(shape.step)
+
+
+def _lm_cache(cfg, shape: ShapeDef, mesh_dp: int):
+    from repro.models import lm
+
+    B = shape.dims["global_batch"]
+    S = shape.dims["seq_len"]
+    sc = lm.cache_size(cfg, S)
+    kv = SDS((cfg.n_layers, B, sc, cfg.n_kv_heads, cfg.dh), jnp.bfloat16)
+    spec = shd.lm_cache_spec(cfg, B, mesh_dp)
+    cache = {"k": kv, "v": kv, "index": SDS((), jnp.int32)}
+    specs = {"k": spec, "v": spec, "index": P()}
+    return cache, specs
+
+
+def _gnn_batch(cfg, shape: ShapeDef):
+    d = shape.dims
+    N, E, F = d["n_nodes"], d["n_edges"], d["d_feat"]
+    shard = d.get("task", "node") == "node"  # molecule batch: replicate (tiny)
+    nspec = P(ALL, None) if shard else P(None, None)
+    espec = P(ALL) if shard else P(None)
+    fdtype = jnp.bfloat16 if cfg.feats_dtype == "bf16" else jnp.float32
+    entries = {
+        "feats": ((N, F), fdtype, nspec),
+        "labels": ((N if cfg.task == "node" else d["batch_graphs"],), jnp.int32,
+                   espec if cfg.task == "node" else P(None)),
+        "edge_valid": ((E,), jnp.bool_, espec),
+    }
+    if cfg.task == "node":
+        entries["label_mask"] = ((N,), jnp.bool_, espec)
+    else:
+        entries["graph_ids"] = ((N,), jnp.int32, P(None))
+    if cfg.compressed_adjacency:
+        stride = d["payload_stride"]
+        nb = -(-E // 128)
+        nb = -(-nb // 512) * 512  # block-shardable
+        entries.update({
+            "gap_payload": ((nb, stride), jnp.uint8, P(ALL, None)),
+            "gap_counts": ((nb,), jnp.int32, P(ALL)),
+            "gap_bases": ((nb,), jnp.uint32, P(ALL)),
+            "row_gap_bases": ((N,), jnp.uint32, P(None)),  # skip bases: replicated
+            "row_offsets": ((N + 1,), jnp.int32, P(None)),
+        })
+    else:
+        entries.update({
+            "edge_src": ((E,), jnp.int32, espec),
+            "edge_dst": ((E,), jnp.int32, espec),
+        })
+    return _split(entries)
+
+
+def _recsys_batch(cfg, shape: ShapeDef):
+    d = shape.dims
+    B = d["batch"]
+    L = cfg.seq_len
+    k = cfg.kind
+    if shape.step == "train":
+        if k == "sasrec":
+            return _split({
+                "hist": ((B, L + 1), jnp.int32, P(DP, None)),
+                "neg": ((B, L), jnp.int32, P(DP, None)),
+            })
+        if k == "bert4rec":
+            return _split({
+                "hist": ((B, L), jnp.int32, P(DP, None)),
+                "mask_pos": ((B, cfg.n_mask), jnp.int32, P(DP, None)),
+                "targets": ((B, cfg.n_mask), jnp.int32, P(DP, None)),
+                "negatives": ((cfg.n_negatives,), jnp.int32, P(None)),
+            })
+        if k == "bst":
+            return _split({
+                "hist": ((B, L), jnp.int32, P(DP, None)),
+                "target": ((B,), jnp.int32, P(DP)),
+                "label": ((B,), jnp.int32, P(DP)),
+            })
+        if k == "two_tower":
+            return _split({
+                "user_id": ((B,), jnp.int32, P(DP)),
+                "hist": ((B, L), jnp.int32, P(DP, None)),
+                "item_id": ((B,), jnp.int32, P(DP)),
+            })
+    if shape.step == "serve":
+        C = cfg.serve_candidates
+        if k == "bst":
+            return _split({
+                "hist": ((B, L), jnp.int32, P(DP, None)),
+                "target": ((B,), jnp.int32, P(DP)),
+            })
+        if k == "two_tower":
+            return _split({
+                "user_id": ((B,), jnp.int32, P(DP)),
+                "hist": ((B, L), jnp.int32, P(DP, None)),
+                "cands": ((C,), jnp.int32, P(None)),
+            })
+        return _split({
+            "hist": ((B, L), jnp.int32, P(DP, None)),
+            "cands": ((B, C), jnp.int32, P(DP, None)),
+        })
+    if shape.step == "retrieval":
+        nc = d["n_candidates"]
+        nb = nc // 128
+        stride = d["payload_stride"]
+        entries = {
+            "cand_payload": ((nb, stride), jnp.uint8, P(ALL, None)),
+            "cand_counts": ((nb,), jnp.int32, P(ALL)),
+            "cand_bases": ((nb,), jnp.uint32, P(ALL)),
+            "hist": ((1, L), jnp.int32, P(None, None)),
+        }
+        if k == "two_tower":
+            entries["user_id"] = ((1,), jnp.int32, P(None))
+        return _split(entries)
+    raise ValueError((cfg.kind, shape.step))
+
+
+# ----------------------------------------------------------------------------
+# cells
+# ----------------------------------------------------------------------------
+@dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeDef
+    family: str
+    cfg: Any
+    fn: Callable  # positional-args step function
+    args: tuple  # abstract args (ShapeDtypeStruct trees)
+    arg_specs: tuple  # PartitionSpec trees matching args
+    donate: tuple[int, ...] = ()
+    assembly: dict = None  # step-assembly options (e.g. zero1) for the cost model
+
+    def in_shardings(self, mesh: Mesh):
+        return shd.to_named(mesh, self.arg_specs)
+
+
+DEFAULT_OPT = OptimizerConfig()
+
+
+# overrides that configure the *step assembly*, not the model config
+_STEP_OVERRIDES = ("zero1", "prefill_impl", "prefill_chunk", "grad_bf16")
+
+
+def build_cell(arch_id: str, shape_name: str, *, mesh_dp: int = 32,
+               overrides: dict[str, Any] | None = None,
+               opt_cfg: OptimizerConfig = DEFAULT_OPT) -> Cell:
+    fam = family_of(arch_id)
+    shape = shapes_of(arch_id)[shape_name]
+    overrides = dict(overrides or {})
+    step_over = {k: overrides.pop(k) for k in _STEP_OVERRIDES if k in overrides}
+    cfg = resolve_config(arch_id, shape_name, dp_degree=mesh_dp, overrides=overrides)
+
+    if fam == "lm":
+        from repro.models import lm
+
+        batch, bspec = _lm_batch(cfg, shape)
+        if shape.step == "train":
+            from repro.distributed.api import constrain
+
+            zero1 = bool(step_over.get("zero1", False))
+            state = abstract_train_state(cfg, fam)
+            aparams = jax.eval_shape(
+                lambda: _family_init(fam)(jax.random.PRNGKey(0), cfg))
+            master_spec = shd.tree_specs(aparams, shd.lm_param_spec(cfg, zero1=zero1))
+            sspec = {"params": master_spec,
+                     "opt": {"m": master_spec, "v": master_spec, "step": P()}}
+            compute_cast = grad_transform = None
+            if zero1:
+                compute_spec = shd.tree_specs(aparams, shd.lm_param_spec(cfg))
+
+                def compute_cast(params):  # one bf16 all-gather per step
+                    return jax.tree.map(
+                        lambda p, s: constrain(p.astype(jnp.bfloat16), *tuple(s)),
+                        params, compute_spec,
+                        is_leaf=lambda x: hasattr(x, "dtype"))
+
+                def grad_transform(g):  # bf16 reduce-scatter to master layout
+                    return jax.tree.map(
+                        lambda x, s: constrain(x.astype(jnp.bfloat16), *tuple(s)),
+                        g, master_spec, is_leaf=lambda x: hasattr(x, "dtype"))
+
+            step = make_train_step(
+                functools.partial(lm.loss_fn, cfg=cfg), opt_cfg,
+                microbatch=cfg.microbatch,
+                compute_cast=compute_cast, grad_transform=grad_transform,
+            )
+            return Cell(arch_id, shape, fam, cfg, step, (state, batch),
+                        (sspec, bspec), donate=(0,), assembly={"zero1": zero1})
+        params = abstract_params(cfg, fam, dtype=jnp.bfloat16)
+        pspec = shd.tree_specs(params, shd.lm_param_spec(cfg))
+        if shape.step == "prefill":
+            if step_over.get("prefill_impl") == "chunked":
+                fn = functools.partial(
+                    _lm_prefill_chunked_fn, cfg=cfg,
+                    chunk=int(step_over.get("prefill_chunk", 4096)))
+            else:
+                fn = functools.partial(_lm_prefill_fn, cfg=cfg,
+                                       seq=shape.dims["seq_len"])
+            return Cell(arch_id, shape, fam, cfg, fn, (params, batch["tokens"]),
+                        (pspec, bspec["tokens"]))
+        cache, cspec = _lm_cache(cfg, shape, mesh_dp)
+        fn = functools.partial(_lm_decode_fn, cfg=cfg)
+        return Cell(arch_id, shape, fam, cfg, fn,
+                    (params, cache, batch["tokens"]),
+                    (pspec, cspec, bspec["tokens"]), donate=(1,))
+
+    if fam == "gnn":
+        from repro.models import gnn
+
+        batch, bspec = _gnn_batch(cfg, shape)
+        state = abstract_train_state(cfg, fam)
+        sspec = shd.state_specs(
+            jax.eval_shape(lambda: _family_init(fam)(jax.random.PRNGKey(0), cfg)),
+            shd.gnn_param_spec(cfg),
+        )
+        step = make_train_step(functools.partial(gnn.loss_fn, cfg=cfg), opt_cfg)
+        return Cell(arch_id, shape, fam, cfg, step, (state, batch),
+                    (sspec, bspec), donate=(0,))
+
+    from repro.models import recsys
+
+    batch, bspec = _recsys_batch(cfg, shape)
+    if shape.step == "train":
+        state = abstract_train_state(cfg, fam)
+        sspec = shd.state_specs(
+            jax.eval_shape(lambda: _family_init(fam)(jax.random.PRNGKey(0), cfg)),
+            shd.recsys_param_spec(cfg),
+        )
+        aparams = jax.eval_shape(
+            lambda: _family_init(fam)(jax.random.PRNGKey(0), cfg))
+        zero1 = bool(step_over.get("zero1", False))
+        compute_cast = grad_transform = None
+        if zero1:
+            # ZeRO-1 for embedding tables: master/moments DP-sharded, bf16
+            # compute copy + bf16 grad reduce-scatter (a post-hoc grad cast
+            # alone cannot change the wire format of GSPMD's backward
+            # all-reduce — measured, see EXPERIMENTS §Perf; the resharding
+            # constrain is what puts bf16 on the wire)
+            base_rule = shd.recsys_param_spec(cfg)
+            master_rule = lambda p, l: shd.zero1_extend(base_rule(p, l), l)
+            master_spec = shd.tree_specs(aparams, master_rule)
+            compute_spec = shd.tree_specs(aparams, base_rule)
+            sspec = {"params": master_spec,
+                     "opt": {"m": master_spec, "v": master_spec, "step": P()}}
+            from repro.distributed.api import constrain
+
+            def compute_cast(params):
+                return jax.tree.map(
+                    lambda p, s: constrain(p.astype(jnp.bfloat16), *tuple(s)),
+                    params, compute_spec)
+
+            def grad_transform(g):
+                return jax.tree.map(
+                    lambda x, s: constrain(x.astype(jnp.bfloat16), *tuple(s)),
+                    g, master_spec)
+
+        step = make_train_step(functools.partial(recsys.loss_fn, cfg=cfg), opt_cfg,
+                               compute_cast=compute_cast,
+                               grad_transform=grad_transform)
+        return Cell(arch_id, shape, fam, cfg, step, (state, batch),
+                    (sspec, bspec), donate=(0,),
+                    assembly={"zero1": zero1})
+    params = abstract_params(cfg, fam, dtype=jnp.bfloat16)
+    pspec = shd.tree_specs(params, shd.recsys_param_spec(cfg, serving=True))
+    if shape.step == "serve":
+        fn = functools.partial(_recsys_serve_fn, cfg=cfg)
+    else:
+        fn = functools.partial(_recsys_retrieval_fn, cfg=cfg)
+    return Cell(arch_id, shape, fam, cfg, fn, (params, batch), (pspec, bspec))
+
+
+# top-level partials (picklable, stable names in HLO)
+def _lm_prefill_fn(params, tokens, *, cfg, seq):
+    from repro.models import lm
+
+    return lm.prefill(params, tokens, cfg, cache_capacity=seq)
+
+
+def _lm_prefill_chunked_fn(params, tokens, *, cfg, chunk):
+    from repro.models import lm
+
+    return lm.prefill_chunked(params, tokens, cfg, chunk=chunk)
+
+
+def _lm_decode_fn(params, cache, tokens, *, cfg):
+    from repro.models import lm
+
+    return lm.decode_step(params, cache, tokens, cfg)
+
+
+def _recsys_serve_fn(params, batch, *, cfg):
+    from repro.models import recsys
+
+    return recsys.serve_scores(params, batch, cfg)
+
+
+def _recsys_retrieval_fn(params, batch, *, cfg):
+    from repro.models import recsys
+
+    return recsys.retrieval_scores_compressed(params, batch, cfg)
+
+
+# ----------------------------------------------------------------------------
+# reduced configs for CPU smoke tests
+# ----------------------------------------------------------------------------
+def reduced_config(arch_id: str):
+    """Tiny same-family config: a few layers/experts, small dims/tables."""
+    mod = _module(arch_id)
+    cfg, fam = mod.CONFIG, mod.FAMILY
+    if fam == "lm":
+        moe = cfg.moe and dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), d_ff=64, capacity_factor=2.0,
+        )
+        return dataclasses.replace(
+            cfg, n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)), head_dim=16,
+            d_ff=128, vocab=512, moe=moe, window=cfg.window and 16,
+            q_chunk=16, kv_chunk=16, loss_chunk=8,
+        )
+    if fam == "gnn":
+        return dataclasses.replace(cfg, n_layers=2, d_hidden=16,
+                                   d_feat=12, n_classes=3)
+    return dataclasses.replace(
+        cfg, n_items=1000, n_users=max(cfg.n_users and 1000, 0),
+        embed_dim=16, id_dim=16, seq_len=min(cfg.seq_len, 12),
+        n_blocks=1, n_heads=2 if cfg.kind != "sasrec" else 1,
+        mlp_dims=(32, 16) if cfg.mlp_dims else (),
+        n_mask=min(cfg.n_mask, 3) if cfg.n_mask else 0, n_negatives=16,
+        serve_candidates=32,
+    )

@@ -1,0 +1,177 @@
+"""Attention: GQA + RoPE + sliding-window, flash-style chunked softmax.
+
+``flash_attention`` is a pure-JAX online-softmax attention (lax.scan over KV
+chunks inside a scan over Q chunks) — O(S·chunk) activation memory, which is
+what lets prefill_32k compile at 32k context without an attention kernel.
+With ``banded=True`` and a sliding window, each Q chunk only visits the
+KV chunks inside its band via dynamic_slice (compute drops from O(S²) to
+O(S·window) — the SWA hillclimb lever).
+
+``decode_attention`` is the single-token KV-cache path used by serve_step;
+sliding-window archs use a ring-buffer cache of size ``window`` (Mistral's
+rolling buffer), which is what makes long_500k O(window) memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import DEFAULT_COMPUTE_DTYPE, accum_dtype
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    inv_freq = rope_frequencies(rd, theta)  # [rd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, rd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, rd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2 :]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([rotated, x[..., rd:].astype(jnp.float32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Flash-style training / prefill attention
+# ----------------------------------------------------------------------------
+def _band_mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, Hk, D]
+    v: jax.Array,  # [B, Skv, Hk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    banded: bool = False,
+    q_offset: int = 0,
+    kv_offset: int = 0,  # absolute position of k[0] (chunked-prefill windows)
+    kv_valid: jax.Array | None = None,  # bool [Skv]: which kv slots exist
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jax.Array:
+    """Online-softmax chunked attention. Returns [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = H // Hk
+    scale = D ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq = Sq // q_chunk
+
+    # [B, Hk, G, S, D] layout: grouped query heads over shared KV heads
+    qg = (q.astype(dtype) * scale).reshape(B, Sq, Hk, G, D).transpose(0, 2, 3, 1, 4)
+    kg = k.astype(dtype).transpose(0, 2, 1, 3)  # [B, Hk, Skv, D]
+    vg = v.astype(dtype).transpose(0, 2, 1, 3)
+
+    if banded and window is not None:
+        # each q chunk reads a static-length KV band via dynamic_slice
+        band = min(Skv, ((window + q_chunk + kv_chunk - 1) // kv_chunk) * kv_chunk)
+    else:
+        band = Skv
+    nk = band // kv_chunk
+
+    def q_step(qi):
+        q_start = qi * q_chunk
+        q_pos = q_offset + q_start + jnp.arange(q_chunk)
+        qc = lax.dynamic_slice_in_dim(qg, q_start, q_chunk, axis=3)  # [B,Hk,G,qc,D]
+
+        if band < Skv:
+            band_start = jnp.clip(q_offset + q_start + q_chunk - band - kv_offset,
+                                  0, Skv - band)
+        else:
+            band_start = 0
+        kband = lax.dynamic_slice_in_dim(kg, band_start, band, axis=2)
+        vband = lax.dynamic_slice_in_dim(vg, band_start, band, axis=2)
+        valid_band = (lax.dynamic_slice_in_dim(kv_valid, band_start, band)
+                      if kv_valid is not None else None)
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            k_start = ki * kv_chunk
+            kc = lax.dynamic_slice_in_dim(kband, k_start, kv_chunk, axis=2)
+            vc = lax.dynamic_slice_in_dim(vband, k_start, kv_chunk, axis=2)
+            k_pos = kv_offset + band_start + k_start + jnp.arange(kv_chunk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc,
+                           preferred_element_type=accum_dtype())
+            mask = _band_mask(q_pos, k_pos, causal=causal, window=window)
+            if valid_band is not None:
+                mask &= lax.dynamic_slice_in_dim(valid_band, k_start, kv_chunk)[None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(dtype), vc,
+                            preferred_element_type=accum_dtype())
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((B, Hk, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, acc0), jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+
+    if nq == 1:
+        out = q_step(jnp.int32(0))[:, :, :, None]  # [B,Hk,G,1(qchunks),qc,D]
+        out = out.reshape(B, Hk, G, Sq, D)
+    else:
+        outs = lax.map(q_step, jnp.arange(nq))  # [nq,B,Hk,G,qc,D]
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hk, G, Sq, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+
+
+# ----------------------------------------------------------------------------
+# Single-token decode with KV cache
+# ----------------------------------------------------------------------------
+def decode_attention(
+    q: jax.Array,  # [B, H, D] — current token's queries (RoPE already applied)
+    k_cache: jax.Array,  # [B, Sc, Hk, D]
+    v_cache: jax.Array,  # [B, Sc, Hk, D]
+    valid: jax.Array,  # bool [Sc] or [B, Sc] — which cache slots participate
+    *,
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jax.Array:
+    B, H, D = q.shape
+    Sc, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qg = (q.astype(dtype) * D ** -0.5).reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(dtype),
+                   preferred_element_type=accum_dtype())
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(dtype),
+                     preferred_element_type=accum_dtype())
+    return out.reshape(B, H, D).astype(dtype)
+
+
+def cache_update(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write new [B, Hk, D] into cache [B, Sc, Hk, D] at time slot (ring-safe)."""
+    return lax.dynamic_update_slice_in_dim(cache, new[:, None], slot, axis=1)

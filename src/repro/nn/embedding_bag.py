@@ -1,0 +1,66 @@
+"""EmbeddingBag built from gather + segment-sum.
+
+JAX has no native EmbeddingBag (taxonomy §B.6/B.11) — this IS part of the
+system: ragged multi-hot id bags are looked up with ``jnp.take`` and reduced
+by ``jax.ops.segment_sum`` / ``segment_max``. The id lists themselves are
+stored VByte-compressed (sorted ids → deltas) and decoded on device by the
+paper's kernel before hitting this op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DEFAULT_COMPUTE_DTYPE
+
+
+def embedding_bag(
+    table: jax.Array,  # [V, d]
+    ids: jax.Array,  # [N] int32 flat id stream
+    segment_ids: jax.Array,  # [N] int32 bag index per id (sorted)
+    n_bags: int,
+    *,
+    mode: str = "sum",
+    weights: jax.Array | None = None,  # [N] per-sample weights
+    valid: jax.Array | None = None,  # [N] bool mask for padded ids
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jax.Array:
+    """Returns [n_bags, d]."""
+    vecs = jnp.take(table.astype(dtype), ids, axis=0)  # [N, d]
+    if weights is not None:
+        vecs = vecs * weights[:, None].astype(dtype)
+    if valid is not None:
+        vecs = jnp.where(valid[:, None], vecs, 0)
+    if mode == "sum":
+        return jax.ops.segment_sum(vecs, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(vecs, segment_ids, num_segments=n_bags)
+        ones = jnp.ones_like(ids, dtype) if valid is None else valid.astype(dtype)
+        cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1)[:, None]
+    if mode == "max":
+        if valid is not None:
+            vecs = jnp.where(valid[:, None], vecs, -jnp.inf)
+        out = jax.ops.segment_max(vecs, segment_ids, num_segments=n_bags)
+        return jnp.where(jnp.isfinite(out), out, 0)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def bag_from_padded(
+    table: jax.Array,  # [V, d]
+    padded_ids: jax.Array,  # [B, L] int32, padded with pad_id
+    *,
+    pad_id: int = 0,
+    mode: str = "sum",
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jax.Array:
+    """EmbeddingBag over fixed-width padded bags (the dense-batch fast path)."""
+    B, L = padded_ids.shape
+    vecs = jnp.take(table.astype(dtype), padded_ids, axis=0)  # [B, L, d]
+    valid = (padded_ids != pad_id)[..., None]
+    vecs = jnp.where(valid, vecs, 0)
+    if mode == "sum":
+        return vecs.sum(axis=1)
+    if mode == "mean":
+        return vecs.sum(axis=1) / jnp.maximum(valid.sum(axis=1), 1)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,109 @@
+"""Minimal functional layer library (no flax — params are plain pytrees).
+
+Every layer is an ``init(key, ...) -> params`` plus a pure ``apply`` function.
+Compute dtype is bf16 by default (TPU target); params are stored f32
+(master copy) and cast at use — see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+# f32 MXU accumulation on TPU. XLA-CPU's DotThunk cannot *execute*
+# bf16×bf16→f32 (lowering is fine — the 512-device dry-run keeps f32
+# accumulation in the HLO), so CPU execution falls back to the default
+# accumulator. Evaluated lazily to avoid initializing the backend at import.
+_ACCUM = "unset"
+
+
+def accum_dtype():
+    global _ACCUM
+    if _ACCUM == "unset":
+        _ACCUM = jnp.float32 if jax.default_backend() == "tpu" else None
+    return _ACCUM
+
+
+def truncated_normal_init(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, stddev: float | None = None):
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(in_dim)
+    return {"w": truncated_normal_init(key, (in_dim, out_dim), stddev)}
+
+
+def dense(params, x, *, dtype=DEFAULT_COMPUTE_DTYPE):
+    return x.astype(dtype) @ params["w"].astype(dtype)
+
+
+def embedding_init(key, vocab: int, dim: int, *, stddev: float = 0.02):
+    return {"emb": truncated_normal_init(key, (vocab, dim), stddev)}
+
+
+def embedding_lookup(params, ids, *, dtype=DEFAULT_COMPUTE_DTYPE):
+    return jnp.take(params["emb"].astype(dtype), ids, axis=0)
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-5, dtype=DEFAULT_COMPUTE_DTYPE):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"]).astype(dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, *, eps: float = 1e-6, dtype=DEFAULT_COMPUTE_DTYPE):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    normed = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"] + params["bias"]).astype(dtype)
+
+
+def swiglu_ffn_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff),
+        "up": dense_init(k2, d_model, d_ff),
+        "down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu_ffn(params, x, *, dtype=DEFAULT_COMPUTE_DTYPE):
+    g = dense(params["gate"], x, dtype=dtype)
+    u = dense(params["up"], x, dtype=dtype)
+    return dense(params["down"], jax.nn.silu(g) * u, dtype=dtype)
+
+
+def mlp_init(key, dims: tuple[int, ...]):
+    """Plain MLP tower (recsys): dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer_{i}": {
+            **dense_init(keys[i], dims[i], dims[i + 1]),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(params, x, *, act=jax.nn.relu, final_act: bool = False,
+        dtype=DEFAULT_COMPUTE_DTYPE):
+    n = len(params)
+    for i in range(n):
+        p = params[f"layer_{i}"]
+        x = x.astype(dtype) @ p["w"].astype(dtype) + p["b"].astype(dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

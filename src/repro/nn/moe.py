@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based sort dispatch.
+
+Dropless-ish GShard-style dispatch without the [tokens, E, C] one-hot tensor:
+per-(token, k) expert slots are ranked with a stable argsort, written into an
+[E, C, d] buffer, processed with stacked per-expert einsums, and combined
+with router gates. Tokens past expert capacity are dropped (capacity factor
+1.25 default).
+
+**Local dispatch**: ranking/capacity run inside ``dispatch_groups`` vmapped
+groups (set to the DP degree by the launcher). Under GSPMD this keeps the
+argsort/scatter shard-local — a global sort would otherwise lower to a
+distributed sorting network across the whole batch (production MoE systems
+all dispatch per DP shard for exactly this reason). The group axis is
+batch-sharded; the expert axis is sharded when ``ep_shard`` (EP), otherwise
+d_ff is sharded inside each expert (TP). The token→expert resharding between
+the two layouts is where GSPMD emits the all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.api import constrain
+
+from .layers import DEFAULT_COMPUTE_DTYPE, accum_dtype, truncated_normal_init
+
+DP = ("pod", "data")
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    se = d_model ** -0.5
+    sf = d_ff ** -0.5
+    return {
+        "router": {"w": truncated_normal_init(kr, (d_model, n_experts), se)},
+        "gate": {"w": truncated_normal_init(kg, (n_experts, d_model, d_ff), se)},
+        "up": {"w": truncated_normal_init(ku, (n_experts, d_model, d_ff), se)},
+        "down": {"w": truncated_normal_init(kd, (n_experts, d_ff, d_model), sf)},
+    }
+
+
+def _positions_within_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each dispatch row within its expert (token order), via argsort."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    seg_start = lax.cummax(jnp.where(is_start, idx, 0))
+    pos_sorted = idx - seg_start
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def _dispatch_group(x, top_e, top_p, *, n_experts: int, capacity: int, dtype):
+    """One dispatch group: x [Tg, d] -> (buf [E*C, d], dst [Tg*K], gates)."""
+    Tg, d = x.shape
+    K = top_e.shape[-1]
+    E, C = n_experts, capacity
+    flat_e = top_e.reshape(-1).astype(jnp.int32)
+    pos = _positions_within_expert(flat_e, E)
+    keep = pos < C
+    dst = jnp.where(keep, flat_e * C + pos, E * C)  # E*C = drop bin
+
+    token_of_row = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    inv = jnp.full((E * C,), Tg, jnp.int32).at[dst].set(token_of_row, mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = jnp.take(x_pad, jnp.minimum(inv, Tg), axis=0).astype(dtype)  # [E*C, d]
+    gates = jnp.where(keep, top_p.reshape(-1), 0.0).astype(dtype)
+    return buf, dst, gates, keep
+
+
+def moe_apply(
+    params,
+    x: jax.Array,  # [T, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    renormalize: bool = True,  # mixtral/olmoe renormalize top-k probs
+    ep_shard: bool = False,  # expert-parallel (E divides model axis)
+    dispatch_groups: int = 1,  # set to DP degree: keeps ranking shard-local
+    model_axis: str = "model",
+    dtype=DEFAULT_COMPUTE_DTYPE,
+):
+    """Returns (out [T, d], aux_metrics dict with load-balance loss)."""
+    T, d = x.shape
+    E = params["gate"]["w"].shape[0]
+    K = top_k
+    G = dispatch_groups if T % dispatch_groups == 0 else 1
+    Tg = T // G
+    C = max(1, int(Tg * K * capacity_factor / E))
+
+    logits = x.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    top_p, top_e = lax.top_k(probs, K)  # [T, K]
+    if renormalize:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    xg = x.reshape(G, Tg, d)
+    eg = top_e.reshape(G, Tg, K)
+    pg = top_p.reshape(G, Tg, K)
+    buf, dst, gates, keep = jax.vmap(
+        lambda a, b, c: _dispatch_group(a, b, c, n_experts=E, capacity=C, dtype=dtype)
+    )(xg, eg, pg)
+
+    buf = buf.reshape(G, E, C, d)
+    ep = model_axis if ep_shard else None
+    buf = constrain(buf, DP, ep, None, None)
+
+    g = jnp.einsum("gecd,edf->gecf", buf, params["gate"]["w"].astype(dtype),
+                   preferred_element_type=accum_dtype()).astype(dtype)
+    u = jnp.einsum("gecd,edf->gecf", buf, params["up"]["w"].astype(dtype),
+                   preferred_element_type=accum_dtype()).astype(dtype)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, DP, ep, None, None if ep_shard else model_axis)
+    y = jnp.einsum("gecf,efd->gecd", h, params["down"]["w"].astype(dtype),
+                   preferred_element_type=accum_dtype()).astype(dtype)
+    y = constrain(y, DP, ep, None, None)
+    y = y.reshape(G, E * C, d)
+
+    # combine: gather each dispatch row's expert output, weight by its gate
+    def combine(y_g, dst_g, gates_g):
+        y_pad = jnp.concatenate([y_g, jnp.zeros((1, d), y_g.dtype)], axis=0)
+        rows = jnp.take(y_pad, jnp.minimum(dst_g, E * C), axis=0)  # [Tg*K, d]
+        return (rows * gates_g[:, None]).reshape(Tg, K, d).sum(axis=1)
+
+    out = jax.vmap(combine)(y, dst, gates).reshape(T, d)
+    out = constrain(out, DP, None)
+
+    # switch-style load-balance loss (global, cheap)
+    flat_e = top_e.reshape(-1)
+    frac = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)
+    mean_p = probs.mean(axis=0)
+    aux_loss = E * jnp.sum(frac * mean_p)
+    dropped = 1.0 - keep.mean()
+    return out, {"moe_aux_loss": aux_loss, "moe_drop_frac": dropped}

@@ -1,0 +1,3 @@
+from . import grad_compress, optimizer, train_state  # noqa: F401
+from .optimizer import OptimizerConfig  # noqa: F401
+from .train_state import init_train_state, make_train_step  # noqa: F401

@@ -1,0 +1,108 @@
+"""TrainState + train_step factory shared by all model families."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .grad_compress import compress_grads_with_ef, init_ef_state
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def init_train_state(params, *, grad_compression: bool = False) -> dict:
+    state = {"params": params, "opt": init_opt_state(params)}
+    if grad_compression:
+        state["ef"] = init_ef_state(params)
+    return state
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                    *, grad_compression: bool = False, donate: bool = True,
+                    microbatch: int = 1, compute_cast: Callable | None = None,
+                    grad_transform: Callable | None = None):
+    """loss_fn(params, batch) -> (loss, aux). Returns jit-able step fn.
+
+    ``microbatch > 1`` splits the batch leading dim and accumulates grads in
+    f32 over a lax.scan (gradient accumulation) — activation memory drops
+    ~linearly while keeping the same global-batch semantics.
+
+    ZeRO-1 hooks (see distributed.sharding.zero1_extend):
+      * ``compute_cast(master)`` builds the bf16 compute copy constrained to
+        the compute sharding — applied ONCE per step, outside the microbatch
+        scan, so GSPMD emits one weight all-gather per step;
+      * ``grad_transform(g)`` casts grads bf16 + constrains them to the
+        master (DP-sharded) layout — applied per microbatch so the
+        accumulator lives sharded (reduce-scatter on the wire).
+    """
+
+    def _grads(params, batch):
+        if microbatch <= 1:
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            if grad_transform:
+                g = grad_transform(g)
+            return (l, aux), g
+
+        def split(x):
+            b = x.shape[0]
+            if b % microbatch:
+                raise ValueError(f"batch dim {b} not divisible by microbatch")
+            return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+        leaves, treedef = jax.tree.flatten(batch)
+        # shared side inputs (e.g. a negatives table) are closed over, not split
+        shared = [x.ndim == 1 and x.shape[0] % microbatch != 0 for x in leaves]
+        xs = tuple(split(x) for x, sh in zip(leaves, shared) if not sh)
+
+        def body(carry, xs_leaves):
+            gsum, lsum, auxsum = carry
+            it = iter(xs_leaves)
+            full = jax.tree.unflatten(
+                treedef, [x if sh else next(it) for x, sh in zip(leaves, shared)]
+            )
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, full)
+            if grad_transform:
+                g = grad_transform(g)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            auxsum = jax.tree.map(lambda a, b: a + b, auxsum, aux)
+            return (gsum, lsum + l, auxsum), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_transform:  # accumulator adopts the (sharded) master layout
+            g0 = jax.tree.map(lambda z: z.astype(jnp.float32), grad_transform(g0))
+        l0 = jnp.float32(0.0)
+        aux0 = jax.tree.map(lambda s: jnp.zeros((), jnp.float32),
+                            jax.eval_shape(lambda: loss_fn(params, batch)[1]))
+        (gsum, lsum, auxsum), _ = jax.lax.scan(body, (g0, l0, aux0), xs)
+        inv = 1.0 / microbatch
+        return (lsum * inv, jax.tree.map(lambda a: a * inv, auxsum)), jax.tree.map(
+            lambda g: g * inv, gsum)
+
+    def train_step(state: dict, batch: Any) -> tuple[dict, dict]:
+        compute_params = (compute_cast(state["params"]) if compute_cast
+                          else state["params"])
+        (loss, aux), grads = _grads(compute_params, batch)
+        new_state = dict(state)
+        if grad_compression:
+            grads, new_ef = compress_grads_with_ef(grads, state["ef"])
+            new_state["ef"] = new_ef
+        params, opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = {"loss": loss, **opt_metrics,
+                   **{k: jnp.asarray(v) for k, v in aux.items()}}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, *, in_shardings=None, out_shardings=None):
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    return jax.jit(train_step, donate_argnums=(0,), **kw)

@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_valid_stream(rng, n, max_bits=32):
+    """Random values spanning all byte-lengths 1..5."""
+    bits = rng.integers(1, max_bits + 1, size=n)
+    vals = rng.integers(0, 2 ** 63, size=n, dtype=np.uint64) % (1 << bits.astype(np.uint64))
+    return vals.astype(np.uint64)

@@ -1,0 +1,95 @@
+"""Unit tests for the measurement tooling: HLO collective parser, cost model,
+roofline math, dry-run (subprocess smoke on the smallest cell)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.distributed.hlo_analysis import collective_stats
+from repro.launch import roofline_math as rm
+
+
+HLO_SAMPLE = """
+  %ar = f32[2048,4096]{1,0} all-reduce(f32[2048,4096]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[128,1024]{1,0} all-gather(bf16[128,64]{1,0} %y), replica_groups=[8,16]<=[128], dimensions={1}
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,1,2,3,5,6,7,8}}, dimensions={0}
+  %cp = u32[10]{0} collective-permute(u32[10]{0} %w), source_target_pairs={{0,1}}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %p, f32[4,4]{1,0} %q), replica_groups={{0,1}}
+  %ags = bf16[64]{0} all-gather-start(bf16[32]{0} %h), replica_groups={{0,1}}
+  %agd = bf16[64]{0} all-gather-done(bf16[64]{0} %ags)
+"""
+
+
+def test_collective_parser_kinds_and_sizes():
+    st = collective_stats(HLO_SAMPLE)
+    ops = st["ops"]
+    assert ops["all-reduce"]["count"] == 1
+    assert ops["all-reduce"]["result_bytes"] == 2048 * 4096 * 4
+    # ring factor 2*(n-1)/n with n=4
+    assert ops["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 3 / 4 * 2048 * 4096 * 4)
+    assert ops["all-gather"]["count"] == 2  # plain + -start (done skipped)
+    assert ops["reduce-scatter"]["wire_bytes"] == pytest.approx(7 * 64 * 4)
+    assert ops["all-to-all"]["result_bytes"] == 2 * 16 * 4  # tuple result
+    assert ops["collective-permute"]["wire_bytes"] == 40
+    assert st["total_wire_bytes"] > 0
+
+
+def test_iota_replica_groups():
+    st = collective_stats(HLO_SAMPLE)
+    # the all-gather with iota groups [8,16] has group size 16
+    ag = st["ops"]["all-gather"]
+    assert ag["wire_bytes"] == pytest.approx(
+        (15 / 16) * 128 * 1024 * 2 + (1 / 2) * 64 * 2)
+
+
+def test_roofline_terms_and_dominance():
+    r = rm.make_roofline(flops=197e12, bytes_=819e9 * 2, wire_bytes=50e9 * 3,
+                         model_flops_per_device=98.5e12)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(3.0)
+    assert r.dominant == "collective"
+    assert r.useful_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(98.5e12 / (3.0 * 197e12))
+
+
+def test_cost_model_zero1_reduces_opt_state_traffic():
+    from repro.configs.mixtral_8x7b import CONFIG
+    from repro.configs.shapes import LM_SHAPES
+    from repro.launch import cost_model as cm
+
+    base = cm.lm_cost(CONFIG, LM_SHAPES["train_4k"], n_chips=256, dp=16)
+    z1 = cm.lm_cost(CONFIG, LM_SHAPES["train_4k"], n_chips=256, dp=16,
+                    assembly={"zero1": True})
+    assert z1.flops < base.flops  # sharded AdamW
+    assert base.flops > 0 and base.bytes > 0 and base.wire_bytes > 0
+
+
+def test_cost_model_decode_memory_bound():
+    from repro.configs.glm4_9b import CONFIG
+    from repro.configs.shapes import LM_SHAPES
+    from repro.launch import cost_model as cm
+    from repro.launch.roofline_math import make_roofline
+
+    c = cm.lm_cost(CONFIG, LM_SHAPES["decode_32k"], n_chips=256, dp=16)
+    r = make_roofline(c.flops, c.bytes, c.wire_bytes, c.flops)
+    assert r.dominant in ("memory", "collective")  # decode is never compute-bound
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_smallest_cell(tmp_path):
+    """End-to-end dry-run smoke: 512 fake devices, lower+compile+analyze."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gin-tu",
+         "--shape", "molecule", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), timeout=480)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path / "gin-tu__molecule__single.json"))
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["hlo_flops_per_device"] > 0

@@ -1,0 +1,93 @@
+"""Flash attention vs naive oracle; RoPE; decode attention; cache update."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (apply_rope, cache_update, decode_attention,
+                                flash_attention)
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, S, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, S, Hk, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * D ** -0.5
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= i >= j
+    if window is not None:
+        m &= (i - j) < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D)
+
+
+def _qkv(key, B=2, S=128, H=4, Hk=2, D=16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (B, S, H, D)),
+            jax.random.normal(k2, (B, S, Hk, D)),
+            jax.random.normal(k3, (B, S, Hk, D)))
+
+
+@pytest.mark.parametrize("window,banded", [(None, False), (32, False), (32, True),
+                                           (128, True)])
+@pytest.mark.parametrize("qc,kc", [(32, 32), (64, 16), (128, 128)])
+def test_flash_matches_naive(window, banded, qc, kc):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    out = flash_attention(q, k, v, causal=True, window=window, q_chunk=qc,
+                          kv_chunk=kc, banded=banded, dtype=jnp.float32)
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_mha_no_gqa():
+    q, k, v = _qkv(jax.random.PRNGKey(1), H=4, Hk=4)
+    out = flash_attention(q, k, v, q_chunk=32, kv_chunk=32, dtype=jnp.float32)
+    ref = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(  # rotation: per-pair norms preserved
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on n-m
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.array([[m]]))
+        kn = apply_rope(k, jnp.array([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(3, 5) - dot_at(10, 12)) < 1e-4
+
+
+def test_rope_partial_rotary():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 2, 16))
+    y = apply_rope(x, jnp.arange(4)[None], rotary_dim=8)
+    np.testing.assert_allclose(np.asarray(x[..., 8:]), np.asarray(y[..., 8:]),
+                               atol=1e-6)  # non-rotary dims untouched
+
+
+def test_decode_attention_matches_full():
+    B, S, H, Hk, D = 2, 16, 4, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(6), B, S, H, Hk, D)
+    full = naive_attention(q, k, v, causal=True)
+    out = decode_attention(q[:, -1], k, v, jnp.arange(S) < S, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -1]), atol=2e-5)
+
+
+def test_cache_update_slot():
+    cache = jnp.zeros((2, 8, 2, 4))
+    new = jnp.ones((2, 2, 4))
+    out = cache_update(cache, new, jnp.int32(3))
+    assert float(out[:, 3].sum()) == 2 * 2 * 4
+    assert float(out.sum()) == 2 * 2 * 4

@@ -1,0 +1,60 @@
+"""Property tests on the vectorized decoder's internal invariants — the
+arithmetic identities that replace the paper's lookup tables (DESIGN.md §2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.vbyte import encode as venc
+from repro.core.vbyte.masked import (byte_contributions, continuation_bits,
+                                     in_integer_positions)
+
+u32_lists = st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                     min_size=1, max_size=100)
+
+
+@given(u32_lists)
+@settings(max_examples=50, deadline=None)
+def test_positions_match_byte_lengths(values):
+    """pos must count 0,1,2,... within each encoded integer."""
+    vals = np.array(values, np.uint64)
+    stream = venc.encode_stream(vals)
+    lengths = venc.vbyte_lengths(vals)
+    expected = np.concatenate([np.arange(l) for l in lengths])
+    cont = continuation_bits(jnp.asarray(stream)[None])
+    pos = np.asarray(in_integer_positions(cont))[0]
+    np.testing.assert_array_equal(pos, expected)
+
+
+@given(u32_lists)
+@settings(max_examples=50, deadline=None)
+def test_contributions_sum_to_value(values):
+    """Σ contributions over each integer's bytes == the integer (mod 2^32)."""
+    vals = np.array(values, np.uint64)
+    stream = jnp.asarray(venc.encode_stream(vals))
+    cont = continuation_bits(stream[None])
+    pos = in_integer_positions(cont)
+    contrib = np.asarray(byte_contributions(stream[None], pos))[0].astype(np.uint64)
+    end = 1 - np.asarray(cont)[0]
+    out_idx = np.cumsum(end) - end
+    sums = np.zeros(len(vals), np.uint64)
+    np.add.at(sums, out_idx, contrib)
+    np.testing.assert_array_equal(sums & 0xFFFFFFFF, vals)
+
+
+@given(u32_lists)
+@settings(max_examples=50, deadline=None)
+def test_terminator_count_equals_integer_count(values):
+    vals = np.array(values, np.uint64)
+    stream = venc.encode_stream(vals)
+    cont = np.asarray(continuation_bits(jnp.asarray(stream)))
+    assert int((1 - cont).sum()) == len(vals)
+
+
+def test_wraparound_identity():
+    """uint32 wraparound in the 16-bit-split MXU path == modular arithmetic."""
+    vals = np.array([2**32 - 1, 2**31, 0x89ABCDEF], np.uint64)
+    from repro.core.compressed_array import CompressedIntArray
+
+    arr = CompressedIntArray.encode(vals, block_size=8)
+    assert np.array_equal(arr.decode(use_kernel=True).astype(np.uint64), vals)
