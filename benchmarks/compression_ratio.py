@@ -1,7 +1,10 @@
 """Compression-rate table: bits/int by posting-list length group (paper §V:
 'this value ranges from 8 to slightly less than 16'), plus blocked-layout
 metadata overhead and the framework integrations (tokens, adjacency,
-candidate lists)."""
+candidate lists). Both on-device formats are reported side by side: classic
+VByte (7 payload bits/byte) and Stream VByte (whole payload bytes + 2-bit
+control codes) — the latter trades a small bits/int penalty for scan-free
+decoding (docs/formats.md)."""
 from __future__ import annotations
 
 import numpy as np
@@ -17,6 +20,7 @@ def run(groups=(10, 12, 14, 16, 18, 20, 22), lists_per_group: int = 4):
     rows = []
     for k in groups:
         bits, ratios, overheads = [], [], []
+        svb_bits, svb_ratios = [], []
         for _ in range(lists_per_group):
             length = int(rng.integers(1 << k, 1 << (k + 1)))
             length = min(length, 1 << 21)
@@ -26,8 +30,14 @@ def run(groups=(10, 12, 14, 16, 18, 20, 22), lists_per_group: int = 4):
             bits.append(arr.bits_per_int)
             ratios.append(arr.compression_ratio)
             overheads.append(arr.enc.device_bytes / max(arr.enc.payload_bytes, 1) - 1)
+            svb = CompressedIntArray.encode(ids, format="streamvbyte",
+                                            differential=True)
+            svb_bits.append(svb.bits_per_int)
+            svb_ratios.append(svb.compression_ratio)
         rows.append({"group_K": k, "bits_per_int": round(float(np.mean(bits)), 2),
+                     "svb_bits_per_int": round(float(np.mean(svb_bits)), 2),
                      "ratio_vs_u32": round(float(np.mean(ratios)), 2),
+                     "svb_ratio_vs_u32": round(float(np.mean(svb_ratios)), 2),
                      "block_overhead": round(float(np.mean(overheads)), 3)})
     return rows
 

@@ -6,8 +6,14 @@ K ⇒ smaller gaps ⇒ better compression ⇒ faster decode). Decoders compared:
   scalar   — Algorithm 1 as a jitted lax.while_loop (byte-serial, the
              conventional-decoder baseline of §V)
   masked   — the vectorized Masked-VByte adaptation (jitted, XLA-CPU SIMD)
-  kernel   — the Pallas kernel in interpret mode (correctness path on CPU;
-             its wall time is NOT meaningful — reported for completeness)
+  svb      — the vectorized Stream-VByte decoder on the same values encoded
+             in the control-stream format (no continuation-bit recurrence)
+  kernel   — the Pallas kernels in interpret mode (correctness path on CPU;
+             their wall time is NOT meaningful — reported for completeness)
+
+Both on-device formats are reported side by side per group: bits/int and
+decode rate, so the compression-vs-throughput trade (docs/formats.md) is
+visible in one table.
 
 The paper reports 2-4× scalar→vectorized on x86; the same branch-free
 restructuring yields the speedup here through XLA-CPU vectorization.
@@ -50,30 +56,41 @@ def run(groups=(14, 16, 18, 20), n_ints: int = 1 << 18, reps: int = 8,
         scale = universe / (1 << k)  # rescale gaps to the group's statistics
         gaps = venc.delta_encode(ids)
         gaps = np.maximum((gaps.astype(np.float64) * scale / gaps.mean()), 1).astype(np.uint64)
-        arr = CompressedIntArray.encode(np.cumsum(gaps), differential=True)
-        bits = arr.bits_per_int
+        values = np.cumsum(gaps)
+        arr = CompressedIntArray.encode(values, differential=True)
+        svb_arr = CompressedIntArray.encode(values, format="streamvbyte",
+                                            differential=True)
 
         ops = arr.device_operands()
+        svb_ops = svb_arr.device_operands()
         n = arr.n
 
-        # vectorized masked decode (jitted)
+        # vectorized masked decode (jitted), both formats
         from repro.core.vbyte.masked import decode_blocked
+        from repro.core.vbyte.stream_masked import decode_blocked as svb_decode
         t_masked, _ = _bench(
             lambda: decode_blocked(**ops, block_size=128, differential=True),
             reps=reps, warmup=3)
+        t_svb, _ = _bench(
+            lambda: svb_decode(**svb_ops, block_size=128, differential=True),
+            reps=reps, warmup=3)
 
         # scalar Algorithm-1 (jitted while_loop) on the same data as a stream
-        stream = venc.encode_stream(venc.delta_encode(np.cumsum(gaps)))
+        stream = venc.encode_stream(venc.delta_encode(values))
         sdata = jnp.asarray(np.concatenate([stream, np.zeros(8, np.uint8)]))
         scalar = jax.jit(lambda d: vref.decode_stream_scalar_jax(
             d, n, differential=True, nbytes=len(stream))[0])
         t_scalar, _ = _bench(scalar, sdata, reps=max(2, reps // 2), warmup=2)
 
         rows.append({
-            "group_K": k, "bits_per_int": round(bits, 2),
+            "group_K": k,
+            "bits_per_int": round(arr.bits_per_int, 2),
+            "svb_bits_per_int": round(svb_arr.bits_per_int, 2),
             "scalar_mis": round(n / t_scalar / 1e6, 1),
             "masked_mis": round(n / t_masked / 1e6, 1),
+            "svb_mis": round(n / t_svb / 1e6, 1),
             "speedup": round(t_scalar / t_masked, 2),
+            "svb_speedup": round(t_scalar / t_svb, 2),
         })
     return rows
 

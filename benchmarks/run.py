@@ -34,7 +34,13 @@ def bench_kernel_check():
             b = vbyte_decode_blocked_ref(**ops, block_size=128, differential=diff)
             assert np.array_equal(np.asarray(a), np.asarray(b))
             checked += 1
-    return {"kernel_vs_oracle_cases": checked, "all_equal": True}
+            svb = CompressedIntArray.encode(vals, format="streamvbyte",
+                                            differential=diff)
+            assert np.array_equal(svb.decode(use_kernel=True),
+                                  svb.decode_scalar_oracle())
+            checked += 1
+    return {"kernel_vs_oracle_cases": checked, "all_equal": True,
+            "formats": ["vbyte", "streamvbyte"]}
 
 
 def main():
@@ -59,8 +65,10 @@ def main():
         rows = decode_speed.run(n_ints=n)
         for r in rows:
             print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
+                  f"(svb {r['svb_bits_per_int']:>5}) "
                   f"scalar={r['scalar_mis']:>7} mis  masked={r['masked_mis']:>8} mis "
-                  f" speedup={r['speedup']}x")
+                  f" svb={r['svb_mis']:>8} mis  speedup={r['speedup']}x "
+                  f"(svb {r['svb_speedup']}x)")
         results["decode_speed"] = rows
         print("== buffered vs full-stream decode (paper §V) ==")
         b = decode_speed.run_buffered(n_ints=n)
@@ -77,7 +85,9 @@ def main():
         rows = compression_ratio.run()
         for r in rows:
             print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
-                  f"ratio={r['ratio_vs_u32']}x overhead={r['block_overhead']}")
+                  f"(svb {r['svb_bits_per_int']:>5}) "
+                  f"ratio={r['ratio_vs_u32']}x (svb {r['svb_ratio_vs_u32']}x) "
+                  f"overhead={r['block_overhead']}")
         results["compression_ratio"] = rows
         integ = compression_ratio.run_integrations()
         print(f"== framework id-stream compression ==\n  {integ}")

@@ -3,13 +3,38 @@
 ``CompressedIntArray`` is the framework's first-class compressed-id type
 (DESIGN.md §3): posting lists, token streams, adjacency lists, user
 histories and retrieval candidate lists are all stored in this form and
-decoded on device by the vectorized Masked-VByte decoder (or its Pallas
-kernel, see ``repro.kernels.vbyte_decode``).
+decoded on device by a vectorized decoder or its Pallas kernel
+(``repro.kernels.vbyte_decode``).
+
+Two on-device formats are supported, selected with ``format=``:
+
+* ``"vbyte"`` (default) — the classic format of Plaisance, Kurz & Lemire:
+  7 payload bits per byte, the high bit a continuation flag. Densest for
+  small gaps (1 byte spans values < 2^7) and the paper's own format, but
+  the decoder must recover integer boundaries from the continuation bits
+  (``repro.core.vbyte.masked``). Blocked operands:
+  ``payload [n_blocks, stride]`` + ``counts`` + ``bases``.
+
+* ``"streamvbyte"`` — Stream VByte (Lemire, Kurz & Rupp): 2-bit length
+  codes live in a separate control stream and every data byte carries a
+  full 8 payload bits, so the decoder skips the continuation-bit scan
+  entirely (``repro.core.vbyte.stream_masked``,
+  ``repro.kernels.vbyte_decode.stream_kernel``). Costs 2 control bits per
+  integer and rounds each integer to whole bytes (1 byte spans values
+  < 2^8, ≤4 bytes total), so compression is within ~2 bits/int of VByte on
+  typical gap distributions — and decode is faster because byte→integer
+  routing comes straight from the control stream.
+
+Rule of thumb (see docs/formats.md): pick ``"vbyte"`` when bits/int is the
+binding constraint, ``"streamvbyte"`` when decode throughput is. Both
+formats share the blocked SPMD layout (``block_size`` integers per block,
+per-block ``counts``/``bases``) so every block decodes independently, and
+both support fused differential (delta) decoding of sorted id lists.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Union
 
 import numpy as np
 
@@ -18,13 +43,17 @@ import jax.numpy as jnp
 from .vbyte import encode as venc
 from .vbyte import masked as vmasked
 from .vbyte import ref as vref
+from .vbyte import stream_masked as svb_masked
+from .vbyte import stream_vbyte as svb
+
+FORMATS = ("vbyte", "streamvbyte")
 
 
 @dataclass(frozen=True)
 class CompressedIntArray:
-    """A VByte-compressed, block-decodable array of uint32."""
+    """A compressed, block-decodable array of uint32 (VByte or Stream VByte)."""
 
-    enc: venc.BlockedEncoding
+    enc: Union[venc.BlockedEncoding, svb.StreamVByteEncoding]
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -32,20 +61,38 @@ class CompressedIntArray:
         cls,
         values: np.ndarray,
         *,
+        format: str = "vbyte",
         block_size: int = 128,
         differential: bool = False,
         stride_multiple: int = 128,
     ) -> "CompressedIntArray":
-        return cls(
-            venc.encode_blocked(
+        if format == "vbyte":
+            enc = venc.encode_blocked(
                 values,
                 block_size=block_size,
                 differential=differential,
                 stride_multiple=stride_multiple,
             )
-        )
+        elif format == "streamvbyte":
+            enc = svb.encode_blocked(
+                values,
+                block_size=block_size,
+                differential=differential,
+                stride_multiple=stride_multiple,
+            )
+        else:
+            raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
+        return cls(enc)
 
     # -- metadata ----------------------------------------------------------
+    @property
+    def format(self) -> str:
+        return (
+            "streamvbyte"
+            if isinstance(self.enc, svb.StreamVByteEncoding)
+            else "vbyte"
+        )
+
     @property
     def n(self) -> int:
         return self.enc.n
@@ -65,7 +112,14 @@ class CompressedIntArray:
 
     # -- device form --------------------------------------------------------
     def device_operands(self) -> dict[str, Any]:
-        """Arrays consumed by the decoders / the Pallas kernel."""
+        """Arrays consumed by the decoders / the Pallas kernels."""
+        if self.format == "streamvbyte":
+            return {
+                "control": jnp.asarray(self.enc.control),
+                "data": jnp.asarray(self.enc.data),
+                "counts": jnp.asarray(self.enc.counts),
+                "bases": jnp.asarray(self.enc.bases),
+            }
         return {
             "payload": jnp.asarray(self.enc.payload),
             "counts": jnp.asarray(self.enc.counts),
@@ -75,30 +129,42 @@ class CompressedIntArray:
     # -- decoding ------------------------------------------------------------
     def decode(self, *, use_kernel: bool = False) -> np.ndarray:
         """Decode to uint32[n] (host-visible)."""
+        kw = dict(
+            block_size=self.enc.block_size, differential=self.enc.differential
+        )
         if use_kernel:
             from repro.kernels.vbyte_decode import ops as kops
 
-            out = kops.vbyte_decode_blocked(
-                **self.device_operands(),
-                block_size=self.enc.block_size,
-                differential=self.enc.differential,
+            fn = (
+                kops.stream_vbyte_decode_blocked
+                if self.format == "streamvbyte"
+                else kops.vbyte_decode_blocked
             )
+            out = fn(**self.device_operands(), **kw)
+        elif self.format == "streamvbyte":
+            out = svb_masked.decode_blocked(**self.device_operands(), **kw)
         else:
-            out = vmasked.decode_blocked(
-                **self.device_operands(),
-                block_size=self.enc.block_size,
-                differential=self.enc.differential,
-            )
+            out = vmasked.decode_blocked(**self.device_operands(), **kw)
         flat = np.asarray(out).reshape(-1)[: self.n]
         return flat.astype(np.uint32)
 
     def decode_scalar_oracle(self) -> np.ndarray:
-        """Algorithm-1 decode (slow; tests/benchmarks only)."""
-        out = vref.decode_blocked_scalar(
-            self.enc.payload,
-            self.enc.counts,
-            self.enc.bases,
-            self.enc.block_size,
-            differential=self.enc.differential,
-        )
+        """Byte-at-a-time reference decode (slow; tests/benchmarks only)."""
+        if self.format == "streamvbyte":
+            out = svb.decode_blocked_scalar(
+                self.enc.control,
+                self.enc.data,
+                self.enc.counts,
+                self.enc.bases,
+                self.enc.block_size,
+                differential=self.enc.differential,
+            )
+        else:
+            out = vref.decode_blocked_scalar(
+                self.enc.payload,
+                self.enc.counts,
+                self.enc.bases,
+                self.enc.block_size,
+                differential=self.enc.differential,
+            )
         return out.reshape(-1)[: self.n].astype(np.uint32)

@@ -1,4 +1,4 @@
-from . import encode, masked, ref  # noqa: F401
+from . import encode, masked, ref, stream_masked, stream_vbyte  # noqa: F401
 from .encode import (  # noqa: F401
     BlockedEncoding,
     delta_decode,
@@ -6,4 +6,8 @@ from .encode import (  # noqa: F401
     encode_blocked,
     encode_stream,
     vbyte_lengths,
+)
+from .stream_vbyte import (  # noqa: F401
+    StreamVByteEncoding,
+    svb_lengths,
 )

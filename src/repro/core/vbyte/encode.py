@@ -114,25 +114,18 @@ class BlockedEncoding:
         return 8.0 * self.payload_bytes / max(self.n, 1)
 
 
-def encode_blocked(
-    values: np.ndarray,
-    *,
-    block_size: int = 128,
-    differential: bool = False,
-    stride_multiple: int = 128,
-    min_stride: int | None = None,
-) -> BlockedEncoding:
-    """Encode ``values`` into the blocked layout.
+def blocked_metadata(
+    v: np.ndarray, *, n_blocks: int, block_size: int, differential: bool
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared blocked-layout metadata: ``(encoded_values, bases, counts)``.
 
-    With ``differential=True`` the *gaps* are encoded and each block's
-    ``bases[b]`` holds the absolute value preceding the block, so
+    With ``differential=True`` the *gaps* are what get encoded and each
+    block's ``bases[b]`` holds the absolute value preceding the block, so
     ``decode(block b) = bases[b] + cumsum(gaps in block b)`` — every block is
-    independent (the TPU analogue of inverted-index skip blocks).
+    independent (the TPU analogue of inverted-index skip blocks). Used by
+    both the VByte and Stream-VByte encoders.
     """
-    v = np.asarray(values, dtype=np.uint64).ravel()
     n = int(v.size)
-    n_blocks = max(1, -(-n // block_size))
-
     if differential:
         enc_values = delta_encode(v)
         # carry-in for block b = last absolute value of block b-1
@@ -144,15 +137,31 @@ def encode_blocked(
         enc_values = v
         bases = np.zeros(n_blocks, dtype=np.uint32)
 
-    data, lengths = _byte_matrix(enc_values)
-
     counts = np.full(n_blocks, block_size, dtype=np.int32)
     if n:
         counts[-1] = n - (n_blocks - 1) * block_size
     else:
         counts[0] = 0
+    return enc_values, bases, counts
 
-    # bytes per block, stride = max rounded up for aligned VMEM tiles
+
+def scatter_blocked_payload(
+    data: np.ndarray,
+    lengths: np.ndarray,
+    *,
+    n_blocks: int,
+    block_size: int,
+    max_bytes: int,
+    stride_multiple: int,
+    min_stride: int | None,
+) -> np.ndarray:
+    """Scatter per-integer byte rows into a dense ``[n_blocks, stride]`` grid.
+
+    ``data`` is ``uint8[n, max_bytes]`` (row i holds integer i's encoded
+    bytes, first ``lengths[i]`` valid). The stride is the max block byte
+    count rounded up for aligned VMEM tiles. Shared by both formats.
+    """
+    n = data.shape[0]
     pad_n = n_blocks * block_size
     lengths_p = np.zeros(pad_n, dtype=np.int64)
     lengths_p[:n] = lengths
@@ -160,14 +169,14 @@ def encode_blocked(
     stride = int(block_bytes.max(initial=1))
     stride = max(stride, min_stride or 0, 1)
     stride = -(-stride // stride_multiple) * stride_multiple
-    if stride > block_size * MAX_BYTES_PER_INT:
-        stride = block_size * MAX_BYTES_PER_INT
+    if stride > block_size * max_bytes:
+        stride = block_size * max_bytes
 
     payload = np.zeros((n_blocks, stride), dtype=np.uint8)
     if n:
         # destination offset of every encoded byte, all vectorized
-        within = np.arange(MAX_BYTES_PER_INT)[None, :]
-        keep = within < lengths[:, None]  # [n, 5]
+        within = np.arange(max_bytes)[None, :]
+        keep = within < lengths[:, None]  # [n, max_bytes]
         block_id = np.arange(n) // block_size
         # byte offset of each integer inside its block:
         # exclusive cumsum of lengths, reset at every block boundary
@@ -176,8 +185,37 @@ def encode_blocked(
             np.concatenate([[0], np.cumsum(block_bytes)[:-1]]), block_size
         )[:n]
         off_in_block = csum - block_start
-        dst = block_id[:, None] * stride + off_in_block[:, None] + within  # [n, 5]
+        dst = block_id[:, None] * stride + off_in_block[:, None] + within
         payload.reshape(-1)[dst[keep]] = data[keep]
+    return payload
+
+
+def encode_blocked(
+    values: np.ndarray,
+    *,
+    block_size: int = 128,
+    differential: bool = False,
+    stride_multiple: int = 128,
+    min_stride: int | None = None,
+) -> BlockedEncoding:
+    """Encode ``values`` into the blocked layout (see blocked_metadata)."""
+    v = np.asarray(values, dtype=np.uint64).ravel()
+    n = int(v.size)
+    n_blocks = max(1, -(-n // block_size))
+
+    enc_values, bases, counts = blocked_metadata(
+        v, n_blocks=n_blocks, block_size=block_size, differential=differential
+    )
+    data, lengths = _byte_matrix(enc_values)
+    payload = scatter_blocked_payload(
+        data,
+        lengths,
+        n_blocks=n_blocks,
+        block_size=block_size,
+        max_bytes=MAX_BYTES_PER_INT,
+        stride_multiple=stride_multiple,
+        min_stride=min_stride,
+    )
 
     return BlockedEncoding(
         payload=payload,

@@ -37,7 +37,9 @@ def decode_stream_scalar(data: np.ndarray, n: int, *, differential: bool = False
             prev = np.uint64((prev + x) & np.uint64(0xFFFFFFFF))
             out[j] = prev
         else:
-            out[j] = x
+            # 32-bit lanes like the paper: a 5-byte stream with >32 payload
+            # bits wraps mod 2^32, matching every vectorized decoder
+            out[j] = x & np.uint64(0xFFFFFFFF)
     return out
 
 

@@ -1,2 +1,2 @@
-from .ops import vbyte_decode_blocked  # noqa: F401
+from .ops import stream_vbyte_decode_blocked, vbyte_decode_blocked  # noqa: F401
 from .ref import vbyte_decode_blocked_ref  # noqa: F401

@@ -1,8 +1,10 @@
-"""Public jit'd wrapper for the Pallas vbyte-decode kernel.
+"""Public jit'd wrappers for the Pallas decode kernels (both formats).
 
-On CPU (this container) the kernel executes in interpret mode; on TPU it
-compiles through Mosaic. Semantics identical to ``ref.vbyte_decode_blocked_ref``
-and ``repro.core.vbyte.masked.decode_blocked``.
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile through Mosaic. ``vbyte_decode_blocked`` matches
+``ref.vbyte_decode_blocked_ref`` and ``repro.core.vbyte.masked.decode_blocked``;
+``stream_vbyte_decode_blocked`` matches
+``repro.core.vbyte.stream_masked.decode_blocked``.
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import decode_blocked_pallas
+from .stream_kernel import stream_decode_blocked_pallas
 
 
 def _auto_interpret() -> bool:
@@ -47,6 +50,49 @@ def vbyte_decode_blocked(
 
     out = decode_blocked_pallas(
         payload,
+        counts2,
+        bases2,
+        block_size=block_size,
+        differential=differential,
+        block_tile=block_tile,
+        interpret=interpret,
+    )
+    out = jax.lax.bitcast_convert_type(out, jnp.uint32)
+    return out[:nb]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "differential", "block_tile", "interpret")
+)
+def stream_vbyte_decode_blocked(
+    control: jax.Array,  # uint8 [n_blocks, block_size // 4]
+    data: jax.Array,  # uint8 [n_blocks, data_stride]
+    counts: jax.Array,  # int   [n_blocks]
+    bases: jax.Array,  # uint32/int32 [n_blocks]
+    *,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode a blocked Stream-VByte payload to uint32[n_blocks, block_size]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    nb, _ = control.shape
+
+    pad = (-nb) % block_tile
+    if pad:
+        control = jnp.pad(control, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        counts = jnp.pad(counts, ((0, pad),))
+        bases = jnp.pad(bases, ((0, pad),))
+
+    counts2 = counts.astype(jnp.int32)[:, None]
+    bases2 = jax.lax.bitcast_convert_type(bases.astype(jnp.uint32), jnp.int32)[:, None]
+
+    out = stream_decode_blocked_pallas(
+        control,
+        data,
         counts2,
         bases2,
         block_size=block_size,

@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: blocked Stream-VByte decode with fused differential sum.
+
+The Masked-VByte kernel (``kernel.py``) spends its first half *recovering*
+integer boundaries from continuation bits — the recurrence the paper calls
+the expensive part of VByte decoding. Stream VByte stores those boundaries
+explicitly as 2-bit codes in a control stream, so this kernel skips the
+continuation-bit machinery entirely:
+
+  * control bytes expand to per-integer codes via a one-hot **MXU** matmul
+    (each of the 4 packed lanes selects its control byte) + static shifts,
+  * integer lengths = code + 1, masked past ``count``,
+  * byte→integer routing is a strict-triangular f32 matmul prefix sum over
+    the *lengths* (in the VByte kernel the same matmul runs over terminator
+    flags — here the operand comes straight from the control stream),
+  * each data byte finds its owner by comparing its index against the start
+    offsets (branch-free rank computation), and its in-integer position is
+    ``i - start[owner]`` with the owner's start gathered by a one-hot MXU
+    matmul,
+  * reassembly reuses the 16-bit-split one-hot MXU scatter: lo halfword
+    collects positions 0–1, hi halfword positions 2–3, recombined with a
+    wrap-around int32 shift-add (≡ mod 2^32, i.e. uint32) — all per-output
+    f32 accumulations stay < 2^16 ≪ 2^24, so the MXU is exact,
+  * fused differential prefix sum via the shared triangular-matmul helper.
+
+All tensors live in VMEM; shapes are static; padding control codes are zeros
+(code 0 = length 1) so masking by ``count`` is load-bearing, as everywhere
+else in this repo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .kernel import _row_cumsum_exact_u32
+
+MAX_BYTES_PER_INT = 4
+
+
+def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
+                               out_ref, *, block_size: int, differential: bool):
+    T, C = control_ref.shape
+    _, S = data_ref.shape
+    B = block_size
+
+    ctrl = control_ref[...].astype(jnp.int32)  # [T, C]
+
+    # expand control bytes C -> B: column j reads ctrl[:, j // 4]. A one-hot
+    # f32 matmul plays the role of the unpack shuffle (ctrl < 256: f32-exact).
+    cc = lax.broadcasted_iota(jnp.int32, (C, B), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (C, B), 1)
+    expand = (jj // 4 == cc).astype(jnp.float32)  # [C, B]
+    packed = lax.dot(
+        ctrl.astype(jnp.float32), expand, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)  # [T, B]
+
+    jrow = lax.broadcasted_iota(jnp.int32, (T, B), 1)
+    code = (packed >> (2 * (jrow % 4))) & 3
+    valid_int = jrow < counts_ref[...]  # [T, B] < [T, 1]
+    length = jnp.where(valid_int, code + 1, 0)
+
+    # start offset of every integer: exclusive prefix sum over lengths
+    # (strict-triangular MXU matmul; sums ≤ 4·B ≪ 2^24, f32-exact)
+    kk = lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    ll = lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    strict_tri = (kk < ll).astype(jnp.float32)
+    starts = lax.dot(
+        length.astype(jnp.float32), strict_tri, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)  # [T, B]
+    total = jnp.sum(length, axis=1, keepdims=True)  # [T, 1] valid data bytes
+
+    # owner of data byte i: rank of i among start offsets (branch-free).
+    # out_idx[t,i] = #{j : valid_int[t,j] and starts[t,j] <= i} - 1
+    ib = lax.broadcasted_iota(jnp.int32, (T, S, B), 1)
+    started = (starts[:, None, :] <= ib) & valid_int[:, None, :]
+    out_idx = jnp.sum(started.astype(jnp.int32), axis=2) - 1  # [T, S]
+
+    irow = lax.broadcasted_iota(jnp.int32, (T, S), 1)
+    valid_byte = irow < total  # padding bytes own nothing
+
+    # in-integer position: i - starts[owner], owner's start gathered by a
+    # one-hot MXU matmul (starts ≤ S ≤ a few thousand: f32-exact)
+    jvec = lax.broadcasted_iota(jnp.int32, (T, S, B), 2)
+    onehot = (out_idx[:, :, None] == jvec).astype(jnp.float32)  # [T, S, B]
+    dnums = (((2,), (1,)), ((0,), (0,)))  # contract over B, batch over T
+    owner_start = lax.dot_general(
+        onehot, starts.astype(jnp.float32), dnums,
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)  # [T, S]
+    pos = jnp.clip(irow - owner_start, 0, MAX_BYTES_PER_INT - 1)
+
+    # contributions, split by 16-bit halfword before the MXU scatter:
+    # positions 0-1 build the low halfword, positions 2-3 the high one.
+    byte = data_ref[...].astype(jnp.int32)
+    lo = jnp.where(valid_byte & (pos < 2), byte << (8 * pos), 0)
+    hi = jnp.where(valid_byte & (pos >= 2), byte << (8 * (pos - 2)), 0)
+
+    # one-hot MXU scatter: out[t,j] = Σ_i [out_idx[t,i]==j]·contrib[t,i]
+    sdnums = (((1,), (1,)), ((0,), (0,)))  # contract over S, batch over T
+    lo_sum = lax.dot_general(
+        onehot, lo.astype(jnp.float32), sdnums, preferred_element_type=jnp.float32
+    )
+    hi_sum = lax.dot_general(
+        onehot, hi.astype(jnp.float32), sdnums, preferred_element_type=jnp.float32
+    )
+    out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T, B]
+
+    out = jnp.where(valid_int, out, 0)
+    if differential:
+        incl_tri = (kk <= ll).astype(jnp.float32)
+        out = _row_cumsum_exact_u32(out, incl_tri) + bases_ref[...]
+        out = jnp.where(valid_int, out, 0)
+
+    out_ref[...] = out
+
+
+def stream_decode_blocked_pallas(
+    control: jax.Array,  # uint8 [n_blocks, block_size // 4]
+    data: jax.Array,  # uint8 [n_blocks, data_stride]
+    counts: jax.Array,  # int32 [n_blocks, 1]
+    bases: jax.Array,  # int32 [n_blocks, 1] (bitcast of uint32)
+    *,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call wrapper; see ops.stream_vbyte_decode_blocked."""
+    nb, C = control.shape
+    _, stride = data.shape
+    if C * 4 != block_size:
+        raise ValueError(f"control width {C} != block_size/4 = {block_size // 4}")
+    if nb % block_tile:
+        raise ValueError(f"n_blocks={nb} must be a multiple of block_tile={block_tile}")
+    grid = (nb // block_tile,)
+    kernel = functools.partial(
+        _stream_decode_tile_kernel, block_size=block_size, differential=differential
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_tile, C), lambda g: (g, 0)),
+            pl.BlockSpec((block_tile, stride), lambda g: (g, 0)),
+            pl.BlockSpec((block_tile, 1), lambda g: (g, 0)),
+            pl.BlockSpec((block_tile, 1), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_tile, block_size), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_size), jnp.int32),
+        interpret=interpret,
+    )(control, data, counts, bases)

@@ -1,5 +1,27 @@
+"""Shared fixtures + a small dependency-free property harness.
+
+The tier-1 suite must collect and run with no packages beyond the baked-in
+toolchain, so instead of ``hypothesis`` the property tests iterate over
+seeded case generators: deterministic edge cases first (empty, zeros,
+every byte-length boundary, all-max), then ``np.random.Generator``-seeded
+random arrays whose per-value bit widths are mixed so every encoded length
+regime appears. Failures print the generator seed + case index, which is
+all that's needed to reproduce.
+"""
 import numpy as np
 import pytest
+
+# every byte-length boundary of BOTH formats: VByte switches lengths at
+# 2^7/2^14/2^21/2^28, Stream VByte at 2^8/2^16/2^24 — plus 0, 1 and the
+# uint32 maximum.
+BOUNDARY_VALUES = np.array(
+    [0, 1,
+     2**7 - 1, 2**7, 2**8 - 1, 2**8,
+     2**14 - 1, 2**14, 2**16 - 1, 2**16,
+     2**21 - 1, 2**21, 2**24 - 1, 2**24,
+     2**28 - 1, 2**28, 2**31, 2**32 - 1],
+    dtype=np.uint64,
+)
 
 
 @pytest.fixture
@@ -12,3 +34,40 @@ def make_valid_stream(rng, n, max_bits=32):
     bits = rng.integers(1, max_bits + 1, size=n)
     vals = rng.integers(0, 2 ** 63, size=n, dtype=np.uint64) % (1 << bits.astype(np.uint64))
     return vals.astype(np.uint64)
+
+
+def u32_cases(*, n_cases=40, max_len=300, max_value=2**32 - 1, min_len=0,
+              seed=1234, sort=False):
+    """Yield ``(case_id, uint64 array)`` pairs — the hypothesis stand-in.
+
+    Edge cases come first, then ``n_cases`` seeded random arrays with mixed
+    bit widths (so 1..5-byte VByte / 1..4-byte Stream-VByte encodings all
+    appear). ``sort=True`` produces non-decreasing sequences for
+    differential coding. ``case_id`` strings make failures reproducible.
+    """
+    mv = np.uint64(max_value)
+    edges = [
+        ("empty", np.zeros(0, np.uint64)),
+        ("single-zero", np.zeros(1, np.uint64)),
+        ("boundaries", np.minimum(BOUNDARY_VALUES, mv)),
+        ("all-max", np.full(5, mv, np.uint64)),
+        ("all-zero", np.zeros(9, np.uint64)),
+    ]
+    for name, vals in edges:
+        if len(vals) >= min_len:
+            yield name, np.sort(vals) if sort else vals
+    rng = np.random.default_rng(seed)
+    for i in range(n_cases):
+        n = int(rng.integers(min_len, max_len + 1))
+        bits = rng.integers(0, 33, size=n).astype(np.uint64)
+        vals = rng.integers(0, 1 << 62, size=n, dtype=np.uint64) >> (
+            np.uint64(62) - bits)
+        vals = np.minimum(vals, mv)
+        yield f"seed{seed}-case{i}", np.sort(vals) if sort else vals
+
+
+def sorted_u32_cases(*, n_cases=40, max_len=300, max_value=2**31 - 1,
+                     min_len=0, seed=1234):
+    """Non-decreasing sequences (differential-coding inputs)."""
+    return u32_cases(n_cases=n_cases, max_len=max_len, max_value=max_value,
+                     min_len=min_len, seed=seed, sort=True)

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 
 from repro.models import lm
 
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
+
 
 @pytest.mark.parametrize("window", [None, 8])
 @pytest.mark.parametrize("moe", [False, True])

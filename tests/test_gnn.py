@@ -1,5 +1,6 @@
 """GIN: layer math vs numpy, compressed adjacency == raw edges, training."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +11,8 @@ from repro.data.synthetic import molecule_batch, random_graph
 from repro.models import gnn
 from repro.nn.gnn import decode_compressed_edges, gin_layer, gin_layer_init
 from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
 
 
 def test_gin_layer_matches_numpy(rng):

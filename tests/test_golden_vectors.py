@@ -1,0 +1,192 @@
+"""Golden-vector tests: hand-written byte streams with expected decodes.
+
+Covers, for BOTH on-device formats:
+  * every byte-length boundary (VByte: 2^7/2^14/2^21/2^28/2^32-1,
+    Stream VByte: 2^8/2^16/2^24/2^32-1) with the exact expected bytes,
+  * empty blocks and count=0 rows (garbage payload must not leak),
+  * padding bytes that look like terminators (0x00 decodes as a 0 if the
+    count mask ever breaks),
+  * differential wrap-around mod 2^32.
+
+These are the vectors a from-scratch reimplementation must reproduce; every
+decoder (scalar oracle, vectorized jnp, Pallas kernel in interpret mode) is
+checked against them.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import CompressedIntArray
+from repro.core.vbyte import encode as venc
+from repro.core.vbyte import masked as vmask
+from repro.core.vbyte import ref as vref
+from repro.core.vbyte import stream_masked as svbm
+from repro.core.vbyte import stream_vbyte as svb
+from repro.kernels.vbyte_decode import (stream_vbyte_decode_blocked,
+                                        vbyte_decode_blocked)
+
+# -- exact encodings at the byte-length boundaries ---------------------------
+VBYTE_GOLDEN = [
+    (0, [0x00]),
+    (2**7 - 1, [0x7F]),
+    (2**7, [0x80, 0x01]),
+    (2**14 - 1, [0xFF, 0x7F]),
+    (2**14, [0x80, 0x80, 0x01]),
+    (2**21 - 1, [0xFF, 0xFF, 0x7F]),
+    (2**21, [0x80, 0x80, 0x80, 0x01]),
+    (2**28 - 1, [0xFF, 0xFF, 0xFF, 0x7F]),
+    (2**28, [0x80, 0x80, 0x80, 0x80, 0x01]),
+    (2**32 - 1, [0xFF, 0xFF, 0xFF, 0xFF, 0x0F]),
+]
+
+SVB_GOLDEN = [  # (value, code, data bytes little-endian)
+    (0, 0, [0x00]),
+    (2**8 - 1, 0, [0xFF]),
+    (2**8, 1, [0x00, 0x01]),
+    (2**16 - 1, 1, [0xFF, 0xFF]),
+    (2**16, 2, [0x00, 0x00, 0x01]),
+    (2**24 - 1, 2, [0xFF, 0xFF, 0xFF]),
+    (2**24, 3, [0x00, 0x00, 0x00, 0x01]),
+    (2**32 - 1, 3, [0xFF, 0xFF, 0xFF, 0xFF]),
+]
+
+
+@pytest.mark.parametrize("value,expected", VBYTE_GOLDEN)
+def test_vbyte_boundary_bytes(value, expected):
+    assert venc.encode_stream(np.array([value], np.uint64)).tolist() == expected
+    assert vref.decode_stream_scalar(np.array(expected, np.uint8), 1)[0] == value
+
+
+@pytest.mark.parametrize("value,code,expected", SVB_GOLDEN)
+def test_svb_boundary_bytes(value, code, expected):
+    control, data = svb.encode_stream(np.array([value], np.uint64))
+    assert control.tolist() == [code]  # codes 1..3 pack into bits 0-1
+    assert data.tolist() == expected
+    assert svb.decode_stream_scalar(control, data, 1)[0] == value
+
+
+def test_svb_control_packing_order():
+    """Four codes per control byte, LSB-first: lengths (1,2,3,4) -> 0xE4."""
+    vals = np.array([1, 300, 70000, 2**32 - 1], np.uint64)
+    control, data = svb.encode_stream(vals)
+    assert control.tolist() == [0xE4]  # 0 | 1<<2 | 2<<4 | 3<<6
+    assert data.tolist() == [0x01, 0x2C, 0x01, 0x70, 0x11, 0x01,
+                             0xFF, 0xFF, 0xFF, 0xFF]
+    assert np.array_equal(svb.decode_stream_scalar(control, data, 4), vals)
+
+
+def test_svb_stream_decode_matches_scalar(rng):
+    """stream_masked.decode_stream on tight (control, data) streams — the
+    single-stream analogue of masked.decode_stream."""
+    bits = rng.integers(0, 33, size=37).astype(np.uint64)
+    vals = np.minimum(
+        rng.integers(0, 1 << 62, size=37, dtype=np.uint64) >> (np.uint64(62) - bits),
+        np.uint64(2**32 - 1))
+    control, data = svb.encode_stream(vals)
+    ctrl_p = np.concatenate([control, np.zeros(16, np.uint8)])
+    data_p = np.concatenate([data, np.zeros(16, np.uint8)])
+    out = svbm.decode_stream(jnp.asarray(ctrl_p), jnp.asarray(data_p), 64, n=37)
+    assert np.array_equal(np.asarray(out[:37], np.uint64), vals)
+    assert np.all(np.asarray(out[37:]) == 0)
+
+
+# -- hand-written blocked layouts, decoded by every implementation ----------
+def _vbyte_all_decoders(payload, counts, bases, block_size, differential):
+    oracle = vref.decode_blocked_scalar(payload, counts, bases, block_size,
+                                        differential=differential)
+    ops = dict(payload=jnp.asarray(payload), counts=jnp.asarray(counts),
+               bases=jnp.asarray(bases))
+    msk = vmask.decode_blocked(**ops, block_size=block_size,
+                               differential=differential)
+    ker = vbyte_decode_blocked(**ops, block_size=block_size,
+                               differential=differential)
+    np.testing.assert_array_equal(np.asarray(msk, np.uint64), oracle)
+    np.testing.assert_array_equal(np.asarray(ker, np.uint64), oracle)
+    return oracle
+
+
+def _svb_all_decoders(control, data, counts, bases, block_size, differential):
+    oracle = svb.decode_blocked_scalar(control, data, counts, bases, block_size,
+                                       differential=differential)
+    ops = dict(control=jnp.asarray(control), data=jnp.asarray(data),
+               counts=jnp.asarray(counts), bases=jnp.asarray(bases))
+    msk = svbm.decode_blocked(**ops, block_size=block_size,
+                              differential=differential)
+    ker = stream_vbyte_decode_blocked(**ops, block_size=block_size,
+                                      differential=differential)
+    np.testing.assert_array_equal(np.asarray(msk, np.uint64), oracle)
+    np.testing.assert_array_equal(np.asarray(ker, np.uint64), oracle)
+    return oracle
+
+
+def test_vbyte_blocked_golden_with_terminator_lookalike_padding():
+    """Row 0: [133, 3] then zero padding — every pad byte is a valid
+    0-terminator, so only the count mask keeps them out of the output.
+    Row 1: count=0 with garbage bytes — must decode to all zeros."""
+    payload = np.zeros((2, 16), np.uint8)
+    payload[0, :3] = [0x85, 0x01, 0x03]  # 133 = (0x85&0x7F) | 0x01<<7, then 3
+    payload[1, :4] = [0x99, 0xAA, 0x7F, 0x05]  # garbage: count=0 row
+    counts = np.array([2, 0], np.int32)
+    bases = np.zeros(2, np.uint32)
+    out = _vbyte_all_decoders(payload, counts, bases, 8, False)
+    expected = np.zeros((2, 8), np.uint64)
+    expected[0, :2] = [133, 3]
+    np.testing.assert_array_equal(out, expected)
+
+
+def test_svb_blocked_golden_with_zero_code_padding():
+    """Padding control codes are 0 (= 1-byte integers): only the count mask
+    keeps them from decoding the data-stream padding as zeros/garbage."""
+    control = np.zeros((2, 2), np.uint8)
+    control[0, 0] = 0xE4  # lengths (1,2,3,4) for the 4 valid ints
+    data = np.zeros((2, 16), np.uint8)
+    data[0, :10] = [0x01, 0x2C, 0x01, 0x70, 0x11, 0x01, 0xFF, 0xFF, 0xFF, 0xFF]
+    data[1, :3] = [0xDE, 0xAD, 0xBE]  # garbage: count=0 row
+    counts = np.array([4, 0], np.int32)
+    bases = np.zeros(2, np.uint32)
+    out = _svb_all_decoders(control, data, counts, bases, 8, False)
+    expected = np.zeros((2, 8), np.uint64)
+    expected[0, :4] = [1, 300, 70000, 2**32 - 1]
+    np.testing.assert_array_equal(out, expected)
+
+
+@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte"])
+def test_empty_block_layout(fmt):
+    """n=0 encodes to a single block with count 0 and decodes to nothing."""
+    arr = CompressedIntArray.encode(np.zeros(0, np.uint64), format=fmt)
+    assert arr.n == 0 and arr.n_blocks == 1
+    assert arr.decode().size == 0
+    assert arr.decode(use_kernel=True).size == 0
+    assert arr.decode_scalar_oracle().size == 0
+
+
+def test_vbyte_differential_wraparound_golden():
+    """base=2^32-2, gaps [1, 5]: absolute values wrap mod 2^32 -> [2^32-1, 4]."""
+    payload = np.zeros((1, 16), np.uint8)
+    payload[0, :2] = [0x01, 0x05]
+    counts = np.array([2], np.int32)
+    bases = np.array([2**32 - 2], np.uint32)
+    out = _vbyte_all_decoders(payload, counts, bases, 8, True)
+    np.testing.assert_array_equal(out[0, :2], [2**32 - 1, 4])
+
+
+def test_svb_differential_wraparound_golden():
+    control = np.zeros((1, 2), np.uint8)  # codes 0,0: two 1-byte gaps
+    data = np.zeros((1, 16), np.uint8)
+    data[0, :2] = [0x01, 0x05]
+    counts = np.array([2], np.int32)
+    bases = np.array([2**32 - 2], np.uint32)
+    out = _svb_all_decoders(control, data, counts, bases, 8, True)
+    np.testing.assert_array_equal(out[0, :2], [2**32 - 1, 4])
+
+
+def test_vbyte_five_byte_wraparound_golden():
+    """A 5-byte encoding whose 35 payload bits exceed 32: decoders must agree
+    with the scalar oracle's mod-2^32 semantics (paper's 32-bit lanes)."""
+    payload = np.zeros((1, 16), np.uint8)
+    payload[0, :5] = [0xFF, 0xFF, 0xFF, 0xFF, 0x7F]  # 2^35-1 ≡ 2^32-1 (mod 2^32)
+    counts = np.array([1], np.int32)
+    bases = np.zeros(1, np.uint32)
+    out = _vbyte_all_decoders(payload, counts, bases, 8, False)
+    assert out[0, 0] == 2**32 - 1

@@ -1,18 +1,19 @@
-"""Pallas kernel sweeps: shapes/dtypes/strides vs the pure-jnp gather oracle
-(interpret=True on CPU). Three implementations must agree bit-exactly:
-kernel (MXU one-hot) == ref (gather) == masked (segment-sum) == scalar."""
+"""Pallas kernel sweeps: shapes/dtypes/strides vs the pure-jnp oracles
+(interpret=True on CPU). For VByte, three implementations must agree
+bit-exactly: kernel (MXU one-hot) == ref (gather) == masked (segment-sum)
+== scalar. For Stream VByte: kernel == stream_masked (gather) == scalar.
+Seeded case generators from conftest — no hypothesis dependency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
-import jax.numpy as jnp
 
 from repro.core import CompressedIntArray
-from repro.core.vbyte import encode as venc
 from repro.core.vbyte.masked import decode_blocked
-from repro.kernels.vbyte_decode import vbyte_decode_blocked, vbyte_decode_blocked_ref
+from repro.core.vbyte.stream_masked import decode_blocked as svb_decode_blocked
+from repro.kernels.vbyte_decode import (stream_vbyte_decode_blocked,
+                                        vbyte_decode_blocked,
+                                        vbyte_decode_blocked_ref)
 
-from conftest import make_valid_stream
+from conftest import make_valid_stream, sorted_u32_cases, u32_cases
 
 
 def _roundtrip(vals, block_size, differential, block_tile=8, stride_multiple=128):
@@ -30,9 +31,24 @@ def _roundtrip(vals, block_size, differential, block_tile=8, stride_multiple=128
     np.testing.assert_array_equal(flat, vals)
 
 
+def _roundtrip_svb(vals, block_size, differential, block_tile=8,
+                   stride_multiple=128):
+    arr = CompressedIntArray.encode(vals, format="streamvbyte",
+                                    block_size=block_size,
+                                    differential=differential,
+                                    stride_multiple=stride_multiple)
+    ops = arr.device_operands()
+    kw = dict(block_size=block_size, differential=differential)
+    ker = stream_vbyte_decode_blocked(**ops, block_tile=block_tile, **kw)
+    msk = svb_decode_blocked(**ops, **kw)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(msk))
+    flat = np.asarray(ker).reshape(-1)[: len(vals)].astype(np.uint64)
+    np.testing.assert_array_equal(flat, vals)
+
+
 @pytest.mark.parametrize("differential", [False, True])
-@pytest.mark.parametrize("block_size", [8, 32, 128])
-@pytest.mark.parametrize("n", [1, 7, 128, 129, 1000])
+@pytest.mark.parametrize("block_size", [8, 128])  # 32 covered by prop tests
+@pytest.mark.parametrize("n", [7, 129, 1000])
 def test_kernel_shape_sweep(rng, differential, block_size, n):
     if differential:
         vals = np.sort(rng.integers(0, 2**31, size=n)).astype(np.uint64)
@@ -41,10 +57,27 @@ def test_kernel_shape_sweep(rng, differential, block_size, n):
     _roundtrip(vals, block_size, differential)
 
 
+@pytest.mark.parametrize("differential", [False, True])
+@pytest.mark.parametrize("block_size", [8, 128])  # 32 covered by prop tests
+@pytest.mark.parametrize("n", [7, 129, 1000])
+def test_stream_kernel_shape_sweep(rng, differential, block_size, n):
+    if differential:
+        vals = np.sort(rng.integers(0, 2**31, size=n)).astype(np.uint64)
+    else:
+        vals = make_valid_stream(rng, n)
+    _roundtrip_svb(vals, block_size, differential)
+
+
 @pytest.mark.parametrize("block_tile", [1, 4, 8, 16])
 def test_kernel_tile_sweep(rng, block_tile):
     vals = make_valid_stream(rng, 777)
     _roundtrip(vals, 64, False, block_tile=block_tile)
+
+
+@pytest.mark.parametrize("block_tile", [1, 4, 8, 16])
+def test_stream_kernel_tile_sweep(rng, block_tile):
+    vals = make_valid_stream(rng, 777)
+    _roundtrip_svb(vals, 64, False, block_tile=block_tile)
 
 
 @pytest.mark.parametrize("max_bits", [7, 14, 21, 28, 32])
@@ -56,31 +89,49 @@ def test_kernel_byte_length_regimes(rng, max_bits):
     _roundtrip(vals, 128, False)
 
 
-def test_kernel_all_zeros():
-    _roundtrip(np.zeros(300, np.uint64), 128, False)
+@pytest.mark.parametrize("max_bits", [8, 16, 24, 32])
+def test_stream_kernel_byte_length_regimes(rng, max_bits):
+    """All 1..4-byte Stream-VByte encodings, incl. uniform-length blocks."""
+    vals = make_valid_stream(rng, 512, max_bits=max_bits)
+    vals[0] = (1 << max_bits) - 1
+    _roundtrip_svb(vals, 128, False)
 
 
-def test_kernel_max_values():
-    _roundtrip(np.full(257, 2**32 - 1, np.uint64), 128, False)
+@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte"])
+def test_kernel_all_zeros(fmt):
+    fn = _roundtrip if fmt == "vbyte" else _roundtrip_svb
+    fn(np.zeros(300, np.uint64), 128, False)
 
 
-def test_kernel_stride_multiple_8(rng):
+@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte"])
+def test_kernel_max_values(fmt):
+    fn = _roundtrip if fmt == "vbyte" else _roundtrip_svb
+    fn(np.full(257, 2**32 - 1, np.uint64), 128, False)
+
+
+@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte"])
+def test_kernel_stride_multiple_8(rng, fmt):
     # tight strides (stride_multiple=8) exercise non-128-aligned payloads
     vals = make_valid_stream(rng, 333)
-    _roundtrip(vals, 64, False, stride_multiple=8)
+    fn = _roundtrip if fmt == "vbyte" else _roundtrip_svb
+    fn(vals, 64, False, stride_multiple=8)
 
 
-@given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
-                min_size=1, max_size=400))
-@settings(max_examples=30, deadline=None)
-def test_prop_kernel_equals_oracle(values):
-    vals = np.array(values, np.uint64)
-    _roundtrip(vals, 32, False)
+def test_prop_kernel_equals_oracle():
+    for case, vals in u32_cases(n_cases=6, max_len=300, min_len=1, seed=7):
+        _roundtrip(vals, 32, False)
 
 
-@given(st.lists(st.integers(min_value=0, max_value=2**31 - 1),
-                min_size=1, max_size=400))
-@settings(max_examples=20, deadline=None)
-def test_prop_kernel_differential(values):
-    vals = np.sort(np.array(values, np.uint64))
-    _roundtrip(vals, 32, True)
+def test_prop_kernel_differential():
+    for case, vals in sorted_u32_cases(n_cases=5, max_len=300, min_len=1, seed=8):
+        _roundtrip(vals, 32, True)
+
+
+def test_prop_stream_kernel_equals_oracle():
+    for case, vals in u32_cases(n_cases=6, max_len=300, min_len=1, seed=9):
+        _roundtrip_svb(vals, 32, False)
+
+
+def test_prop_stream_kernel_differential():
+    for case, vals in sorted_u32_cases(n_cases=5, max_len=300, min_len=1, seed=10):
+        _roundtrip_svb(vals, 32, True)

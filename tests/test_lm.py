@@ -9,6 +9,8 @@ import repro.nn.layers as nnl
 from repro.models import lm
 from repro.train import OptimizerConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
+
 
 def tiny_cfg(**kw):
     base = dict(name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,

@@ -1,54 +1,70 @@
-"""Property tests on the vectorized decoder's internal invariants — the
-arithmetic identities that replace the paper's lookup tables (DESIGN.md §2)."""
+"""Property tests on the vectorized decoders' internal invariants — the
+arithmetic identities that replace the papers' lookup tables (DESIGN.md §2),
+for both the Masked-VByte path and the Stream-VByte control-stream path.
+Seeded case generators from conftest — no hypothesis dependency."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
 from repro.core.vbyte import encode as venc
+from repro.core.vbyte import stream_vbyte as svb
 from repro.core.vbyte.masked import (byte_contributions, continuation_bits,
                                      in_integer_positions)
+from repro.core.vbyte.stream_masked import (control_codes, integer_lengths,
+                                            start_offsets)
 
-u32_lists = st.lists(st.integers(min_value=0, max_value=2**32 - 1),
-                     min_size=1, max_size=100)
+from conftest import u32_cases
 
 
-@given(u32_lists)
-@settings(max_examples=50, deadline=None)
-def test_positions_match_byte_lengths(values):
+_PAD_BYTES = 640  # fixed stream size: every case hits the same jitted shapes
+
+
+def _cases(**kw):
+    kw.setdefault("n_cases", 50)
+    kw.setdefault("max_len", 100)
+    kw.setdefault("min_len", 1)
+    return u32_cases(**kw)
+
+
+def _padded(stream):
+    """Zero-pad to a fixed length (zeros are inert: cont=0, contrib=0)."""
+    out = np.zeros(_PAD_BYTES, np.uint8)
+    out[: len(stream)] = stream
+    return jnp.asarray(out)
+
+
+# -- Masked-VByte internals ---------------------------------------------------
+def test_positions_match_byte_lengths():
     """pos must count 0,1,2,... within each encoded integer."""
-    vals = np.array(values, np.uint64)
-    stream = venc.encode_stream(vals)
-    lengths = venc.vbyte_lengths(vals)
-    expected = np.concatenate([np.arange(l) for l in lengths])
-    cont = continuation_bits(jnp.asarray(stream)[None])
-    pos = np.asarray(in_integer_positions(cont))[0]
-    np.testing.assert_array_equal(pos, expected)
+    for case, vals in _cases():
+        stream = venc.encode_stream(vals)
+        lengths = venc.vbyte_lengths(vals)
+        expected = np.concatenate([np.arange(l) for l in lengths])
+        cont = continuation_bits(_padded(stream)[None])
+        pos = np.asarray(in_integer_positions(cont))[0, : len(stream)]
+        np.testing.assert_array_equal(pos, expected, err_msg=case)
 
 
-@given(u32_lists)
-@settings(max_examples=50, deadline=None)
-def test_contributions_sum_to_value(values):
+def test_contributions_sum_to_value():
     """Σ contributions over each integer's bytes == the integer (mod 2^32)."""
-    vals = np.array(values, np.uint64)
-    stream = jnp.asarray(venc.encode_stream(vals))
-    cont = continuation_bits(stream[None])
-    pos = in_integer_positions(cont)
-    contrib = np.asarray(byte_contributions(stream[None], pos))[0].astype(np.uint64)
-    end = 1 - np.asarray(cont)[0]
-    out_idx = np.cumsum(end) - end
-    sums = np.zeros(len(vals), np.uint64)
-    np.add.at(sums, out_idx, contrib)
-    np.testing.assert_array_equal(sums & 0xFFFFFFFF, vals)
+    for case, vals in _cases():
+        stream = venc.encode_stream(vals)
+        data = _padded(stream)[None]
+        cont = continuation_bits(data)
+        pos = in_integer_positions(cont)
+        contrib = np.asarray(byte_contributions(data, pos))[0, : len(stream)]
+        end = 1 - np.asarray(cont)[0, : len(stream)]
+        out_idx = np.cumsum(end) - end
+        sums = np.zeros(len(vals), np.uint64)
+        np.add.at(sums, out_idx, contrib.astype(np.uint64))
+        np.testing.assert_array_equal(sums & 0xFFFFFFFF, vals, err_msg=case)
 
 
-@given(u32_lists)
-@settings(max_examples=50, deadline=None)
-def test_terminator_count_equals_integer_count(values):
-    vals = np.array(values, np.uint64)
-    stream = venc.encode_stream(vals)
-    cont = np.asarray(continuation_bits(jnp.asarray(stream)))
-    assert int((1 - cont).sum()) == len(vals)
+def test_terminator_count_equals_integer_count():
+    for case, vals in _cases():
+        stream = venc.encode_stream(vals)
+        cont = np.asarray(continuation_bits(_padded(stream)))[: len(stream)]
+        assert int((1 - cont).sum()) == len(vals), case
 
 
 def test_wraparound_identity():
@@ -57,4 +73,47 @@ def test_wraparound_identity():
     from repro.core.compressed_array import CompressedIntArray
 
     arr = CompressedIntArray.encode(vals, block_size=8)
+    assert np.array_equal(arr.decode(use_kernel=True).astype(np.uint64), vals)
+
+
+# -- Stream-VByte internals ---------------------------------------------------
+def test_control_codes_roundtrip_pack():
+    """jnp unpack of the packed control stream == the encoder's codes."""
+    B = 128  # fixed block: every case hits the same jitted shapes
+    for case, vals in _cases():
+        lengths = svb.svb_lengths(vals)
+        codes = np.zeros(B, np.uint8)
+        codes[: len(vals)] = (lengths - 1).astype(np.uint8)
+        packed = svb.pack_control(codes)
+        got = np.asarray(control_codes(jnp.asarray(packed)[None], B))[0]
+        np.testing.assert_array_equal(got, codes, err_msg=case)
+        np.testing.assert_array_equal(
+            svb.unpack_control(packed, len(vals)), lengths - 1, err_msg=case)
+
+
+def test_svb_start_offsets_match_byte_layout():
+    """start_j must equal the cumulative data bytes before integer j."""
+    for case, vals in _cases():
+        lengths = svb.svb_lengths(vals)
+        enc = svb.encode_blocked(vals, block_size=128, stride_multiple=128)
+        codes = control_codes(jnp.asarray(enc.control), enc.block_size)
+        lens = integer_lengths(codes, jnp.asarray(enc.counts))
+        starts = np.asarray(start_offsets(lens))[0]
+        expected = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+        np.testing.assert_array_equal(starts[: len(vals)], expected, err_msg=case)
+
+
+def test_svb_lengths_are_whole_bytes():
+    """Stream-VByte length = ceil(bit_length/8), clamped to [1, 4]."""
+    for case, vals in _cases():
+        lens = svb.svb_lengths(vals)
+        expected = [max(1, -(-int(v).bit_length() // 8)) for v in vals]
+        np.testing.assert_array_equal(lens, expected, err_msg=case)
+
+
+def test_svb_wraparound_identity():
+    vals = np.array([2**32 - 1, 2**31, 0x89ABCDEF], np.uint64)
+    from repro.core.compressed_array import CompressedIntArray
+
+    arr = CompressedIntArray.encode(vals, format="streamvbyte", block_size=8)
     assert np.array_equal(arr.decode(use_kernel=True).astype(np.uint64), vals)

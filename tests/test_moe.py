@@ -7,6 +7,8 @@ import jax.numpy as jnp
 
 from repro.nn.moe import _positions_within_expert, moe_apply, moe_init
 
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
+
 
 def dense_reference(params, x, top_k, renormalize=True):
     """Compute the mixture exactly: every expert on every token, gated."""

@@ -11,6 +11,8 @@ from repro.models import recsys
 from repro.models.registry import reduced_config
 from repro.train import OptimizerConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
+
 KINDS = ["sasrec", "bert4rec", "bst", "two_tower"]
 ARCH_OF = {"sasrec": "sasrec", "bert4rec": "bert4rec", "bst": "bst",
            "two_tower": "two-tower-retrieval"}

@@ -11,6 +11,8 @@ from repro.data.synthetic import molecule_batch, random_graph, recsys_batch
 from repro.models import gnn, lm, recsys, registry
 from repro.train import OptimizerConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
+
 LM_ARCHS = ["olmoe-1b-7b", "mixtral-8x7b", "h2o-danube-1.8b", "yi-6b", "glm4-9b"]
 RECSYS_ARCHS = ["sasrec", "two-tower-retrieval", "bert4rec", "bst"]
 OPT = OptimizerConfig(peak_lr=1e-3, warmup_steps=1)

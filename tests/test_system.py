@@ -2,6 +2,7 @@
 encode → ship → decode-on-device → train → checkpoint → restart, exercising
 the public API the way examples/ and launch/ do."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +13,8 @@ from repro.data.pipeline import CompressedTokenPipeline
 from repro.data.synthetic import token_stream
 from repro.models import lm
 from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+pytestmark = pytest.mark.slow  # heavyweight model/system tier (deselected from tier-1)
 
 
 def test_end_to_end_compressed_training_with_restart(tmp_path, rng):

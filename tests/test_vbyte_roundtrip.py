@@ -1,7 +1,7 @@
-"""Core codec: format vectors (paper Table 1), round-trips, property tests."""
+"""Core codec: format vectors (paper Table 1), round-trips, property tests
+(seeded case generators from conftest — no hypothesis dependency)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -10,7 +10,8 @@ from repro.core.vbyte import encode as venc
 from repro.core.vbyte import masked as vmask
 from repro.core.vbyte import ref as vref
 
-from conftest import make_valid_stream
+from conftest import (BOUNDARY_VALUES, make_valid_stream, sorted_u32_cases,
+                      u32_cases)
 
 
 # -- paper Table 1: exact byte-level vectors ---------------------------------
@@ -96,36 +97,32 @@ def test_count_integers(rng):
     assert int(vmask.count_integers(jnp.asarray(data), len(s))) == 77
 
 
-# -- hypothesis property tests ------------------------------------------------
-u32s = st.lists(st.integers(min_value=0, max_value=2**32 - 1), max_size=300)
+# -- seeded property tests (conftest harness) --------------------------------
+def test_prop_stream_roundtrip():
+    for case, vals in u32_cases(n_cases=60, max_len=300):
+        s = venc.encode_stream(vals)
+        got = vref.decode_stream_scalar(s, len(vals))
+        assert np.array_equal(got, vals), case
 
 
-@given(u32s)
-@settings(max_examples=60, deadline=None)
-def test_prop_stream_roundtrip(values):
-    vals = np.array(values, np.uint64)
-    s = venc.encode_stream(vals)
-    assert np.array_equal(vref.decode_stream_scalar(s, len(vals)), vals)
+def test_prop_blocked_masked_equals_scalar():
+    for case, vals in u32_cases(n_cases=40, max_len=300):
+        arr = CompressedIntArray.encode(vals, block_size=32)
+        assert np.array_equal(arr.decode(), arr.decode_scalar_oracle()), case
 
 
-@given(u32s)
-@settings(max_examples=40, deadline=None)
-def test_prop_blocked_masked_equals_scalar(values):
-    vals = np.array(values, np.uint64)
-    arr = CompressedIntArray.encode(vals, block_size=32)
-    assert np.array_equal(arr.decode(), arr.decode_scalar_oracle())
+def test_prop_differential_roundtrip():
+    for case, vals in sorted_u32_cases(n_cases=40, max_len=200):
+        arr = CompressedIntArray.encode(vals, block_size=32, differential=True)
+        assert np.array_equal(arr.decode().astype(np.uint64), vals), case
 
 
-@given(st.lists(st.integers(min_value=0, max_value=2**31 - 1), max_size=200))
-@settings(max_examples=40, deadline=None)
-def test_prop_differential_roundtrip(values):
-    vals = np.sort(np.array(values, np.uint64))
-    arr = CompressedIntArray.encode(vals, block_size=32, differential=True)
-    assert np.array_equal(arr.decode().astype(np.uint64), vals)
-
-
-@given(st.integers(min_value=0, max_value=2**32 - 1))
-@settings(max_examples=100, deadline=None)
-def test_prop_length_formula(v):
-    n = venc.vbyte_lengths(np.array([v], np.uint64))[0]
-    assert n == max(1, -(-int(v).bit_length() // 7))
+def test_prop_length_formula(rng):
+    # every byte-length threshold (±1 via BOUNDARY_VALUES) plus random draws
+    samples = np.concatenate([
+        BOUNDARY_VALUES,
+        rng.integers(0, 2**32, size=100, dtype=np.uint64),
+    ])
+    for v in samples:
+        n = venc.vbyte_lengths(np.array([v], np.uint64))[0]
+        assert n == max(1, -(-int(v).bit_length() // 7)), v
