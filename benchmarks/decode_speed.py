@@ -95,6 +95,105 @@ def run(groups=(14, 16, 18, 20), n_ints: int = 1 << 18, reps: int = 8,
     return rows
 
 
+def _bench_interleaved(fns: dict, reps: int, warmup: int = 3) -> dict:
+    """Min wall time per labelled thunk, rounds interleaved.
+
+    Interleaving + min-of-samples instead of back-to-back means: the
+    container's background load drifts on the scale of one measurement
+    block, which otherwise swamps few-percent effects; the minimum is the
+    standard noise-robust estimate of a computation's true cost.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples = {k: [] for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[k].append(time.perf_counter() - t0)
+    return {k: min(v) for k, v in samples.items()}
+
+
+def run_fused(n_ints: int = 1 << 18, d: int = 8, vocab: int = 1 << 16,
+              reps: int = 10) -> list[dict]:
+    """Fused decode→consume epilogues vs the unfused two-dispatch chain.
+
+    For each format and each fused workload (bag-sum embedding bag,
+    dot-score retrieval, adjacency rebase), times the dispatch layer's
+    ``fused`` plan (decode + consumer in ONE executable — on TPU the Pallas
+    epilogue, on this CPU proxy a single XLA program where the decoded grid
+    never crosses a dispatch boundary) against the ``unfused`` plan (decode
+    the [n_blocks, 128] grid, then the same consumer as a second dispatch —
+    the shape of every call site before the dispatch layer). Outputs are
+    bit-identical by construction (same epilogue body); only the wall time
+    differs.
+
+    The default ``d=8`` keeps the consumer's table-gather traffic comparable
+    to the decoded-stream round trip being removed; at large ``d`` the
+    (path-independent) gather dominates both sides and the CPU proxy reads
+    as noise. On TPU the fused margin widens with ``d`` instead, because the
+    gathered [n, d] matrix also stays in VMEM (see docs/kernels.md).
+    """
+    from repro.kernels.vbyte_decode import dispatch
+
+    rng = np.random.default_rng(11)
+    values = np.sort(rng.integers(0, vocab, size=n_ints)).astype(np.uint64)
+    table = jnp.asarray(rng.standard_normal((vocab, d)).astype(np.float32))
+    query = jnp.asarray(rng.standard_normal((1, d)).astype(np.float32))
+
+    rows = []
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(values, format=fmt, differential=True)
+        ops = arr.device_operands()
+        nb = arr.n_blocks
+        extras = {
+            "bag_sum": {"table": table},
+            "dot_score": {"table": table, "query": query},
+            "adjacency_rebase": {"edge_base": jnp.asarray(
+                rng.integers(0, vocab, (nb, 128)).astype(np.int32))},
+        }
+        def legacy_bag(eops=extras["bag_sum"]):
+            # the pre-dispatch consumer chain for compressed bags: decode to a
+            # host-visible id array (CompressedIntArray.decode returns numpy —
+            # the decoded stream's full round trip), re-upload, gather+sum
+            ids = jnp.asarray(arr.decode(plan="jnp"))
+            grid = jnp.zeros(nb * 128, jnp.uint32).at[: ids.shape[0]].set(ids)
+            from repro.kernels.vbyte_decode.dispatch import _apply_only
+
+            return _apply_only(grid.reshape(nb, 128), ops["counts"], eops,
+                               epilogue="bag_sum")
+
+        for ep, eops in extras.items():
+            fns = {
+                plan: (lambda plan=plan, ep=ep, eops=eops: dispatch.decode(
+                    ops, format=fmt, block_size=128, differential=True,
+                    epilogue=ep, epilogue_operands=eops, plan=plan))
+                for plan in ("fused", "unfused")
+            }
+            if ep == "bag_sum":
+                fns["legacy_host"] = legacy_bag
+            times = _bench_interleaved(fns, reps)
+            row = {
+                "format": fmt,
+                "epilogue": ep,
+                "n_ints": n_ints,
+                "d": d,
+                "reps": reps,
+                "bits_per_int": round(arr.bits_per_int, 2),
+                "fused_mis": round(arr.n / times["fused"] / 1e6, 1),
+                "unfused_mis": round(arr.n / times["unfused"] / 1e6, 1),
+                "fused_speedup": round(times["unfused"] / times["fused"], 2),
+            }
+            if ep == "bag_sum":
+                row["legacy_host_mis"] = round(
+                    arr.n / times["legacy_host"] / 1e6, 1)
+                row["fused_speedup_vs_legacy"] = round(
+                    times["legacy_host"] / times["fused"], 2)
+            rows.append(row)
+    return rows
+
+
 def tpu_projection(bits_per_int: float = 16.9) -> dict:
     """Roofline projection of the Pallas kernel on the TPU v5e target.
 

@@ -5,8 +5,13 @@ One benchmark per paper table/figure (+ framework-level extensions):
   buffered           — §V last ¶ (decode-to-L1-buffer vs full stream)
   compression_ratio  — §V bits/int by group + blocked-layout overhead
   integrations       — compression of the framework's real id streams
-  kernel_check       — Pallas kernel equivalence sweep (interpret mode)
+  kernel_check       — Pallas kernel + fused-epilogue parity sweep
+  fused              — fused vs unfused decode→consume epilogues (+ autotune)
   roofline           — table from the dry-run artifacts (if present)
+
+Results are written as machine-readable JSON (``--json``, default
+``experiments/benchmarks.json``) so the perf trajectory is tracked across
+PRs instead of being lost in stdout.
 """
 from __future__ import annotations
 
@@ -17,14 +22,17 @@ import time
 import numpy as np
 
 
-def bench_kernel_check():
+def bench_kernel_check(quick: bool = False):
+    import jax.numpy as jnp
+
     from repro.core.compressed_array import CompressedIntArray
-    from repro.kernels.vbyte_decode import (vbyte_decode_blocked,
+    from repro.kernels.vbyte_decode import (dispatch, vbyte_decode_blocked,
                                             vbyte_decode_blocked_ref)
 
     rng = np.random.default_rng(0)
     checked = 0
-    for n in (128, 1000, 4096):
+    sizes = (1000,) if quick else (128, 1000, 4096)
+    for n in sizes:
         for diff in (False, True):
             vals = (np.sort(rng.integers(0, 2**31, n)) if diff
                     else rng.integers(0, 2**32, n)).astype(np.uint64)
@@ -39,17 +47,49 @@ def bench_kernel_check():
             assert np.array_equal(svb.decode(use_kernel=True),
                                   svb.decode_scalar_oracle())
             checked += 1
+
+    # fused epilogue parity: Pallas-fused == jnp-fused == unfused reference
+    vals = np.sort(rng.integers(0, 4096, 640)).astype(np.uint64)
+    table = jnp.asarray(rng.standard_normal((4096, 16)).astype(np.float32))
+    query = jnp.asarray(rng.standard_normal((1, 16)).astype(np.float32))
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(vals, format=fmt, differential=True)
+        ops = arr.device_operands()
+        eb = jnp.asarray(rng.integers(0, 4096, (arr.n_blocks, 128))
+                         .astype(np.int32))
+        for ep, eops in (("bag_sum", {"table": table}),
+                         ("dot_score", {"table": table, "query": query}),
+                         ("adjacency_rebase", {"edge_base": eb})):
+            outs = []
+            for plan in ("kernel", "jnp", "unfused"):
+                o = dispatch.decode(ops, format=fmt, block_size=128,
+                                    differential=True, epilogue=ep,
+                                    epilogue_operands=eops, plan=plan)
+                outs.append([np.asarray(x) for x in
+                             (o if isinstance(o, tuple) else (o,))])
+            for other in outs[1:]:
+                assert all(np.array_equal(x, y)
+                           for x, y in zip(outs[0], other)), (fmt, ep)
+            checked += 1
     return {"kernel_vs_oracle_cases": checked, "all_equal": True,
-            "formats": ["vbyte", "streamvbyte"]}
+            "formats": ["vbyte", "streamvbyte"],
+            "fused_epilogues": ["bag_sum", "dot_score", "adjacency_rebase"]}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="decode_speed|compression|kernel|roofline")
-    ap.add_argument("--json", default="experiments/benchmarks.json")
+                    help="decode_speed|compression|kernel|fused|roofline")
+    ap.add_argument("--json", default=None,
+                    help="output path (default experiments/benchmarks.json; "
+                         "--quick runs write the untracked -quick variant so "
+                         "tiny-size noise never overwrites the tracked "
+                         "cross-PR trajectory)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = ("experiments/benchmarks-quick.json" if args.quick
+                     else "experiments/benchmarks.json")
 
     results = {}
     t0 = time.time()
@@ -94,9 +134,40 @@ def main():
         results["integrations"] = integ
 
     if want("kernel"):
-        print("== pallas kernel equivalence sweep ==")
-        results["kernel_check"] = bench_kernel_check()
+        print("== pallas kernel + fused-epilogue parity sweep ==")
+        results["kernel_check"] = bench_kernel_check(quick=args.quick)
         print(f"  {results['kernel_check']}")
+
+    if want("fused"):
+        from benchmarks import decode_speed
+
+        n = 1 << 14 if args.quick else 1 << 18
+        print("== fused vs unfused decode→consume epilogues ==")
+        rows = decode_speed.run_fused(n_ints=n,
+                                      reps=4 if args.quick else 10)
+        for r in rows:
+            extra = (f"  legacy_host={r['legacy_host_mis']} mis "
+                     f"({r['fused_speedup_vs_legacy']}x)"
+                     if "legacy_host_mis" in r else "")
+            print(f"  {r['format']:>11}/{r['epilogue']:<16} "
+                  f"fused={r['fused_mis']:>6} mis  "
+                  f"unfused={r['unfused_mis']:>6} mis  "
+                  f"speedup={r['fused_speedup']}x{extra}")
+        results["fused"] = rows
+        from repro.kernels.vbyte_decode import dispatch
+
+        # quick runs measure tiny sizes — keep their noisy plans out of the
+        # tracked cache that plan="auto" consults
+        cache_file = ("experiments/autotune-quick.json" if args.quick
+                      else dispatch.cache_path())
+        print(f"== autotune: measuring dispatch plans -> {cache_file} ==")
+        cache = dispatch.autotune(
+            n_blocks=8 if args.quick else 64,
+            reps=2 if args.quick else 5,
+            cache_file=cache_file)
+        picks = {k: v["plan"] for k, v in cache.items()}
+        results["autotune"] = picks
+        print(f"  {len(picks)} workload keys cached")
 
     if want("roofline"):
         from benchmarks import roofline
@@ -108,9 +179,18 @@ def main():
 
     results["wall_s"] = round(time.time() - t0, 1)
     import os
-    os.makedirs("experiments", exist_ok=True)
+    os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+    # merge into the existing file so partial (--only) runs accumulate and
+    # the perf trajectory survives across invocations/PRs
+    try:
+        with open(args.json) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        merged = {}
+    merged.update(results)
+    merged["updated_at"] = time.strftime("%Y-%m-%d %H:%M:%S")
     with open(args.json, "w") as f:
-        json.dump(results, f, indent=1)
+        json.dump(merged, f, indent=1)
     print(f"done in {results['wall_s']}s -> {args.json}")
 
 

@@ -41,9 +41,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from .vbyte import encode as venc
-from .vbyte import masked as vmasked
 from .vbyte import ref as vref
-from .vbyte import stream_masked as svb_masked
 from .vbyte import stream_vbyte as svb
 
 FORMATS = ("vbyte", "streamvbyte")
@@ -84,6 +82,36 @@ class CompressedIntArray:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
         return cls(enc)
 
+    @classmethod
+    def encode_ragged(
+        cls,
+        lists,
+        *,
+        format: str = "vbyte",
+        block_size: int = 128,
+        differential: bool = False,
+        stride_multiple: int = 128,
+    ) -> "CompressedIntArray":
+        """Encode ragged id bags: block b holds list b (≤ block_size ids).
+
+        The one-bag-per-block layout feeds the fused bag-sum / dot-score
+        kernel epilogues (``repro.kernels.vbyte_decode.dispatch``) — one
+        kernel block reduces straight to one output row, so the decoded ids
+        never leave VMEM. With ``differential=True`` each (sorted) list is
+        delta-encoded independently, first gap absolute, ``bases`` all zero.
+        """
+        if format == "vbyte":
+            enc = venc.encode_ragged_blocked(
+                lists, block_size=block_size, differential=differential,
+                stride_multiple=stride_multiple)
+        elif format == "streamvbyte":
+            enc = svb.encode_ragged_blocked(
+                lists, block_size=block_size, differential=differential,
+                stride_multiple=stride_multiple)
+        else:
+            raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
+        return cls(enc)
+
     # -- metadata ----------------------------------------------------------
     @property
     def format(self) -> str:
@@ -92,6 +120,10 @@ class CompressedIntArray:
             if isinstance(self.enc, svb.StreamVByteEncoding)
             else "vbyte"
         )
+
+    @property
+    def ragged(self) -> bool:
+        return getattr(self.enc, "ragged", False)
 
     @property
     def n(self) -> int:
@@ -127,26 +159,39 @@ class CompressedIntArray:
         }
 
     # -- decoding ------------------------------------------------------------
-    def decode(self, *, use_kernel: bool = False) -> np.ndarray:
-        """Decode to uint32[n] (host-visible)."""
-        kw = dict(
-            block_size=self.enc.block_size, differential=self.enc.differential
-        )
-        if use_kernel:
-            from repro.kernels.vbyte_decode import ops as kops
+    def decode_blocked(self, *, plan="auto"):
+        """Decode on device to the padded uint32[n_blocks, block_size] grid.
 
-            fn = (
-                kops.stream_vbyte_decode_blocked
-                if self.format == "streamvbyte"
-                else kops.vbyte_decode_blocked
-            )
-            out = fn(**self.device_operands(), **kw)
-        elif self.format == "streamvbyte":
-            out = svb_masked.decode_blocked(**self.device_operands(), **kw)
-        else:
-            out = vmasked.decode_blocked(**self.device_operands(), **kw)
-        flat = np.asarray(out).reshape(-1)[: self.n]
-        return flat.astype(np.uint32)
+        ``plan`` is a dispatch plan name or ``DecodePlan``
+        (``repro.kernels.vbyte_decode.dispatch``): ``"auto"`` consults the
+        autotune cache, ``"kernel"``/``"jnp"`` force the Pallas / pure-jnp
+        path.
+        """
+        from repro.kernels.vbyte_decode import dispatch
+
+        return dispatch.decode(
+            self.device_operands(),
+            format=self.format,
+            block_size=self.enc.block_size,
+            differential=self.enc.differential,
+            plan=plan,
+        )
+
+    def decode(self, *, use_kernel: bool | None = None, plan="auto") -> np.ndarray:
+        """Decode to uint32[n] (host-visible).
+
+        ``use_kernel`` is the legacy boolean (True → Pallas kernel, False →
+        jnp decoder); it maps onto the dispatch plan and is kept for
+        back-compat. Prefer ``plan=``.
+        """
+        if use_kernel is not None:
+            plan = "kernel" if use_kernel else "jnp"
+        grid = np.asarray(self.decode_blocked(plan=plan))
+        if self.ragged:  # block b holds list b: concatenate the valid prefixes
+            mask = (np.arange(self.enc.block_size)[None, :]
+                    < np.asarray(self.enc.counts)[:, None])
+            return grid[mask].astype(np.uint32)
+        return grid.reshape(-1)[: self.n].astype(np.uint32)
 
     def decode_scalar_oracle(self) -> np.ndarray:
         """Byte-at-a-time reference decode (slow; tests/benchmarks only)."""

@@ -81,6 +81,7 @@ class BlockedEncoding:
     n: int  # total integers
     block_size: int
     differential: bool
+    ragged: bool = False  # one independent list (bag) per block
 
     @property
     def n_blocks(self) -> int:
@@ -224,4 +225,70 @@ def encode_blocked(
         n=n,
         block_size=block_size,
         differential=differential,
+    )
+
+
+def ragged_block_values(
+    lists, *, block_size: int, differential: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    """Shared ragged-bag layout: one independent list per block.
+
+    Returns ``(values [n_lists, block_size] uint64, counts [n_lists] int32)``
+    with each row holding list i (delta-encoded per row when
+    ``differential`` — first gap is the absolute id, so ``bases`` stay 0 and
+    every bag decodes self-contained, exactly the adjacency-row convention).
+    Used by both the VByte and Stream-VByte ragged encoders.
+    """
+    n_lists = max(1, len(lists))
+    counts = np.zeros(n_lists, dtype=np.int32)
+    vpad = np.zeros((n_lists, block_size), dtype=np.uint64)
+    for i, lst in enumerate(lists):
+        a = np.asarray(lst, dtype=np.uint64).ravel()
+        if a.size > block_size:
+            raise ValueError(
+                f"list {i} has {a.size} ids > block_size={block_size}")
+        counts[i] = a.size
+        if differential:
+            a = delta_encode(a)
+        vpad[i, : a.size] = a
+    return vpad, counts
+
+
+def encode_ragged_blocked(
+    lists,
+    *,
+    block_size: int = 128,
+    differential: bool = False,
+    stride_multiple: int = 128,
+    min_stride: int | None = None,
+) -> BlockedEncoding:
+    """Encode ragged id bags: block b holds list b (≤ block_size ids).
+
+    The layout feeds the fused bag-sum/dot-score epilogues directly: one
+    kernel block = one bag = one output row. ``counts`` carry the ragged
+    lengths; ``bases`` are all zero (per-row differential is self-based).
+    """
+    vpad, counts = ragged_block_values(
+        lists, block_size=block_size, differential=differential)
+    n_lists = vpad.shape[0]
+    data, lengths = _byte_matrix(vpad.reshape(-1))
+    lengths = lengths.reshape(n_lists, block_size)
+    lengths[np.arange(block_size)[None, :] >= counts[:, None]] = 0
+    payload = scatter_blocked_payload(
+        data,
+        lengths.reshape(-1),
+        n_blocks=n_lists,
+        block_size=block_size,
+        max_bytes=MAX_BYTES_PER_INT,
+        stride_multiple=stride_multiple,
+        min_stride=min_stride,
+    )
+    return BlockedEncoding(
+        payload=payload,
+        counts=counts,
+        bases=np.zeros(n_lists, dtype=np.uint32),
+        n=int(counts.sum()),
+        block_size=block_size,
+        differential=differential,
+        ragged=True,
     )

@@ -115,6 +115,7 @@ class StreamVByteEncoding:
     n: int  # total integers
     block_size: int
     differential: bool
+    ragged: bool = False  # one independent list (bag) per block
 
     @property
     def n_blocks(self) -> int:
@@ -200,6 +201,56 @@ def encode_blocked(
         n=n,
         block_size=block_size,
         differential=differential,
+    )
+
+
+def encode_ragged_blocked(
+    lists,
+    *,
+    block_size: int = 128,
+    differential: bool = False,
+    stride_multiple: int = 128,
+    min_stride: int | None = None,
+) -> StreamVByteEncoding:
+    """Encode ragged id bags: block b holds list b (≤ block_size ids).
+
+    Stream-VByte twin of ``encode.encode_ragged_blocked`` — same one-bag-
+    per-block layout for the fused bag-sum/dot-score epilogues, with the
+    lengths in the control stream (pad slots get code 0; masking by
+    ``counts`` is load-bearing as everywhere else).
+    """
+    if block_size % 4:
+        raise ValueError(f"block_size={block_size} must be a multiple of 4")
+    from .encode import ragged_block_values, scatter_blocked_payload
+
+    vpad, counts = ragged_block_values(
+        lists, block_size=block_size, differential=differential)
+    n_lists = vpad.shape[0]
+    data_mat, lengths = _byte_matrix(vpad.reshape(-1))
+    lengths = lengths.reshape(n_lists, block_size)
+    pad_slot = np.arange(block_size)[None, :] >= counts[:, None]
+    lengths[pad_slot] = 0
+
+    codes = (np.maximum(lengths, 1) - 1).astype(np.uint8)  # pad slots: code 0
+    control = pack_control(codes.reshape(-1)).reshape(n_lists, block_size // 4)
+    data = scatter_blocked_payload(
+        data_mat,
+        lengths.reshape(-1),
+        n_blocks=n_lists,
+        block_size=block_size,
+        max_bytes=MAX_BYTES_PER_INT,
+        stride_multiple=stride_multiple,
+        min_stride=min_stride,
+    )
+    return StreamVByteEncoding(
+        control=control,
+        data=data,
+        counts=counts,
+        bases=np.zeros(n_lists, dtype=np.uint32),
+        n=int(counts.sum()),
+        block_size=block_size,
+        differential=differential,
+        ragged=True,
     )
 
 

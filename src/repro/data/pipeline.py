@@ -17,13 +17,17 @@ from repro.core.compressed_array import CompressedIntArray
 
 class CompressedTokenPipeline:
     def __init__(self, tokens: np.ndarray, batch: int, seq_len: int,
-                 *, use_kernel: bool = True, block_size: int = 128):
+                 *, use_kernel: bool | None = None, plan="auto",
+                 block_size: int = 128):
         self.tokens = np.asarray(tokens, dtype=np.uint64)
         self.batch = batch
         self.seq_len = seq_len
         self.step_tokens = batch * (seq_len + 1)
         self.n_steps = len(self.tokens) // self.step_tokens
-        self.use_kernel = use_kernel
+        # dispatch plan (repro.kernels.vbyte_decode.dispatch); use_kernel is
+        # the legacy boolean alias
+        self.plan = ("kernel" if use_kernel else "jnp") \
+            if use_kernel is not None else plan
         self.block_size = block_size
         if self.n_steps == 0:
             raise ValueError("token stream shorter than one step")
@@ -38,7 +42,7 @@ class CompressedTokenPipeline:
     def get_batch(self, step: int) -> dict:
         """Decode shard `step` on device -> {"tokens": [B, S+1] int32}."""
         arr = self.shard(step)
-        flat = arr.decode(use_kernel=self.use_kernel)[: self.step_tokens]
+        flat = arr.decode(plan=self.plan)[: self.step_tokens]
         toks = jnp.asarray(flat.astype(np.int32)).reshape(self.batch, self.seq_len + 1)
         return {"tokens": toks}
 

@@ -1,2 +1,8 @@
-from .ops import stream_vbyte_decode_blocked, vbyte_decode_blocked  # noqa: F401
+from .dispatch import DecodePlan, autotune, decode, resolve_plan  # noqa: F401
+from .epilogues import EPILOGUES, apply_grid, fused_decode  # noqa: F401
+from .ops import (  # noqa: F401
+    normalize_block_meta,
+    stream_vbyte_decode_blocked,
+    vbyte_decode_blocked,
+)
 from .ref import vbyte_decode_blocked_ref  # noqa: F401

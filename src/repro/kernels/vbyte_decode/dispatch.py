@@ -1,0 +1,374 @@
+"""Autotuned dispatch for the blocked decode kernels (both formats).
+
+Single entry point (:func:`decode`) that picks the execution plan — Pallas
+kernel vs vectorized jnp decoder, fused vs unfused epilogue, ``block_tile``
+— replacing the ad-hoc ``use_kernel`` booleans that used to be threaded
+through ``compressed_array.py``, ``models/recsys.py`` and ``nn/gnn.py``.
+
+A :class:`DecodePlan` names one concrete path:
+
+* ``path="pallas"`` — the Pallas kernels (Mosaic on TPU, interpret on CPU).
+* ``path="jnp"``    — the vectorized jnp decoders (XLA-CPU SIMD proxy).
+* ``fused=True``    — decode and consumer epilogue run as ONE program: the
+  fused Pallas kernel on TPU, or a single jit (one XLA executable, no
+  materialized id-stream round-trip between dispatches) on CPU.
+* ``fused=False``   — two programs: decode the ``uint32 [n_blocks, B]``
+  grid, then apply the epilogue in a second dispatch (the legacy shape of
+  every call site before this layer existed).
+
+``plan="auto"`` consults a small measured autotune cache persisted under
+``experiments/autotune.json`` (:func:`autotune` populates it; run via
+``python -m benchmarks.run --only fused``). With no cache entry the
+heuristic default is the fused path on the current backend. Legacy string
+plans keep old call sites working: ``"kernel"`` → Pallas, ``"jnp"`` → jnp,
+``"fused"``/``"unfused"`` force fusion on the default path.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from dataclasses import asdict, dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.vbyte import masked as vmasked
+from repro.core.vbyte import stream_masked as svb_masked
+
+from . import epilogues as eplib
+from .ops import (normalize_block_meta, stream_vbyte_decode_blocked,
+                  vbyte_decode_blocked)
+
+# cache lives under the repo's experiments/ dir (resolved relative to this
+# file, NOT the process cwd — library call sites run from anywhere); the
+# REPRO_AUTOTUNE_CACHE env var overrides. Falls back to a cwd-relative path
+# when the source tree layout isn't present (installed package).
+_SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))  # <repo>/src in-tree
+DEFAULT_CACHE_PATH = (
+    os.path.join(os.path.dirname(_SRC_DIR), "experiments", "autotune.json")
+    if os.path.basename(_SRC_DIR) == "src"
+    else "experiments/autotune.json")
+
+# broadcast epilogue operands (embedding tables) above this size cannot be
+# VMEM-resident per grid step on TPU; the fused Pallas plan falls back to
+# pallas-decode + jnp epilogue (a vocab-tiled grid dimension with masked
+# partial sums is the real fix — see docs/kernels.md §TPU notes)
+VMEM_BROADCAST_BUDGET = 4 << 20
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """One concrete decode execution plan (see module docstring)."""
+
+    path: str  # "pallas" | "jnp" | "ref" (gather-lowered; GSPMD-friendly)
+    fused: bool = True
+    block_tile: int = 8
+
+    def __post_init__(self):
+        if self.path not in ("pallas", "jnp", "ref"):
+            raise ValueError(f"unknown plan path {self.path!r}")
+
+    @property
+    def label(self) -> str:
+        return f"{self.path}{'_fused' if self.fused else '_unfused'}" \
+               + (f"_bt{self.block_tile}" if self.path == "pallas" else "")
+
+
+# ---------------------------------------------------------------------------
+# plan resolution + persisted autotune cache
+# ---------------------------------------------------------------------------
+_CACHE: dict | None = None
+_CACHE_FILE: str | None = None
+
+
+def cache_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE", DEFAULT_CACHE_PATH)
+
+
+def cache_key(format: str, epilogue: str, block_size: int,
+              backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{backend}/{format}/{epilogue}/bs{block_size}"
+
+
+def load_cache(path: str | None = None, *, reload: bool = False) -> dict:
+    global _CACHE, _CACHE_FILE
+    path = path or cache_path()
+    if _CACHE is None or _CACHE_FILE != path or reload:
+        _CACHE_FILE = path
+        try:
+            with open(path) as f:
+                _CACHE = json.load(f)
+        except (OSError, ValueError):
+            _CACHE = {}
+    return _CACHE
+
+
+def default_plan(epilogue: str = "stream") -> DecodePlan:
+    """Heuristic when the cache has no measurement for a workload."""
+    if jax.default_backend() == "tpu":
+        return DecodePlan("pallas", fused=True, block_tile=8)
+    # CPU proxy: interpret-mode Pallas is a correctness path, not a perf
+    # path; the jnp decoders vectorize through XLA-CPU. Fusion still wins
+    # (one executable, no id-stream round-trip) — see benchmarks.json.
+    return DecodePlan("jnp", fused=True)
+
+
+def resolve_plan(plan, *, format: str, epilogue: str,
+                 block_size: int) -> DecodePlan:
+    if isinstance(plan, DecodePlan):
+        return plan
+    if plan in (None, "auto"):
+        entry = load_cache().get(cache_key(format, epilogue, block_size))
+        if entry and "plan" in entry:
+            p = entry["plan"]
+            return DecodePlan(p["path"], p["fused"], p.get("block_tile", 8))
+        return default_plan(epilogue)
+    if plan in ("kernel", "pallas"):
+        return DecodePlan("pallas", fused=True)
+    if plan == "jnp":
+        return DecodePlan("jnp", fused=True)
+    if plan == "ref":
+        return DecodePlan("ref", fused=False)
+    if plan == "fused":
+        return DecodePlan(default_plan(epilogue).path, fused=True)
+    if plan == "unfused":
+        return DecodePlan(default_plan(epilogue).path, fused=False)
+    raise ValueError(
+        f"unknown plan {plan!r}; expected a DecodePlan or one of "
+        "'auto', 'kernel', 'pallas', 'jnp', 'fused', 'unfused'")
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+def _decode_grid(operands: dict, *, format: str, block_size: int,
+                 differential: bool, plan: DecodePlan) -> jax.Array:
+    """Step-1 decode to the uint32 [n_blocks, block_size] grid."""
+    if plan.path == "pallas":
+        fn = (vbyte_decode_blocked if format == "vbyte"
+              else stream_vbyte_decode_blocked)
+        return fn(**operands, block_size=block_size, differential=differential,
+                  block_tile=plan.block_tile)
+    if plan.path == "ref":
+        if format != "vbyte":
+            raise ValueError(
+                "plan path 'ref' (the gather-lowered decoder) only exists "
+                f"for format='vbyte'; got {format!r} — stream_masked is "
+                "already gather-based, use path 'jnp'")
+        # gather-lowered decoder: the scatter-based masked path emits a
+        # cross-shard scatter-add under GSPMD; the searchsorted/gather
+        # lowering stays block-local (§Perf retrieval iteration 2)
+        from .ref import vbyte_decode_blocked_ref
+
+        return vbyte_decode_blocked_ref(
+            **operands, block_size=block_size, differential=differential)
+    dec = vmasked.decode_blocked if format == "vbyte" \
+        else svb_masked.decode_blocked
+    return dec(**operands, block_size=block_size, differential=differential)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("format", "epilogue", "block_size", "differential")
+)
+def _jnp_fused(operands: dict, extras: dict, *, format: str, epilogue: str,
+               block_size: int, differential: bool):
+    """Fused CPU path: decode + epilogue in ONE XLA executable.
+
+    The optimization barrier pins the decoded grid as a fusion boundary:
+    without it XLA-CPU may inline the whole decode into the epilogue's
+    gather-index computation (producer recompute), which is slower than
+    keeping the grid as an in-executable intermediate. The grid still never
+    crosses a dispatch boundary — that round trip is what fusion removes.
+    """
+    dec = vmasked.decode_blocked if format == "vbyte" \
+        else svb_masked.decode_blocked
+    grid = dec(**operands, block_size=block_size, differential=differential)
+    grid = lax.optimization_barrier(grid)
+    return eplib.apply_grid(epilogue, grid, operands["counts"], extras)
+
+
+@functools.partial(jax.jit, static_argnames=("epilogue",))
+def _apply_only(grid: jax.Array, counts: jax.Array, extras: dict, *,
+                epilogue: str):
+    """Unfused step 2: the epilogue as its own dispatch (reference shape)."""
+    return eplib.apply_grid(epilogue, grid, counts, extras)
+
+
+def decode(
+    operands: dict,  # device_operands(): payload|control/data + counts/bases
+    *,
+    format: str,
+    block_size: int,
+    differential: bool,
+    epilogue: str = "stream",
+    epilogue_operands: dict | None = None,
+    plan: DecodePlan | str | None = "auto",
+    interpret: bool | None = None,
+):
+    """Decode a blocked compressed stream, optionally fused into a consumer.
+
+    Returns the epilogue's output: the ``uint32 [n_blocks, block_size]``
+    grid for ``epilogue="stream"``, ``[n_blocks, d]`` bag sums for
+    ``"bag_sum"``, ``(ids, scores)`` for ``"dot_score"``, rebased edge ids
+    for ``"adjacency_rebase"``.
+    """
+    if format not in eplib.FORMAT_OPERANDS:
+        raise ValueError(f"unknown format {format!r}; expected one of "
+                         f"{tuple(eplib.FORMAT_OPERANDS)}")
+    ep = eplib.get_epilogue(epilogue)
+    extras = dict(epilogue_operands or {})
+    ep.check(differential, extras)
+    p = resolve_plan(plan, format=format, epilogue=epilogue,
+                     block_size=block_size)
+
+    fmt_keys = eplib.FORMAT_OPERANDS[format] + ("counts", "bases")
+    missing = [k for k in fmt_keys if k not in operands]
+    if missing:
+        raise ValueError(f"format {format!r} operands missing {missing}")
+    nb = operands[fmt_keys[0]].shape[0]
+    operands = dict(operands)
+    operands["counts"] = normalize_block_meta("counts", operands["counts"], nb)
+    operands["bases"] = normalize_block_meta("bases", operands["bases"], nb)
+
+    if epilogue == "stream":
+        return _decode_grid(operands, format=format, block_size=block_size,
+                            differential=differential, plan=p)
+
+    if p.path == "pallas" and p.fused:
+        # broadcast extras (tables) must be VMEM-resident per grid step;
+        # past the budget, degrade to pallas-decode + jnp epilogue instead
+        # of failing Mosaic compilation (docs/kernels.md §TPU notes)
+        broadcast_bytes = sum(
+            int(np.prod(v.shape)) * v.dtype.itemsize
+            for k, v in extras.items() if k not in ep.tiled_extras)
+        if broadcast_bytes <= VMEM_BROADCAST_BUDGET:
+            return eplib.fused_decode(
+                operands, extras, format=format, epilogue=epilogue,
+                block_size=block_size, differential=differential,
+                block_tile=p.block_tile, interpret=interpret)
+        p = DecodePlan("pallas", fused=False, block_tile=p.block_tile)
+    if p.path == "jnp" and p.fused:
+        return _jnp_fused(operands, extras, format=format, epilogue=epilogue,
+                          block_size=block_size, differential=differential)
+    # unfused: decode grid, then the epilogue as a second dispatch
+    grid = _decode_grid(operands, format=format, block_size=block_size,
+                        differential=differential, plan=p)
+    return _apply_only(grid, operands["counts"], extras, epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# measured autotune
+# ---------------------------------------------------------------------------
+def _time_call(fn, *, reps: int, warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    del out
+    return (time.perf_counter() - t0) / reps
+
+
+def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
+                        vocab: int, d: int, seed: int):
+    from repro.core.compressed_array import CompressedIntArray
+
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_size
+    values = np.sort(rng.integers(0, vocab, size=n)).astype(np.uint64)
+    arr = CompressedIntArray.encode(values, format=format,
+                                    block_size=block_size, differential=True)
+    operands = arr.device_operands()
+    nb = arr.n_blocks
+    extras = {
+        "bag_sum": {"table": jnp.asarray(
+            rng.standard_normal((vocab, d)).astype(np.float32))},
+        "dot_score": {"table": jnp.asarray(
+            rng.standard_normal((vocab, d)).astype(np.float32)),
+            "query": jnp.asarray(
+                rng.standard_normal((1, d)).astype(np.float32))},
+        "adjacency_rebase": {"edge_base": jnp.asarray(
+            rng.integers(0, vocab, (nb, block_size)).astype(np.int32))},
+        "stream": {},
+    }
+    return operands, extras, arr.bits_per_int
+
+
+def autotune(
+    *,
+    formats=("vbyte", "streamvbyte"),
+    epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase"),
+    block_size: int = 128,
+    n_blocks: int = 64,
+    vocab: int = 4096,
+    d: int = 64,
+    reps: int = 5,
+    warmup: int = 2,
+    include_pallas: bool | None = None,
+    cache_file: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Measure candidate plans per (format, epilogue) and persist the best.
+
+    On CPU the Pallas candidates run in interpret mode (orders of magnitude
+    off their Mosaic speed), so they are excluded unless ``include_pallas``
+    is forced — the CPU cache then records the jnp fused-vs-unfused choice,
+    and a TPU run of the same function writes its own keys.
+    """
+    backend = jax.default_backend()
+    if include_pallas is None:
+        include_pallas = backend == "tpu"
+    cache_file = cache_file or cache_path()
+    cache = dict(load_cache(cache_file))
+
+    for fmt in formats:
+        operands, extras_by_ep, bits = _synthetic_workload(
+            fmt, n_blocks=n_blocks, block_size=block_size, vocab=vocab, d=d,
+            seed=seed)
+        for ep_name in epilogue_names:
+            if ep_name == "stream":
+                # no consumer: fused vs unfused is the same program — only
+                # the decoder path / block tile are real degrees of freedom
+                candidates = [DecodePlan("jnp", True)]
+                if fmt == "vbyte":
+                    candidates.append(DecodePlan("ref", False))
+                if include_pallas:
+                    candidates += [DecodePlan("pallas", True, bt)
+                                   for bt in (8, 16)]
+            else:
+                candidates = [DecodePlan("jnp", True), DecodePlan("jnp", False)]
+                if include_pallas:
+                    candidates += [DecodePlan("pallas", True, bt)
+                                   for bt in (8, 16)]
+                    candidates += [DecodePlan("pallas", False, 8)]
+            timings = {}
+            for cand in candidates:
+                fn = functools.partial(
+                    decode, operands, format=fmt, block_size=block_size,
+                    differential=True, epilogue=ep_name,
+                    epilogue_operands=extras_by_ep[ep_name], plan=cand)
+                timings[cand.label] = round(
+                    _time_call(fn, reps=reps, warmup=warmup) * 1e3, 4)
+            best = min(candidates, key=lambda c: timings[c.label])
+            cache[cache_key(fmt, ep_name, block_size, backend)] = {
+                "plan": asdict(best),
+                "candidates_ms": timings,
+                "backend": backend,
+                "workload": {"n_blocks": n_blocks, "block_size": block_size,
+                             "vocab": vocab, "d": d,
+                             "bits_per_int": round(bits, 2)},
+                "measured_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+            }
+
+    os.makedirs(os.path.dirname(cache_file) or ".", exist_ok=True)
+    with open(cache_file, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    load_cache(cache_file, reload=True)
+    return cache

@@ -1,0 +1,304 @@
+"""Pluggable fused decode→consume epilogues for the blocked decode kernels.
+
+The paper's decoder is memory-bound: once the mask/shuffle math is
+restructured (kernel.py, stream_kernel.py), the cost is the byte stream in
+and the uint32 stream out. Every real consumer in this repo — embedding-bag
+over id bags, retrieval dot-scoring, adjacency reconstruction — immediately
+gathers/reduces that uint32 stream back out of HBM. Fusing the consumer into
+the kernel epilogue removes the decoded stream's HBM round-trip entirely:
+the ids live and die in VMEM (the Stream VByte lesson — keep routing
+metadata next to the compute — applied one level up the stack).
+
+An :class:`Epilogue` is a pure function over the decode-tile contract
+
+    ``(vals int32 [..., B], valid bool [..., B], **extras) -> out``
+
+plus the Pallas plumbing metadata (extra-operand block specs, output
+shapes). The SAME ``apply`` function executes inside the Pallas kernel body
+(on a ``[block_tile, B]`` VMEM tile) and on the full ``[n_blocks, B]`` jnp
+grid (:func:`apply_grid`, the unfused reference / CPU path) — so the fused
+and unfused paths agree bit-exactly by construction.
+
+Registered epilogues:
+
+* ``stream``           — raw decoded integers (the identity epilogue; the
+                         fused differential prefix sum of PR 0 is the
+                         ``differential=True`` flavor of this).
+* ``bag_sum``          — gather-sum embedding bag: one bag per block;
+                         ``out[t] = Σ_j valid·table[ids[t,j]]`` in VMEM.
+* ``dot_score``        — retrieval scoring: decoded candidate ids gather
+                         item vectors and dot against a query; returns
+                         ``(ids, scores)`` so the [C, d] candidate-vector
+                         matrix never exists in HBM.
+* ``adjacency_rebase`` — GNN adjacency: per-edge ``incl - row_gap_base``
+                         subtraction fused into the differential epilogue.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .kernel import decode_tile, prefix_sum_tile
+from .stream_kernel import stream_decode_tile
+
+FORMAT_OPERANDS = {"vbyte": ("payload",), "streamvbyte": ("control", "data")}
+
+
+# ---------------------------------------------------------------------------
+# epilogue bodies — pure jnp on the decode-tile contract. Reductions are per
+# output element (axis-local), so tile-vs-grid leading dims don't change the
+# accumulation order: fused == unfused bit-exactly.
+# ---------------------------------------------------------------------------
+def _stream_apply(vals, valid):
+    return vals
+
+
+def _bag_sum_apply(vals, valid, *, table):
+    T, B = vals.shape
+    ids = jnp.where(valid, vals, 0)  # masked slots gather row 0, zeroed below
+    vecs = jnp.take(table, ids.reshape(-1), axis=0, mode="clip")
+    vecs = vecs.reshape(T, B, -1)
+    vecs = jnp.where(valid[:, :, None], vecs, 0)
+    return vecs.sum(axis=1)  # [T, d]
+
+
+def _dot_score_apply(vals, valid, *, table, query):
+    T, B = vals.shape
+    ids = jnp.where(valid, vals, 0)  # pad slots score id 0 (the pad row)
+    vecs = jnp.take(table, ids.reshape(-1), axis=0, mode="clip")
+    vecs = vecs.reshape(T, B, -1)
+    scores = jnp.einsum("tbd,d->tb", vecs, query.reshape(-1))
+    return ids, scores.astype(jnp.float32)
+
+
+def _adjacency_rebase_apply(vals, valid, *, edge_base):
+    # u32 wrap-around subtraction ≡ int32 subtraction, bitwise
+    return jnp.where(valid, vals - edge_base, 0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def _grid_out(nb, B, bt, dtype):
+    return (jax.ShapeDtypeStruct((nb, B), dtype),
+            pl.BlockSpec((bt, B), lambda g: (g, 0)))
+
+
+def _whole_spec(arr):
+    """Broadcast operand: the full array is resident every grid step."""
+    return pl.BlockSpec(arr.shape, lambda g: (0,) * arr.ndim)
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """One fused decode→consume epilogue (see module docstring)."""
+
+    name: str
+    apply: Callable[..., Any]
+    extras: tuple[str, ...] = ()
+    tiled_extras: tuple[str, ...] = ()  # extras sliced per tile like the grid
+    requires_differential: bool | None = None  # None = either
+    # (n_blocks, block_size, block_tile, extras dict) -> (out_shape, out_spec)
+    # — single structs or tuples of structs for multi-output epilogues
+    out_info: Callable[..., tuple] = None
+
+    def check_extras(self, extras: dict) -> None:
+        missing = [k for k in self.extras if k not in extras]
+        extra = [k for k in extras if k not in self.extras]
+        if missing or extra:
+            raise ValueError(
+                f"epilogue {self.name!r} takes operands {self.extras}; "
+                f"missing {missing}, unexpected {extra}")
+
+    def check(self, differential: bool, extras: dict) -> None:
+        self.check_extras(extras)
+        if (self.requires_differential is not None
+                and differential != self.requires_differential):
+            raise ValueError(
+                f"epilogue {self.name!r} requires "
+                f"differential={self.requires_differential}")
+
+
+def _stream_out(nb, B, bt, extras):
+    return _grid_out(nb, B, bt, jnp.int32)
+
+
+def _bag_sum_out(nb, B, bt, extras):
+    d = extras["table"].shape[1]
+    return (jax.ShapeDtypeStruct((nb, d), extras["table"].dtype),
+            pl.BlockSpec((bt, d), lambda g: (g, 0)))
+
+
+def _dot_score_out(nb, B, bt, extras):
+    ids, ids_spec = _grid_out(nb, B, bt, jnp.int32)
+    scores, scores_spec = _grid_out(nb, B, bt, jnp.float32)
+    return (ids, scores), (ids_spec, scores_spec)
+
+
+EPILOGUES = {
+    "stream": Epilogue("stream", _stream_apply, out_info=_stream_out),
+    "bag_sum": Epilogue("bag_sum", _bag_sum_apply, extras=("table",),
+                        out_info=_bag_sum_out),
+    "dot_score": Epilogue("dot_score", _dot_score_apply,
+                          extras=("table", "query"), out_info=_dot_score_out),
+    "adjacency_rebase": Epilogue(
+        "adjacency_rebase", _adjacency_rebase_apply, extras=("edge_base",),
+        tiled_extras=("edge_base",), requires_differential=True,
+        out_info=_stream_out),
+}
+
+
+def get_epilogue(name: str) -> Epilogue:
+    if name not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {name!r}; "
+                         f"expected one of {tuple(EPILOGUES)}")
+    return EPILOGUES[name]
+
+
+# ---------------------------------------------------------------------------
+# jnp grid path: the unfused reference (and the CPU fused-jit body)
+# ---------------------------------------------------------------------------
+def apply_grid(epilogue: str, grid_u32: jax.Array, counts: jax.Array,
+               extras: dict | None = None):
+    """Apply an epilogue to an already-decoded ``uint32 [n_blocks, B]`` grid.
+
+    This is the decode→jnp-consume reference the fused kernels must match
+    bit-exactly (same ``apply`` body, full grid instead of VMEM tiles).
+    """
+    ep = get_epilogue(epilogue)
+    extras = extras or {}
+    ep.check_extras(extras)
+    vals = lax.bitcast_convert_type(grid_u32, jnp.int32)
+    B = grid_u32.shape[1]
+    valid = (jnp.arange(B, dtype=jnp.int32)[None, :]
+             < counts.reshape(-1, 1).astype(jnp.int32))
+    return ep.apply(vals, valid, **extras)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas path: decode-tile core + epilogue in one kernel
+# ---------------------------------------------------------------------------
+def fused_decode_pallas(
+    format: str,
+    fmt_arrays: tuple,  # ("payload",) or ("control", "data") uint8 arrays
+    counts: jax.Array,  # int32 [n_blocks, 1]
+    bases: jax.Array,  # int32 [n_blocks, 1] (bitcast of uint32)
+    extras: dict,
+    *,
+    epilogue: str,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    interpret: bool = False,
+):
+    """Raw pallas_call builder: one pass over (decode tile → epilogue)."""
+    ep = get_epilogue(epilogue)
+    nb = fmt_arrays[0].shape[0]
+    if nb % block_tile:
+        raise ValueError(f"n_blocks={nb} must be a multiple of "
+                         f"block_tile={block_tile}")
+    grid = (nb // block_tile,)
+    n_fmt = len(fmt_arrays)
+    extra_names = ep.extras
+
+    fmt_specs = [pl.BlockSpec((block_tile, a.shape[1]), lambda g: (g, 0))
+                 for a in fmt_arrays]
+    meta_specs = [pl.BlockSpec((block_tile, 1), lambda g: (g, 0))] * 2
+    extra_specs = [
+        pl.BlockSpec((block_tile, extras[k].shape[1]), lambda g: (g, 0))
+        if k in ep.tiled_extras else _whole_spec(extras[k])
+        for k in extra_names
+    ]
+    out_shape, out_specs = ep.out_info(nb, block_size, block_tile, extras)
+    multi = isinstance(out_shape, tuple)
+
+    def kernel(*refs):
+        counts_ref, bases_ref = refs[n_fmt], refs[n_fmt + 1]
+        extra_vals = {k: refs[n_fmt + 2 + i][...]
+                      for i, k in enumerate(extra_names)}
+        out_refs = refs[n_fmt + 2 + len(extra_names):]
+        if format == "vbyte":
+            vals, valid = decode_tile(refs[0][...], counts_ref[...],
+                                      block_size=block_size)
+        else:
+            vals, valid = stream_decode_tile(refs[0][...], refs[1][...],
+                                             counts_ref[...],
+                                             block_size=block_size)
+        if differential:
+            vals = prefix_sum_tile(vals, valid, bases_ref[...])
+        res = ep.apply(vals, valid, **extra_vals)
+        for r, oref in zip(res if multi else (res,), out_refs):
+            oref[...] = r
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=fmt_specs + meta_specs + extra_specs,
+        out_specs=list(out_specs) if multi else out_specs,
+        out_shape=list(out_shape) if multi else out_shape,
+        interpret=interpret,
+    )(*fmt_arrays, counts, bases, *(extras[k] for k in extra_names))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("format", "epilogue", "block_size", "differential",
+                     "block_tile", "interpret"),
+)
+def fused_decode(
+    operands: dict,  # format operands incl. counts/bases (device_operands())
+    extras: dict,  # epilogue operands, e.g. {"table": ...}
+    *,
+    format: str,
+    epilogue: str,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    interpret: bool | None = None,
+):
+    """Public fused decode→epilogue entry (jit'd; both formats).
+
+    ``operands`` is exactly ``CompressedIntArray.device_operands()``;
+    ``counts``/``bases`` may be ``[n_blocks]`` or ``[n_blocks, 1]`` (see
+    ops.normalize_block_meta). Pads ``n_blocks`` to ``block_tile`` (padded
+    blocks have count 0) and trims every output back.
+    """
+    from .ops import _auto_interpret, normalize_block_meta
+
+    ep = get_epilogue(epilogue)
+    ep.check(differential, extras)
+    if interpret is None:
+        interpret = _auto_interpret()
+    fmt_names = FORMAT_OPERANDS.get(format)
+    if fmt_names is None:
+        raise ValueError(f"unknown format {format!r}")
+    fmt_arrays = tuple(operands[k] for k in fmt_names)
+    nb = fmt_arrays[0].shape[0]
+    counts = normalize_block_meta("counts", operands["counts"], nb)
+    bases = normalize_block_meta("bases", operands["bases"], nb)
+
+    pad = (-nb) % block_tile
+    if pad:
+        fmt_arrays = tuple(jnp.pad(a, ((0, pad), (0, 0))) for a in fmt_arrays)
+        counts = jnp.pad(counts, ((0, pad),))
+        bases = jnp.pad(bases, ((0, pad),))
+        extras = {k: (jnp.pad(v, ((0, pad), (0, 0)))
+                      if k in ep.tiled_extras else v)
+                  for k, v in extras.items()}
+
+    counts2 = counts.astype(jnp.int32)[:, None]
+    bases2 = lax.bitcast_convert_type(bases.astype(jnp.uint32), jnp.int32)[:, None]
+    out = fused_decode_pallas(
+        format, fmt_arrays, counts2, bases2, extras,
+        epilogue=epilogue, block_size=block_size, differential=differential,
+        block_tile=block_tile, interpret=interpret,
+    )
+    if isinstance(out, (tuple, list)):
+        return tuple(o[:nb] for o in out)
+    return out[:nb]

@@ -47,12 +47,20 @@ def _row_cumsum_exact_u32(x: jax.Array, incl_tri: jax.Array) -> jax.Array:
     return lo_s + (hi_s << 16)
 
 
-def _decode_tile_kernel(payload_ref, counts_ref, bases_ref, out_ref, *,
-                        block_size: int, differential: bool):
-    T, S = payload_ref.shape
+def decode_tile(payload: jax.Array, counts: jax.Array, *,
+                block_size: int) -> tuple[jax.Array, jax.Array]:
+    """Decode one VMEM tile of Masked-VByte bytes — the shared decode-tile core.
+
+    ``payload`` is the raw ``uint8 [T, S]`` tile, ``counts`` the ``int32
+    [T, 1]`` valid-integer counts. Returns ``(out, valid)``: ``out`` int32
+    ``[T, B]`` (bitcast of uint32, masked rows zeroed) and ``valid`` bool
+    ``[T, B]``. Pure jnp/lax — callable both from a Pallas kernel body and
+    from host-level code; every fused epilogue consumes this contract.
+    """
+    T, S = payload.shape
     B = block_size
 
-    b = payload_ref[...].astype(jnp.int32)  # [T, S] bytes
+    b = payload.astype(jnp.int32)  # [T, S] bytes
     cont = b >> 7
     end = 1 - cont
 
@@ -72,7 +80,7 @@ def _decode_tile_kernel(payload_ref, counts_ref, bases_ref, out_ref, *,
     pos = c1 * (1 + c2 * (1 + c3 * (1 + c4)))
 
     contrib = (b & 0x7F) << (7 * pos)  # int32, wraps ≡ uint32
-    keep = out_idx < counts_ref[...]  # [T,S] < [T,1]
+    keep = out_idx < counts  # [T,S] < [T,1]
     contrib = jnp.where(keep, contrib, 0)
     out_idx = jnp.where(keep, out_idx, B - 1)  # clamp masked bytes in-range
 
@@ -87,16 +95,31 @@ def _decode_tile_kernel(payload_ref, counts_ref, bases_ref, out_ref, *,
     out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T,B]
 
     jrow = lax.broadcasted_iota(jnp.int32, (T, B), 1)
-    valid = jrow < counts_ref[...]
+    valid = jrow < counts
     out = jnp.where(valid, out, 0)
+    return out, valid
 
+
+def prefix_sum_tile(out: jax.Array, valid: jax.Array, bases: jax.Array) -> jax.Array:
+    """Fused differential epilogue: inclusive row cumsum (mod 2^32) + bases.
+
+    ``out`` int32 [T, B] gap values, ``bases`` int32 [T, 1] carry-in
+    (bitcast of uint32). Shared by both format kernels.
+    """
+    B = out.shape[-1]
+    kk = lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    ll = lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    incl_tri = (kk <= ll).astype(jnp.float32)
+    out = _row_cumsum_exact_u32(out, incl_tri) + bases
+    return jnp.where(valid, out, 0)
+
+
+def _decode_tile_kernel(payload_ref, counts_ref, bases_ref, out_ref, *,
+                        block_size: int, differential: bool):
+    out, valid = decode_tile(payload_ref[...], counts_ref[...],
+                             block_size=block_size)
     if differential:
-        kk = lax.broadcasted_iota(jnp.int32, (B, B), 0)
-        ll = lax.broadcasted_iota(jnp.int32, (B, B), 1)
-        incl_tri = (kk <= ll).astype(jnp.float32)
-        out = _row_cumsum_exact_u32(out, incl_tri) + bases_ref[...]
-        out = jnp.where(valid, out, 0)
-
+        out = prefix_sum_tile(out, valid, bases_ref[...])
     out_ref[...] = out
 
 

@@ -21,13 +21,30 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def normalize_block_meta(name: str, x: jax.Array, n_blocks: int) -> jax.Array:
+    """Validate per-block metadata (``counts``/``bases``) shape; return 1-D.
+
+    The public contract accepts ``[n_blocks]`` or ``[n_blocks, 1]`` (the
+    kernels' internal tile shape). Anything else — wrong length, transposed,
+    extra dims — raises a clear ValueError instead of a silent reshape.
+    """
+    shape = tuple(x.shape)
+    if shape == (n_blocks,):
+        return x
+    if shape == (n_blocks, 1):
+        return x[:, 0]
+    raise ValueError(
+        f"{name} must have shape [n_blocks] or [n_blocks, 1] with "
+        f"n_blocks={n_blocks}; got {shape}")
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_size", "differential", "block_tile", "interpret")
 )
 def vbyte_decode_blocked(
     payload: jax.Array,  # uint8 [n_blocks, stride]
-    counts: jax.Array,  # int   [n_blocks]
-    bases: jax.Array,  # uint32/int32 [n_blocks]
+    counts: jax.Array,  # int   [n_blocks] or [n_blocks, 1]
+    bases: jax.Array,  # uint32/int32 [n_blocks] or [n_blocks, 1]
     *,
     block_size: int,
     differential: bool,
@@ -38,6 +55,8 @@ def vbyte_decode_blocked(
     if interpret is None:
         interpret = _auto_interpret()
     nb, stride = payload.shape
+    counts = normalize_block_meta("counts", counts, nb)
+    bases = normalize_block_meta("bases", bases, nb)
 
     pad = (-nb) % block_tile
     if pad:
@@ -67,8 +86,8 @@ def vbyte_decode_blocked(
 def stream_vbyte_decode_blocked(
     control: jax.Array,  # uint8 [n_blocks, block_size // 4]
     data: jax.Array,  # uint8 [n_blocks, data_stride]
-    counts: jax.Array,  # int   [n_blocks]
-    bases: jax.Array,  # uint32/int32 [n_blocks]
+    counts: jax.Array,  # int   [n_blocks] or [n_blocks, 1]
+    bases: jax.Array,  # uint32/int32 [n_blocks] or [n_blocks, 1]
     *,
     block_size: int,
     differential: bool,
@@ -79,6 +98,8 @@ def stream_vbyte_decode_blocked(
     if interpret is None:
         interpret = _auto_interpret()
     nb, _ = control.shape
+    counts = normalize_block_meta("counts", counts, nb)
+    bases = normalize_block_meta("bases", bases, nb)
 
     pad = (-nb) % block_tile
     if pad:

@@ -35,18 +35,24 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .kernel import _row_cumsum_exact_u32
+from .kernel import prefix_sum_tile
 
 MAX_BYTES_PER_INT = 4
 
 
-def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
-                               out_ref, *, block_size: int, differential: bool):
-    T, C = control_ref.shape
-    _, S = data_ref.shape
+def stream_decode_tile(control: jax.Array, data: jax.Array, counts: jax.Array,
+                       *, block_size: int) -> tuple[jax.Array, jax.Array]:
+    """Decode one VMEM tile of Stream-VByte (control, data) bytes.
+
+    Same ``(out int32 [T, B], valid bool [T, B])`` contract as
+    ``kernel.decode_tile`` — the shared decode-tile core every fused
+    epilogue plugs into.
+    """
+    T, C = control.shape
+    _, S = data.shape
     B = block_size
 
-    ctrl = control_ref[...].astype(jnp.int32)  # [T, C]
+    ctrl = control.astype(jnp.int32)  # [T, C]
 
     # expand control bytes C -> B: column j reads ctrl[:, j // 4]. A one-hot
     # f32 matmul plays the role of the unpack shuffle (ctrl < 256: f32-exact).
@@ -59,7 +65,7 @@ def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
 
     jrow = lax.broadcasted_iota(jnp.int32, (T, B), 1)
     code = (packed >> (2 * (jrow % 4))) & 3
-    valid_int = jrow < counts_ref[...]  # [T, B] < [T, 1]
+    valid_int = jrow < counts  # [T, B] < [T, 1]
     length = jnp.where(valid_int, code + 1, 0)
 
     # start offset of every integer: exclusive prefix sum over lengths
@@ -94,7 +100,7 @@ def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
 
     # contributions, split by 16-bit halfword before the MXU scatter:
     # positions 0-1 build the low halfword, positions 2-3 the high one.
-    byte = data_ref[...].astype(jnp.int32)
+    byte = data.astype(jnp.int32)
     lo = jnp.where(valid_byte & (pos < 2), byte << (8 * pos), 0)
     hi = jnp.where(valid_byte & (pos >= 2), byte << (8 * (pos - 2)), 0)
 
@@ -109,11 +115,15 @@ def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
     out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T, B]
 
     out = jnp.where(valid_int, out, 0)
-    if differential:
-        incl_tri = (kk <= ll).astype(jnp.float32)
-        out = _row_cumsum_exact_u32(out, incl_tri) + bases_ref[...]
-        out = jnp.where(valid_int, out, 0)
+    return out, valid_int
 
+
+def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
+                               out_ref, *, block_size: int, differential: bool):
+    out, valid = stream_decode_tile(control_ref[...], data_ref[...],
+                                    counts_ref[...], block_size=block_size)
+    if differential:
+        out = prefix_sum_tile(out, valid, bases_ref[...])
     out_ref[...] = out
 
 

@@ -39,6 +39,30 @@ class Cost:
         return Cost(self.flops * k, self.bytes * k, self.wire_bytes * k)
 
 
+# ----------------------------------------------------------------------------
+# VByte decode cost: fused vs unfused epilogues
+# ----------------------------------------------------------------------------
+# The blocked decode is memory-bound (~30 branch-free int-ops/int at VPU/MXU
+# rates far above the byte stream). Traffic per int:
+#   * compressed read: ~2 B (typ. ~16.9 bits/int on ClueWeb-like gaps)
+#   * unfused only: the decoded uint32 stream is written to HBM (4 B) and
+#     immediately re-read by the consumer gather/reduce (4 B) — the round
+#     trip the fused epilogues (kernels/vbyte_decode/epilogues.py) remove.
+# Measured on the CPU proxy (experiments/benchmarks.json, `fused` section):
+# the one-pass bag-sum runs faster than decode→take→segment-sum by roughly
+# the ratio this 10 B → 2 B decode-side traffic model predicts once the
+# (path-independent) table-gather traffic is added back in.
+DECODE_INT_OPS = 30
+DECODE_READ_B = 2.0
+DECODE_RT_B = 8.0  # unfused-only: u32 HBM write + consumer re-read
+
+
+def decode_cost(n_ints: float, *, fused: bool) -> Cost:
+    """Per-device decode cost; ``fused`` = consumer runs in the kernel epilogue."""
+    b = DECODE_READ_B + (0.0 if fused else DECODE_RT_B)
+    return Cost(DECODE_INT_OPS * n_ints, b * n_ints)
+
+
 def _ring(n: int, nbytes: float, *, reduce: bool = False) -> float:
     if n <= 1:
         return 0.0
@@ -189,7 +213,9 @@ def gnn_cost(cfg, shape, *, n_chips: int, dp: int, tp: int = 16) -> Cost:
         wire += _ring(n_chips if shard > 1 else 1, N * din * agg_b)
         c = c + Cost(mm * 3.0, (gather + acts) * 3.0, wire * 1.3)  # fwd+bwd(2x)
     if cfg.compressed_adjacency:
-        c = c + Cost(30 * E_loc, 3 * E_loc)  # vbyte decode: ~bytes-bound
+        # adjacency_rebase epilogue: fused unless the plan forces two passes
+        fused = getattr(cfg, "decode_plan", "auto") != "unfused"
+        c = c + decode_cost(E_loc, fused=fused)
     P = cfg.param_count()
     c = c + Cost(12 * P, 13 * P * F32, _ring(n_chips, P * F32, reduce=True))
     return c
@@ -235,7 +261,14 @@ def recsys_cost(cfg, shape, *, n_chips: int, dp: int, tp: int = 16) -> Cost:
     else:
         f = 2 * d
         emb_read = C_loc * d * BF16
-    decode = Cost(30 * C_loc, 3 * C_loc)  # vbyte: ~25 int-ops/int, ~1.6B/int
+    # dot-product heads run the fused dot_score epilogue (ids+scores out,
+    # no decoded-id round trip and no [C, d] candidate matrix in HBM);
+    # tower/ranker heads (two_tower, bst) still decode-then-score.
+    # (table-row gather reads, emb_read, are path-independent: the epilogue
+    # still pulls the rows from HBM — it skips writing the gathered [C, d]
+    # matrix back out, which the old model never charged for anyway)
+    fused = cfg.kind in ("sasrec", "bert4rec")
+    decode = decode_cost(C_loc, fused=fused)
     topk_wire = _ring(n_chips, 100 * 8 * 2)  # top-k exchange, negligible
     return decode + Cost(C_loc * f, emb_read + C_loc * F32, topk_wire)
 

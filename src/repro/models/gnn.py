@@ -27,7 +27,7 @@ class GNNConfig:
     n_classes: int = 7
     task: str = "node"  # "node" | "graph"
     compressed_adjacency: bool = False  # batch carries a VByte gap stream
-    use_kernel_decode: bool = False
+    decode_plan: str = "auto"  # dispatch plan: auto|kernel|jnp|fused|unfused
     agg_dtype: str = "f32"  # "bf16" halves aggregation collectives (§Perf)
     feats_dtype: str = "f32"  # "bf16" halves feature all-gathers (§Perf)
     extras: dict[str, Any] = field(default_factory=dict)
@@ -59,7 +59,7 @@ def _edges_from_batch(batch, cfg: GNNConfig):
             batch["gap_payload"], batch["gap_counts"], batch["gap_bases"],
             batch["row_offsets"], n_edges,
             row_gap_bases=batch.get("row_gap_bases"),
-            use_kernel=cfg.use_kernel_decode,
+            plan=cfg.decode_plan,
         )
         # decode_compressed_edges returns (neighbor=src-of-message, list-owner=dst)
         return src, dst, batch.get("edge_valid")

@@ -250,6 +250,32 @@ def user_tower(params, user_id, hist, cfg: RecSysConfig, *, dtype=nn.DEFAULT_COM
     return v / jnp.maximum(jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(dtype)
 
 
+def user_tower_compressed(params, user_id, hist_operands: dict,
+                          cfg: RecSysConfig, *, format: str = "vbyte",
+                          differential: bool = False, block_size: int | None = None,
+                          plan="auto", dtype=nn.DEFAULT_COMPUTE_DTYPE):
+    """User tower over compressed histories: fused one-pass embedding bag.
+
+    ``hist_operands`` is the ragged encoding of the batch's history bags —
+    ``CompressedIntArray.encode_ragged(histories, block_size=seq_len)
+    .device_operands()`` — one block per user. The mean-bag is the decode
+    kernel's ``bag_sum`` epilogue: history ids never round-trip through HBM
+    between decode and gather (they do in ``user_tower``'s padded path).
+    Matches ``user_tower`` exactly when the padded histories hold the same
+    ids (pad id 0 excluded) and ``block_size == seq_len``.
+    """
+    from repro.nn.embedding_bag import embedding_bag_compressed
+
+    u = nn.embedding_lookup(params["user_emb"], user_id, dtype=dtype)  # [B, id_dim]
+    bag = embedding_bag_compressed(
+        params["item_id_emb"]["emb"], hist_operands, format=format,
+        block_size=block_size or cfg.seq_len, differential=differential,
+        mode="mean", plan=plan, dtype=dtype)
+    x = jnp.concatenate([u, bag.astype(dtype)], axis=-1)
+    v = nn.mlp(params["user_mlp"], x, final_act=False, dtype=dtype)
+    return v / jnp.maximum(jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(dtype)
+
+
 def item_tower(params, item_ids, cfg: RecSysConfig, *, dtype=nn.DEFAULT_COMPUTE_DTYPE):
     x = nn.embedding_lookup(params["item_id_emb"], item_ids, dtype=dtype)
     v = nn.mlp(params["item_mlp"], x, final_act=False, dtype=dtype)
@@ -287,41 +313,69 @@ def serve_scores(params, batch, cfg: RecSysConfig, *, dtype=nn.DEFAULT_COMPUTE_D
     return _item_scores(params, h[:, -1], batch["cands"], dtype)  # [B, C]
 
 
+def _cand_operands(batch) -> tuple[dict, str]:
+    """Candidate-list device operands from a serve batch (either format)."""
+    if "cand_control" in batch:
+        return ({"control": batch["cand_control"], "data": batch["cand_data"],
+                 "counts": batch["cand_counts"], "bases": batch["cand_bases"]},
+                "streamvbyte")
+    return ({"payload": batch["cand_payload"], "counts": batch["cand_counts"],
+             "bases": batch["cand_bases"]}, "vbyte")
+
+
 def retrieval_scores_compressed(params, batch, cfg: RecSysConfig, *, top_k: int = 100,
-                                use_kernel: bool = False,
+                                plan="auto", use_kernel: bool | None = None,
                                 dtype=nn.DEFAULT_COMPUTE_DTYPE):
-    """retrieval_cand: score 1 query against a VByte-compressed candidate list.
+    """retrieval_cand: score 1 query against a compressed candidate list.
 
-    The sorted candidate id list (delta+VByte, the paper's posting-list
-    format) is decoded *inside* the serving graph, then batch-scored.
+    The sorted candidate id list (delta-coded, VByte or Stream VByte —
+    ``cand_payload`` vs ``cand_control``/``cand_data`` batch keys) is decoded
+    *inside* the serving graph. For the dot-product heads (sasrec/bert4rec)
+    the scoring itself is the decode kernel's ``dot_score`` epilogue: ids
+    gather item vectors and dot against the query in VMEM, so the [C, d]
+    candidate-vector matrix never materializes in HBM — only ids and scores
+    come out. Tower/ranker heads (two_tower, bst) decode-then-score.
+
+    ``plan`` is the dispatch plan; ``use_kernel`` the legacy boolean alias.
+    For VByte candidates off-TPU, ``"auto"`` resolves to the gather-lowered
+    ``"ref"`` decoder for every kind: the scatter-based masked path emits a
+    cross-shard scatter-add (an all-reduce of the [n_cand] id array) under
+    GSPMD, while the searchsorted/gather lowering stays block-local (§Perf
+    retrieval iteration 2).
     """
-    if use_kernel:
-        from repro.kernels.vbyte_decode import vbyte_decode_blocked as dec
-    else:
-        # gather-lowered decoder: the scatter-based path emits a cross-shard
-        # scatter-add (an all-reduce of the [n_cand] id array) under GSPMD;
-        # the searchsorted/gather lowering stays block-local (§Perf retrieval
-        # iteration 2)
-        from repro.kernels.vbyte_decode.ref import vbyte_decode_blocked_ref as dec
+    from repro.kernels.vbyte_decode import dispatch
 
-    cands = dec(batch["cand_payload"], batch["cand_counts"], batch["cand_bases"],
-                block_size=128, differential=True)
-    cands = cands.reshape(-1).astype(jnp.int32)  # [n_cand] (padded with 0 = pad row)
-    cands = constrain(cands, ("pod", "data", "model"))
-    C = cands.shape[0]
+    operands, fmt = _cand_operands(batch)
+    if use_kernel is not None:
+        plan = "kernel" if use_kernel else ("ref" if fmt == "vbyte" else "jnp")
+    if (plan == "auto" and fmt == "vbyte"
+            and dispatch.default_plan().path != "pallas"):
+        # off-TPU, ALL kinds keep the block-local ref decode (dot-score
+        # kinds run it unfused: ref grid + dot_score as a second dispatch)
+        plan = "ref"
+    kw = dict(format=fmt, block_size=128, differential=True, plan=plan)
 
-    if cfg.kind == "two_tower":
-        u = user_tower(params, batch["user_id"], batch["hist"], cfg, dtype=dtype)
-        i = item_tower(params, cands, cfg, dtype=dtype)  # [C, v]
-        scores = (i @ u[0]).astype(jnp.float32)
-    elif cfg.kind == "bst":
-        # CTR scoring: every candidate runs through the ranker with the history
-        hist = jnp.broadcast_to(batch["hist"], (C, cfg.seq_len))
-        scores = bst_forward(params, hist, cands, cfg, dtype=dtype)
-    else:  # sasrec / bert4rec: last-position representation · candidate embs
+    if cfg.kind in ("sasrec", "bert4rec"):
+        # one-pass fused path: decode → gather item vectors → dot, in-kernel
         h = _seq_repr(params, batch["hist"], cfg, causal=cfg.kind == "sasrec",
                       dtype=dtype)[:, -1]  # [1, d]
-        vecs = nn.embedding_lookup(params["item_emb"], cands, dtype=dtype)  # [C, d]
-        scores = (vecs @ h[0]).astype(jnp.float32)
+        table = params["item_emb"]["emb"].astype(dtype)
+        ids, scores = dispatch.decode(
+            operands, epilogue="dot_score",
+            epilogue_operands={"table": table, "query": h}, **kw)
+        cands = constrain(ids.reshape(-1), ("pod", "data", "model"))
+        scores = constrain(scores.reshape(-1), ("pod", "data", "model"))
+    else:
+        cands = dispatch.decode(operands, **kw)
+        cands = cands.reshape(-1).astype(jnp.int32)  # padded with 0 = pad row
+        cands = constrain(cands, ("pod", "data", "model"))
+        C = cands.shape[0]
+        if cfg.kind == "two_tower":
+            u = user_tower(params, batch["user_id"], batch["hist"], cfg, dtype=dtype)
+            i = item_tower(params, cands, cfg, dtype=dtype)  # [C, v]
+            scores = (i @ u[0]).astype(jnp.float32)
+        else:  # bst: every candidate runs through the ranker with the history
+            hist = jnp.broadcast_to(batch["hist"], (C, cfg.seq_len))
+            scores = bst_forward(params, hist, cands, cfg, dtype=dtype)
     top_s, top_i = jax.lax.top_k(scores, top_k)
     return scores, (top_s, jnp.take(cands, top_i))

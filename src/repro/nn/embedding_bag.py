@@ -1,10 +1,18 @@
-"""EmbeddingBag built from gather + segment-sum.
+"""EmbeddingBag built from gather + segment-sum, plus the fused one-pass path.
 
 JAX has no native EmbeddingBag (taxonomy §B.6/B.11) — this IS part of the
 system: ragged multi-hot id bags are looked up with ``jnp.take`` and reduced
 by ``jax.ops.segment_sum`` / ``segment_max``. The id lists themselves are
-stored VByte-compressed (sorted ids → deltas) and decoded on device by the
-paper's kernel before hitting this op.
+stored VByte-compressed (sorted ids → deltas).
+
+Two consumption paths exist for compressed bags:
+
+* decode → ``embedding_bag`` (the functions below): the decoded uint32
+  stream round-trips through HBM between the decode kernel and the gather.
+* ``embedding_bag_compressed``: the gather-sum runs INSIDE the decode
+  kernel's epilogue (``repro.kernels.vbyte_decode`` ``bag_sum``) — one bag
+  per compressed block, ids never leave VMEM. This is the one-pass path the
+  dispatch layer picks by default.
 """
 from __future__ import annotations
 
@@ -44,6 +52,44 @@ def embedding_bag(
         out = jax.ops.segment_max(vecs, segment_ids, num_segments=n_bags)
         return jnp.where(jnp.isfinite(out), out, 0)
     raise ValueError(f"unknown mode {mode!r}")
+
+
+def embedding_bag_compressed(
+    table: jax.Array,  # [V, d]
+    operands: dict,  # blocked device operands (one bag per block; see encode_ragged)
+    *,
+    format: str = "vbyte",
+    block_size: int = 128,
+    differential: bool = False,
+    mode: str = "sum",
+    plan="auto",
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jax.Array:
+    """Fused EmbeddingBag over a compressed id stream: one bag per block.
+
+    ``operands`` is ``CompressedIntArray.encode_ragged(...).device_operands()``
+    (or any blocked layout where block b is bag b). Returns
+    ``[n_blocks, d]``. The decode→``jnp.take``→``segment_sum`` chain this
+    replaces decodes the ids to HBM first; here the gather-sum is the decode
+    kernel's epilogue and the ids stay in VMEM.
+    """
+    from repro.kernels.vbyte_decode import dispatch
+
+    out = dispatch.decode(
+        operands,
+        format=format,
+        block_size=block_size,
+        differential=differential,
+        epilogue="bag_sum",
+        epilogue_operands={"table": table.astype(dtype)},
+        plan=plan,
+    )
+    if mode == "sum":
+        return out
+    if mode == "mean":
+        counts = jnp.reshape(operands["counts"], (-1,)).astype(out.dtype)
+        return out / jnp.maximum(counts, 1)[:, None]
+    raise ValueError(f"unknown mode {mode!r} (fused path supports sum|mean)")
 
 
 def bag_from_padded(

@@ -56,7 +56,7 @@ def gin_layer(params, h: jax.Array, src: jax.Array, dst: jax.Array, *,
 
 def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_edges,
                             *, row_gap_bases=None, block_size: int = 128,
-                            use_kernel: bool = False):
+                            plan="auto", use_kernel: bool | None = None):
     """Decode a per-list delta-encoded VByte adjacency stream on device.
 
     Each node's sorted neighbor list is delta-encoded independently
@@ -67,33 +67,51 @@ def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_e
     per-block differential decode — no cross-block (hence cross-shard)
     prefix dependency. ``row_gap_bases`` [n_nodes] holds the running sum at
     each list start (4 B/row — the paper's skip-pointer idea applied to
-    adjacency rows, §Perf gin-tu iteration 3); subtracting it per edge
-    recovers absolute neighbor ids entirely shard-locally. Without it, the
-    per-list bases are gathered from the decoded stream (legacy global path).
+    adjacency rows, §Perf gin-tu iteration 3). With it, the per-edge
+    ``incl - row_gap_base`` subtraction is FUSED into the decode kernel's
+    differential epilogue (``adjacency_rebase``): the edge-base grid is
+    computed from metadata alone (no decode dependency), and the global
+    cumsum stream never touches HBM. Without it, the per-list bases are
+    gathered from the decoded stream (legacy global path).
+
+    ``plan`` selects the dispatch path (``repro.kernels.vbyte_decode.
+    dispatch``); ``use_kernel`` is the legacy boolean alias.
 
     Returns (src [E], dst [E]) int32 edge index.
     """
-    if use_kernel:
-        from repro.kernels.vbyte_decode import vbyte_decode_blocked as _dec
-    else:
-        from repro.core.vbyte.masked import decode_blocked as _dec_masked
+    from repro.kernels.vbyte_decode import dispatch
 
-        def _dec(p, c, b, *, block_size, differential):
-            return _dec_masked(p, c, b, block_size=block_size, differential=differential)
+    if use_kernel is not None:
+        plan = "kernel" if use_kernel else "jnp"
+    operands = {"payload": gap_payload, "counts": gap_counts, "bases": gap_bases}
+    nb = gap_payload.shape[0]
 
-    # differential decode against per-block running-sum bases = global
-    # inclusive cumsum of gaps, computed block-locally
-    incl = _dec(gap_payload, gap_counts, gap_bases,
-                block_size=block_size, differential=True)
-    incl = incl.reshape(-1)[:n_edges].astype(jnp.uint32)
-    # edge e belongs to list l(e): row_offsets[l] <= e < row_offsets[l+1]
+    # edge e belongs to list l(e): row_offsets[l] <= e < row_offsets[l+1].
+    # Pure-metadata computation — runs BEFORE (in parallel with) the decode.
     e_idx = jnp.arange(n_edges, dtype=jnp.int32)
     src = jnp.searchsorted(row_offsets, e_idx, side="right").astype(jnp.int32) - 1
+
     if row_gap_bases is not None:
-        base = jnp.take(row_gap_bases, src)
-    else:  # legacy: gather the running sum at each list start from the stream
-        gaps = incl - jnp.concatenate([jnp.zeros((1,), jnp.uint32), incl[:-1]])
-        excl = incl - gaps
-        base = jnp.take(excl, jnp.take(row_offsets, src))
+        # fused one-pass path: per-edge rebase inside the kernel epilogue
+        base = jnp.take(row_gap_bases, src).astype(jnp.uint32)  # [E]
+        base = jnp.pad(base, (0, nb * block_size - n_edges))
+        edge_base = jax.lax.bitcast_convert_type(base, jnp.int32)
+        dst_grid = dispatch.decode(
+            operands, format="vbyte", block_size=block_size, differential=True,
+            epilogue="adjacency_rebase",
+            epilogue_operands={"edge_base": edge_base.reshape(nb, block_size)},
+            plan=plan)
+        dst = dst_grid.reshape(-1)[:n_edges]
+        return dst, src  # neighbors are sources aggregated into the list owner
+
+    # legacy global path: differential decode against per-block running-sum
+    # bases = global inclusive cumsum of gaps, computed block-locally; the
+    # per-list bases are then gathered from the decoded stream itself.
+    incl = dispatch.decode(operands, format="vbyte", block_size=block_size,
+                           differential=True, plan=plan)
+    incl = incl.reshape(-1)[:n_edges].astype(jnp.uint32)
+    gaps = incl - jnp.concatenate([jnp.zeros((1,), jnp.uint32), incl[:-1]])
+    excl = incl - gaps
+    base = jnp.take(excl, jnp.take(row_offsets, src))
     dst = (incl - base).astype(jnp.int32)
     return dst, src  # neighbors are sources aggregated into the list owner

@@ -1,0 +1,129 @@
+"""Dispatch layer: plan resolution, the persisted autotune cache, and the
+counts/bases shape contract at the ops boundary."""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import CompressedIntArray
+from repro.kernels.vbyte_decode import dispatch, normalize_block_meta
+from repro.kernels.vbyte_decode.dispatch import DecodePlan
+
+
+# ---------------------------------------------------------------------------
+# counts/bases shape contract
+# ---------------------------------------------------------------------------
+def test_normalize_block_meta_accepts_both_shapes():
+    flat = jnp.arange(4, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(normalize_block_meta("counts", flat, 4)), np.arange(4))
+    np.testing.assert_array_equal(
+        np.asarray(normalize_block_meta("counts", flat[:, None], 4)),
+        np.arange(4))
+
+
+@pytest.mark.parametrize("bad_shape", [(3,), (4, 2), (1, 4), (4, 1, 1)])
+def test_normalize_block_meta_rejects(bad_shape):
+    x = jnp.zeros(bad_shape, jnp.int32)
+    with pytest.raises(ValueError, match=r"counts must have shape \[n_blocks\]"):
+        normalize_block_meta("counts", x, 4)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_decoders_accept_column_metadata(rng, use_kernel):
+    """[n_blocks, 1] counts/bases decode identically to [n_blocks]."""
+    vals = np.sort(rng.integers(0, 2**20, 200)).astype(np.uint64)
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(vals, format=fmt, differential=True)
+        ops = dict(arr.device_operands())
+        ref = arr.decode(use_kernel=use_kernel)
+        ops["counts"] = ops["counts"][:, None]
+        ops["bases"] = ops["bases"][:, None]
+        out = dispatch.decode(ops, format=fmt, block_size=128,
+                              differential=True,
+                              plan="kernel" if use_kernel else "jnp")
+        np.testing.assert_array_equal(
+            np.asarray(out).reshape(-1)[: arr.n].astype(np.uint32), ref)
+
+
+def test_decode_rejects_wrong_length_counts(rng):
+    vals = np.sort(rng.integers(0, 2**20, 200)).astype(np.uint64)
+    arr = CompressedIntArray.encode(vals, differential=True)
+    ops = dict(arr.device_operands())
+    ops["counts"] = ops["counts"][:-1]
+    with pytest.raises(ValueError, match="counts must have shape"):
+        dispatch.decode(ops, format="vbyte", block_size=128,
+                        differential=True, plan="jnp")
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+def test_resolve_plan_aliases():
+    kw = dict(format="vbyte", epilogue="bag_sum", block_size=128)
+    assert dispatch.resolve_plan("kernel", **kw) == DecodePlan("pallas", True)
+    assert dispatch.resolve_plan("jnp", **kw) == DecodePlan("jnp", True)
+    assert dispatch.resolve_plan("unfused", **kw).fused is False
+    assert dispatch.resolve_plan("fused", **kw).fused is True
+    custom = DecodePlan("pallas", False, 16)
+    assert dispatch.resolve_plan(custom, **kw) is custom
+    with pytest.raises(ValueError, match="unknown plan"):
+        dispatch.resolve_plan("warp-speed", **kw)
+    with pytest.raises(ValueError, match="unknown plan path"):
+        DecodePlan("cuda", True)
+
+
+def test_epilogue_operand_validation(rng):
+    vals = np.sort(rng.integers(0, 512, 64)).astype(np.uint64)
+    arr = CompressedIntArray.encode(vals, block_size=32, differential=True)
+    ops = arr.device_operands()
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        dispatch.decode(ops, format="vbyte", block_size=32, differential=True,
+                        epilogue="frobnicate")
+    with pytest.raises(ValueError, match="missing \\['table'\\]"):
+        dispatch.decode(ops, format="vbyte", block_size=32, differential=True,
+                        epilogue="bag_sum", epilogue_operands={})
+    with pytest.raises(ValueError, match="requires differential=True"):
+        dispatch.decode(ops, format="vbyte", block_size=32, differential=False,
+                        epilogue="adjacency_rebase",
+                        epilogue_operands={"edge_base": jnp.zeros((2, 32),
+                                                                 jnp.int32)})
+
+
+# ---------------------------------------------------------------------------
+# measured autotune cache
+# ---------------------------------------------------------------------------
+def test_autotune_persists_and_auto_plan_reads_cache(tmp_path, monkeypatch):
+    cache_file = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache_file))
+    cache = dispatch.autotune(
+        formats=("vbyte",), epilogue_names=("bag_sum",), block_size=32,
+        n_blocks=8, vocab=256, d=8, reps=1, warmup=1,
+        cache_file=str(cache_file))
+    key = dispatch.cache_key("vbyte", "bag_sum", 32)
+    assert key in cache and "plan" in cache[key]
+    on_disk = json.loads(cache_file.read_text())
+    assert on_disk[key]["candidates_ms"]
+
+    # "auto" resolves to the measured best, not the heuristic default
+    dispatch.load_cache(str(cache_file), reload=True)
+    plan = dispatch.resolve_plan("auto", format="vbyte", epilogue="bag_sum",
+                                 block_size=32)
+    assert plan == DecodePlan(**on_disk[key]["plan"])
+    # unmeasured workloads fall back to the heuristic
+    fallback = dispatch.resolve_plan("auto", format="streamvbyte",
+                                     epilogue="dot_score", block_size=32)
+    assert fallback == dispatch.default_plan("dot_score")
+    dispatch.load_cache(reload=True)  # restore global cache state
+
+
+def test_auto_plan_decodes_correctly(rng):
+    """End to end: plan='auto' (whatever the cache says) is bit-correct."""
+    vals = np.sort(rng.integers(0, 512, 100)).astype(np.uint64)
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(vals, format=fmt, block_size=32,
+                                        differential=True)
+        out = arr.decode(plan="auto")
+        np.testing.assert_array_equal(out.astype(np.uint64), vals)

@@ -1,0 +1,178 @@
+"""Fused decode→consume epilogue parity: the Pallas-fused kernel path and the
+jnp-fused path must match the unfused decode→jnp reference bit-exactly, for
+both formats, including count=0 blocks and ragged tails. The reference is
+``plan="unfused"``: decode the uint32 grid, then the epilogue as a separate
+dispatch — exactly the chain the fusion removes."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import CompressedIntArray
+from repro.kernels.vbyte_decode import dispatch
+
+FMTS = ["vbyte", "streamvbyte"]
+B = 32  # block size (multiple of 4 for streamvbyte)
+VOCAB = 512
+D = 16
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.standard_normal((VOCAB, D)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def query():
+    rng = np.random.default_rng(43)
+    return jnp.asarray(rng.standard_normal((1, D)).astype(np.float32))
+
+
+def _operands(rng, fmt, n, *, pad_zero_blocks=0):
+    """Blocked operands for n sorted ids; optionally append count=0 blocks."""
+    vals = np.sort(rng.integers(0, VOCAB, size=n)).astype(np.uint64)
+    arr = CompressedIntArray.encode(vals, format=fmt, block_size=B,
+                                    differential=True)
+    ops = {k: np.asarray(v) for k, v in arr.device_operands().items()}
+    if pad_zero_blocks:
+        p = pad_zero_blocks
+        for k in ops:
+            ops[k] = np.pad(ops[k], ((0, p),) + ((0, 0),) * (ops[k].ndim - 1))
+    return {k: jnp.asarray(v) for k, v in ops.items()}, vals
+
+
+def _assert_all_plans_equal(ops, fmt, epilogue, eops):
+    ref = dispatch.decode(ops, format=fmt, block_size=B, differential=True,
+                          epilogue=epilogue, epilogue_operands=eops,
+                          plan="unfused")
+    ref = [np.asarray(x) for x in (ref if isinstance(ref, tuple) else (ref,))]
+    for plan in ("kernel", "jnp"):
+        out = dispatch.decode(ops, format=fmt, block_size=B, differential=True,
+                              epilogue=epilogue, epilogue_operands=eops,
+                              plan=plan)
+        out = [np.asarray(x) for x in (out if isinstance(out, tuple) else (out,))]
+        for r, o in zip(ref, out):
+            np.testing.assert_array_equal(r, o, err_msg=f"{fmt}/{epilogue}/{plan}")
+    return ref
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("n,zero_blocks", [(4 * B, 0), (2 * B + 7, 0), (B, 2)])
+def test_bag_sum_parity(rng, table, fmt, n, zero_blocks):
+    ops, vals = _operands(rng, fmt, n, pad_zero_blocks=zero_blocks)
+    (bag,) = _assert_all_plans_equal(ops, fmt, "bag_sum", {"table": table})
+    # against a from-scratch numpy reference (per-block gather-sum)
+    tab = np.asarray(table)
+    nb = bag.shape[0]
+    expect = np.zeros((nb, D), np.float32)
+    for b in range(nb):
+        blk = vals[b * B:(b + 1) * B].astype(np.int64)
+        expect[b] = tab[blk].sum(axis=0, dtype=np.float32) if blk.size else 0
+    np.testing.assert_allclose(bag, expect, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("n,zero_blocks", [(2 * B + 7, 0), (B, 2)])
+def test_dot_score_parity(rng, table, query, fmt, n, zero_blocks):
+    ops, vals = _operands(rng, fmt, n, pad_zero_blocks=zero_blocks)
+    ids, scores = _assert_all_plans_equal(
+        ops, fmt, "dot_score", {"table": table, "query": query})
+    flat = ids.reshape(-1)
+    np.testing.assert_array_equal(flat[: len(vals)], vals.astype(np.int32))
+    assert not flat[len(vals):].any()  # padded slots are id 0
+    expect = np.asarray(table)[flat] @ np.asarray(query)[0]
+    np.testing.assert_allclose(scores.reshape(-1), expect, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("n,zero_blocks", [(2 * B + 7, 0), (B, 2)])
+def test_adjacency_rebase_parity(rng, fmt, n, zero_blocks):
+    ops, vals = _operands(rng, fmt, n, pad_zero_blocks=zero_blocks)
+    nb = ops["counts"].shape[0]
+    eb = jnp.asarray(rng.integers(0, VOCAB, (nb, B)).astype(np.int32))
+    (out,) = _assert_all_plans_equal(ops, fmt, "adjacency_rebase",
+                                     {"edge_base": eb})
+    flat = out.reshape(-1)[: len(vals)]
+    expect = (vals.astype(np.int64)
+              - np.asarray(eb).reshape(-1)[: len(vals)]).astype(np.int32)
+    np.testing.assert_array_equal(flat, expect)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_ragged_encode_roundtrip_and_fused_bag(rng, fmt, table):
+    """encode_ragged: one bag per block; fused bag == padded-bag reference."""
+    from repro.nn.embedding_bag import bag_from_padded, embedding_bag_compressed
+
+    lists = [np.sort(rng.choice(np.arange(1, VOCAB), size=k, replace=False))
+             .astype(np.uint64)
+             for k in rng.integers(0, B + 1, size=9)]
+    lists[3] = np.zeros(0, np.uint64)  # explicit count=0 bag
+    arr = CompressedIntArray.encode_ragged(lists, format=fmt, block_size=B,
+                                           differential=True)
+    assert arr.ragged and arr.n == sum(len(x) for x in lists)
+    np.testing.assert_array_equal(arr.decode().astype(np.uint64),
+                                  np.concatenate(lists))
+
+    padded = np.zeros((len(lists), B), np.int32)
+    for i, l in enumerate(lists):
+        padded[i, : len(l)] = l
+    for mode in ("sum", "mean"):
+        ref = bag_from_padded(table, jnp.asarray(padded), mode=mode,
+                              dtype=jnp.float32)
+        out = embedding_bag_compressed(
+            table, arr.device_operands(), format=fmt, block_size=B,
+            differential=True, mode=mode, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_fused_adjacency_equals_legacy_and_raw(rng):
+    """decode_compressed_edges: fused rebase == legacy global path == CSR."""
+    from repro.data.graph import compress_adjacency
+    from repro.data.sampler import CSRGraph
+    from repro.data.synthetic import random_graph
+    from repro.nn.gnn import decode_compressed_edges
+
+    g = random_graph(rng, 80, 400, 4, 3)
+    csr = CSRGraph.from_edges(g["edge_src"], g["edge_dst"], 80)
+    comp = compress_adjacency(csr)
+    args = (jnp.asarray(comp["gap_payload"]), jnp.asarray(comp["gap_counts"]),
+            jnp.asarray(comp["gap_bases"]), jnp.asarray(comp["row_offsets"]),
+            csr.n_edges)
+    outs = {}
+    for label, kw in (
+        ("fused_auto", dict(row_gap_bases=jnp.asarray(comp["row_gap_bases"]))),
+        ("fused_kernel", dict(row_gap_bases=jnp.asarray(comp["row_gap_bases"]),
+                              plan="kernel")),
+        ("fused_unfused", dict(row_gap_bases=jnp.asarray(comp["row_gap_bases"]),
+                               plan="unfused")),
+        ("legacy_global", {}),
+    ):
+        src, dst = decode_compressed_edges(*args, **kw)
+        outs[label] = (np.asarray(src), np.asarray(dst))
+    own = np.repeat(np.arange(80), np.diff(csr.indptr))
+    for label, (src, dst) in outs.items():
+        np.testing.assert_array_equal(src, csr.indices, err_msg=label)
+        np.testing.assert_array_equal(dst, own, err_msg=label)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_retrieval_dot_score_matches_unfused(rng, fmt):
+    """The fused dot_score serving path == decode-then-lookup scoring."""
+    n_cand = 100
+    cands = np.sort(rng.choice(np.arange(1, VOCAB), n_cand, replace=False)
+                    ).astype(np.uint64)
+    arr = CompressedIntArray.encode(cands, format=fmt, block_size=B,
+                                    differential=True)
+    ops = arr.device_operands()
+    rng2 = np.random.default_rng(5)
+    table = jnp.asarray(rng2.standard_normal((VOCAB, D)).astype(np.float32))
+    q = jnp.asarray(rng2.standard_normal((1, D)).astype(np.float32))
+    ids, scores = dispatch.decode(
+        ops, format=fmt, block_size=B, differential=True, epilogue="dot_score",
+        epilogue_operands={"table": table, "query": q}, plan="kernel")
+    flat_ids = np.asarray(ids).reshape(-1)
+    direct = np.asarray(jnp.take(table, jnp.asarray(flat_ids), axis=0)
+                        @ q.reshape(-1))
+    np.testing.assert_allclose(np.asarray(scores).reshape(-1), direct,
+                               rtol=1e-5, atol=1e-5)
