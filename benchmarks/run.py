@@ -6,7 +6,10 @@ One benchmark per paper table/figure (+ framework-level extensions):
   compression_ratio  — §V bits/int by group + blocked-layout overhead
   integrations       — compression of the framework's real id streams
   kernel_check       — Pallas kernel + fused-epilogue parity sweep
+                       (+ sharded-vs-single-device parity when >1 device)
   fused              — fused vs unfused decode→consume epilogues (+ autotune)
+  serving            — sharded decode throughput + ServingEngine QPS/latency
+                       at 1/2/8 forced host devices (subprocess per count)
   roofline           — table from the dry-run artifacts (if present)
 
 Results are written as machine-readable JSON (``--json``, default
@@ -44,7 +47,7 @@ def bench_kernel_check(quick: bool = False):
             checked += 1
             svb = CompressedIntArray.encode(vals, format="streamvbyte",
                                             differential=diff)
-            assert np.array_equal(svb.decode(use_kernel=True),
+            assert np.array_equal(svb.decode(plan="kernel"),
                                   svb.decode_scalar_oracle())
             checked += 1
 
@@ -71,9 +74,38 @@ def bench_kernel_check(quick: bool = False):
                 assert all(np.array_equal(x, y)
                            for x, y in zip(outs[0], other)), (fmt, ep)
             checked += 1
+
+    # sharded parity: block-parallel shard_map decode == single-device,
+    # exercised whenever the process has >1 device (the CI `sharded` job
+    # forces 8 host devices)
+    import jax
+
+    sharded_cases = 0
+    if len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        for fmt in ("vbyte", "streamvbyte"):
+            arr = CompressedIntArray.encode(vals, format=fmt,
+                                            differential=True)
+            sh = arr.shard(mesh)
+            assert np.array_equal(sh.decode(), arr.decode()), fmt
+            ids_r, sc_r = dispatch.decode(
+                arr, epilogue="dot_score",
+                epilogue_operands={"table": table, "query": query},
+                plan="jnp")
+            ids_s, sc_s = dispatch.decode(
+                sh, epilogue="dot_score",
+                epilogue_operands={"table": table, "query": query})
+            assert np.array_equal(np.asarray(ids_r),
+                                  np.asarray(ids_s)[: arr.n_blocks]), fmt
+            assert np.array_equal(np.asarray(sc_r),
+                                  np.asarray(sc_s)[: arr.n_blocks]), fmt
+            sharded_cases += 2
+            checked += 2
     return {"kernel_vs_oracle_cases": checked, "all_equal": True,
             "formats": ["vbyte", "streamvbyte"],
-            "fused_epilogues": ["bag_sum", "dot_score", "adjacency_rebase"]}
+            "fused_epilogues": ["bag_sum", "dot_score", "adjacency_rebase"],
+            "sharded_parity_cases": sharded_cases,
+            "devices": len(jax.devices())}
 
 
 def main():
@@ -168,6 +200,27 @@ def main():
         picks = {k: v["plan"] for k, v in cache.items()}
         results["autotune"] = picks
         print(f"  {len(picks)} workload keys cached")
+
+    if want("serving"):
+        from benchmarks import serving
+
+        print("== sharded serving: decode throughput + engine QPS/latency ==")
+        rows = serving.run(quick=args.quick)
+        for r in rows:
+            if "error" in r:
+                print(f"  devices={r['devices']}: FAILED\n{r['error']}")
+                continue
+            eng = r["engine"]
+            dec = {d["format"]: d for d in r["decode"]}
+            vb = dec["vbyte"]
+            sharded = (f" sharded={vb['sharded_mis']} Mis"
+                       if "sharded_mis" in vb else "")
+            print(f"  devices={r['devices']}: vbyte decode "
+                  f"single={vb['single_device_mis']} Mis{sharded}  "
+                  f"engine {eng['qps']} QPS p50={eng['p50_ms']}ms "
+                  f"p99={eng['p99_ms']}ms")
+        assert not any("error" in r for r in rows), "serving bench failed"
+        results["serving"] = rows
 
     if want("roofline"):
         from benchmarks import roofline

@@ -1,0 +1,126 @@
+"""Sharded serving benchmarks: decode throughput and engine QPS/latency
+at 1/2/8 host devices.
+
+Each device count needs its own process (jax locks the host-platform device
+count at first init), so :func:`run` spawns
+``python -m benchmarks.serving --devices N`` per count with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and collects the
+per-process JSON. In-process (``--devices``), it measures:
+
+* **decode throughput** — the stream decode of a compressed corpus, sharded
+  over the mesh (``CompressedIntArray.shard`` + the dispatch layer's
+  ``shard_map`` path) vs the same corpus on one device, both formats;
+* **engine serving** — ``repro.launch.serve.ServingEngine`` over the
+  reduced two-tower config: QPS and p50/p99 request latency through the
+  fused ``dot_score`` epilogue.
+
+Forced host devices share one CPU, so multi-"device" throughput here
+validates the *deployment shape* (even sharding, no collectives, per-shard
+kernels), not a speedup — on real multi-chip meshes the same program scales
+with the device count (each shard decodes its own blocks; see
+docs/serving.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def _measure(quick: bool) -> dict:
+    import numpy as np
+
+    import jax
+
+    from repro.core import CompressedIntArray
+    from repro.kernels.vbyte_decode import dispatch
+    from repro.launch.serve import serve_engine
+    from repro.models import registry
+
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(0)
+    n_ints = 1 << 14 if quick else 1 << 18
+    reps = 3 if quick else 8
+    vals = np.sort(rng.integers(0, 1 << 28, n_ints)).astype(np.uint64)
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+
+    def bench(fn, reps=reps, warmup=2):
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples.append(time.perf_counter() - t0)
+        return min(samples)
+
+    decode_rows = []
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(vals, format=fmt, differential=True)
+        row = {"format": fmt, "n_ints": n_ints, "devices": n_dev,
+               "bits_per_int": round(arr.bits_per_int, 2)}
+        t = bench(lambda a=arr: dispatch.decode(a, plan="jnp"))
+        row["single_device_mis"] = round(n_ints / t / 1e6, 1)
+        if mesh is not None:
+            sh = arr.shard(mesh)
+            t = bench(lambda s=sh: dispatch.decode(s, plan="sharded"))
+            row["sharded_mis"] = round(n_ints / t / 1e6, 1)
+        decode_rows.append(row)
+
+    cfg = registry.reduced_config("two-tower-retrieval")
+    engine_stats = serve_engine(
+        cfg, requests=32 if quick else 256,
+        candidates=(1 << 9) if quick else (1 << 16), record=False)
+    return {"devices": n_dev, "decode": decode_rows, "engine": engine_stats}
+
+
+def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
+    """Spawn one measurement process per device count; collect their JSON."""
+    rows = []
+    env_base = {k: v for k, v in os.environ.items()}
+    for n in device_counts:
+        out = f"/tmp/repro-serving-{n}.json"
+        env = dict(env_base)
+        # appended LAST: XLA resolves duplicate flags to the final occurrence,
+        # so an inherited --xla_force_host_platform_device_count (e.g. the CI
+        # sharded job's env) must not override the sweep's per-process count
+        env["XLA_FLAGS"] = (
+            env_base.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+        cmd = [sys.executable, "-m", "benchmarks.serving",
+               "--devices", str(n), "--out", out] + (
+                   ["--quick"] if quick else [])
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        if r.returncode != 0:
+            rows.append({"devices": n, "error": r.stderr.strip()[-2000:]})
+            continue
+        with open(out) as f:
+            rows.append(json.load(f))
+        os.unlink(out)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if not args.devices:
+        for row in run(quick=args.quick):
+            print(row)
+        return
+    # in-process measurement: the parent already set XLA_FLAGS for us
+    result = _measure(args.quick)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    else:
+        print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@
 """
 import numpy as np
 
+import jax
+
 from repro.core import CompressedIntArray
 from repro.core.vbyte import encode as venc
 from repro.data.synthetic import CLUEWEB_DOCS
@@ -24,17 +26,34 @@ assert np.array_equal(decoded.astype(np.uint64), docids)
 print("masked decode round-trips ✓")
 
 # 4. same decode through the Pallas TPU kernel (interpret mode on CPU)
-decoded_k = arr.decode(use_kernel=True)
+decoded_k = arr.decode(plan="kernel")
 assert np.array_equal(decoded_k, decoded)
 print("pallas kernel agrees ✓")
 
-# 5. the paper's byte format, by hand (Table 1)
+# 5. the array is a JAX pytree: pass it straight through jit — payloads are
+# traced leaves, format/block metadata is static, so same-shape arrays with
+# new data reuse one compiled program
+decode_grid = jax.jit(lambda a: a.decode_blocked(plan="jnp"))
+grid = decode_grid(arr)
+assert np.array_equal(np.asarray(grid).reshape(-1)[: arr.n], decoded)
+print("jit(decode) over the pytree array ✓")
+
+# 6. shard the block dimension across every available device and decode
+# block-parallel where the bytes live (shard_map, no cross-device traffic).
+# On 1 device this is a no-op placement; run under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it split.
+mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+sharded = arr.shard(mesh, axis="data")
+assert np.array_equal(sharded.decode(), decoded)
+print(f"sharded decode over {len(jax.devices())} device(s) agrees ✓")
+
+# 7. the paper's byte format, by hand (Table 1)
 for v in (1, 128, 16384):
     print(f"vbyte({v}) = {[bin(b) for b in venc.encode_stream(np.array([v], np.uint64))]}")
 
-# 6. the faster-to-decode successor format: Stream VByte (docs/formats.md).
+# 8. the faster-to-decode successor format: Stream VByte (docs/formats.md).
 # 2-bit length codes live in a separate control stream, so the decoder skips
 # the continuation-bit scan entirely — trade ~1-2 bits/int for decode speed.
 svb = CompressedIntArray.encode(docids, format="streamvbyte", differential=True)
-assert np.array_equal(svb.decode(use_kernel=True).astype(np.uint64), docids)
+assert np.array_equal(svb.decode(plan="kernel").astype(np.uint64), docids)
 print(f"streamvbyte: {svb.bits_per_int:.2f} bits/int, kernel round-trips ✓")

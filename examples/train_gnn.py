@@ -38,7 +38,9 @@ def main():
     batch = {"feats": jnp.asarray(g["feats"]), "labels": jnp.asarray(g["labels"]),
              "label_mask": jnp.ones(args.nodes, bool),
              "edge_valid": jnp.ones(csr.n_edges, bool),
-             **{k: jnp.asarray(v) for k, v in comp.items()}}
+             # comp["gaps"] is a CompressedIntArray — a pytree, so tree.map
+             # uploads its leaves like any other batch entry
+             **jax.tree.map(jnp.asarray, comp)}
 
     state = init_train_state(params)
     step_fn = jax.jit(make_train_step(

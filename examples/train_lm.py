@@ -46,7 +46,7 @@ def main():
 
     rng = np.random.default_rng(0)
     tokens = token_stream(rng, args.batch * (args.seq + 1) * 64, cfg.vocab)
-    pipe = CompressedTokenPipeline(tokens, args.batch, args.seq, use_kernel=True)
+    pipe = CompressedTokenPipeline(tokens, args.batch, args.seq, plan="kernel")
     print(f"pipeline: {pipe.n_steps} shards, "
           f"compression {pipe.compression_ratio():.2f}x")
 

@@ -6,6 +6,15 @@ histories and retrieval candidate lists are all stored in this form and
 decoded on device by a vectorized decoder or its Pallas kernel
 (``repro.kernels.vbyte_decode``).
 
+The array is a **registered JAX pytree**: the blocked operand arrays
+(``payload`` — or ``control``/``data`` for Stream VByte — plus ``counts``
+and ``bases``) are traced leaves, while ``format`` / ``block_size`` /
+``differential`` / ``n`` / ``ragged`` are static aux data. That means a
+``CompressedIntArray`` passes through ``jit`` / ``grad`` / ``scan`` /
+``shard_map`` like any other array — call sites hand the array itself to
+models and kernels instead of unpacking ``device_operands()`` dicts, and
+two arrays with the same shapes share one jit trace.
+
 Two on-device formats are supported, selected with ``format=``:
 
 * ``"vbyte"`` (default) — the classic format of Plaisance, Kurz & Lemire:
@@ -30,14 +39,23 @@ binding constraint, ``"streamvbyte"`` when decode throughput is. Both
 formats share the blocked SPMD layout (``block_size`` integers per block,
 per-block ``counts``/``bases``) so every block decodes independently, and
 both support fused differential (delta) decoding of sorted id lists.
+
+Because blocks are independent, the block dimension is also the natural
+**sharding** dimension: ``arr.shard(mesh, axis="data")`` places the block
+dim of every leaf across a mesh axis with ``NamedSharding``, and the
+dispatch layer (``repro.kernels.vbyte_decode.dispatch``) decodes each
+shard's blocks where they live via ``shard_map`` — no cross-device decode
+traffic (see docs/serving.md).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Union
+import warnings
+from dataclasses import dataclass, field, replace
+from typing import Any
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from .vbyte import encode as venc
@@ -46,14 +64,118 @@ from .vbyte import stream_vbyte as svb
 
 FORMATS = ("vbyte", "streamvbyte")
 
+# pytree leaves per format, in flatten order (the block dim leads every leaf)
+FORMAT_LEAVES = {
+    "vbyte": ("payload", "counts", "bases"),
+    "streamvbyte": ("control", "data", "counts", "bases"),
+}
+
+_USE_KERNEL_MSG = (
+    "use_kernel= is deprecated; pass plan= instead "
+    "(use_kernel=True -> plan='kernel', use_kernel=False -> plan='jnp'; "
+    "see repro.kernels.vbyte_decode.dispatch)")
+
+
+def warn_use_kernel(use_kernel: bool) -> str:
+    """Map the legacy ``use_kernel`` boolean to a plan name, with a warning."""
+    warnings.warn(_USE_KERNEL_MSG, DeprecationWarning, stacklevel=3)
+    return "kernel" if use_kernel else "jnp"
+
 
 @dataclass(frozen=True)
 class CompressedIntArray:
-    """A compressed, block-decodable array of uint32 (VByte or Stream VByte)."""
+    """A compressed, block-decodable array of uint32 (VByte or Stream VByte).
 
-    enc: Union[venc.BlockedEncoding, svb.StreamVByteEncoding]
+    Leaves (traced; any of numpy / jax / ShapeDtypeStruct / PartitionSpec —
+    the class is a pytree container, not an array wrapper):
+
+    * ``payload`` — ``uint8 [n_blocks, stride]`` (``format="vbyte"`` only)
+    * ``control`` — ``uint8 [n_blocks, block_size // 4]`` (streamvbyte)
+    * ``data``    — ``uint8 [n_blocks, data_stride]`` (streamvbyte)
+    * ``counts``  — ``int32 [n_blocks]`` valid integers per block
+    * ``bases``   — ``uint32 [n_blocks]`` differential carry-in
+
+    Static aux data (part of the jit trace key, never traced): ``format``,
+    ``block_size``, ``differential``, ``n``, ``ragged``.
+    """
+
+    payload: Any = None  # vbyte
+    control: Any = None  # streamvbyte
+    data: Any = None  # streamvbyte
+    counts: Any = None
+    bases: Any = None
+    format: str = "vbyte"
+    block_size: int = 128
+    differential: bool = False
+    n: int = 0
+    ragged: bool = False  # one independent list (bag) per block
+    # original host-side encoding (BlockedEncoding / StreamVByteEncoding);
+    # carries exact-size accounting (payload_bytes). NOT a pytree child —
+    # arrays reconstructed inside jit/shard_map have host_enc=None.
+    host_enc: Any = field(default=None, compare=False, repr=False)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten_with_keys(self):
+        names = FORMAT_LEAVES[self.format]
+        children = tuple(
+            (jax.tree_util.GetAttrKey(nm), getattr(self, nm)) for nm in names)
+        aux = (self.format, self.block_size, self.differential, self.n,
+               self.ragged)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, block_size, differential, n, ragged = aux
+        kw = dict(zip(FORMAT_LEAVES[fmt], children))
+        return cls(format=fmt, block_size=block_size,
+                   differential=differential, n=n, ragged=ragged, **kw)
 
     # -- construction -----------------------------------------------------
+    @classmethod
+    def _from_encoding(cls, enc, format: str) -> "CompressedIntArray":
+        names = FORMAT_LEAVES[format]
+        kw = {nm: getattr(enc, nm) for nm in names}
+        return cls(format=format, block_size=enc.block_size,
+                   differential=enc.differential, n=enc.n,
+                   ragged=getattr(enc, "ragged", False), host_enc=enc, **kw)
+
+    @classmethod
+    def from_operands(
+        cls,
+        operands: dict[str, Any],
+        *,
+        format: str = "vbyte",
+        block_size: int = 128,
+        differential: bool = False,
+        n: int | None = None,
+        ragged: bool = False,
+    ) -> "CompressedIntArray":
+        """Wrap existing blocked operand arrays (no re-encoding).
+
+        ``operands`` holds the format leaves (``payload`` or
+        ``control``/``data``, plus ``counts``/``bases``). ``n`` defaults to
+        ``sum(counts)`` when the counts are concrete. The leaves may also be
+        ``ShapeDtypeStruct``s or ``PartitionSpec``s — useful for building
+        abstract batch templates and sharding-spec trees with the same
+        treedef as a real array.
+        """
+        if format not in FORMAT_LEAVES:
+            raise ValueError(
+                f"unknown format {format!r}; expected one of {FORMATS}")
+        names = FORMAT_LEAVES[format]
+        missing = [k for k in names if k not in operands]
+        if missing:
+            raise ValueError(f"format {format!r} operands missing {missing}")
+        if n is None:
+            try:
+                n = int(np.asarray(operands["counts"]).sum())
+            except TypeError:
+                raise ValueError(
+                    "n= is required when counts are abstract") from None
+        return cls(format=format, block_size=block_size,
+                   differential=differential, n=n, ragged=ragged,
+                   **{nm: operands[nm] for nm in names})
+
     @classmethod
     def encode(
         cls,
@@ -80,7 +202,7 @@ class CompressedIntArray:
             )
         else:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
-        return cls(enc)
+        return cls._from_encoding(enc, format)
 
     @classmethod
     def encode_ragged(
@@ -110,53 +232,69 @@ class CompressedIntArray:
                 stride_multiple=stride_multiple)
         else:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
-        return cls(enc)
+        return cls._from_encoding(enc, format)
 
     # -- metadata ----------------------------------------------------------
     @property
-    def format(self) -> str:
-        return (
-            "streamvbyte"
-            if isinstance(self.enc, svb.StreamVByteEncoding)
-            else "vbyte"
-        )
+    def enc(self):
+        """The host-side encoding object (exact-size accounting). ``None``
+        for arrays reconstructed from traced/abstract leaves."""
+        return self.host_enc
 
-    @property
-    def ragged(self) -> bool:
-        return getattr(self.enc, "ragged", False)
-
-    @property
-    def n(self) -> int:
-        return self.enc.n
+    def _require_host_enc(self, what: str):
+        if self.host_enc is None:
+            raise RuntimeError(
+                f"{what} needs the host-side encoding, which this "
+                "CompressedIntArray no longer carries (it was rebuilt from "
+                "pytree leaves, e.g. inside jit). Compute it on the array "
+                "returned by encode()/encode_ragged().")
+        return self.host_enc
 
     @property
     def n_blocks(self) -> int:
-        return self.enc.n_blocks
+        return self.counts.shape[0]
 
     @property
     def bits_per_int(self) -> float:
-        return self.enc.bits_per_int
+        return self._require_host_enc("bits_per_int").bits_per_int
 
     @property
     def compression_ratio(self) -> float:
         """Raw uint32 bytes / tight compressed bytes (the paper's framing)."""
-        return 4.0 * self.n / max(self.enc.payload_bytes, 1)
+        enc = self._require_host_enc("compression_ratio")
+        return 4.0 * self.n / max(enc.payload_bytes, 1)
+
+    @property
+    def sharding(self):
+        """The NamedSharding of the block dimension (None when unsharded)."""
+        s = getattr(self.counts, "sharding", None)
+        return s
 
     # -- device form --------------------------------------------------------
     def device_operands(self) -> dict[str, Any]:
         """Arrays consumed by the decoders / the Pallas kernels."""
-        if self.format == "streamvbyte":
-            return {
-                "control": jnp.asarray(self.enc.control),
-                "data": jnp.asarray(self.enc.data),
-                "counts": jnp.asarray(self.enc.counts),
-                "bases": jnp.asarray(self.enc.bases),
-            }
-        return {
-            "payload": jnp.asarray(self.enc.payload),
-            "counts": jnp.asarray(self.enc.counts),
-            "bases": jnp.asarray(self.enc.bases),
-        }
+        return {nm: jnp.asarray(getattr(self, nm))
+                for nm in FORMAT_LEAVES[self.format]}
+
+    def shard(self, mesh, axis="data") -> "CompressedIntArray":
+        """Place the block dimension of every leaf across ``mesh[axis]``.
+
+        Returns a new array whose leaves carry ``NamedSharding``s (block dim
+        over ``axis``, trailing dims replicated). ``n_blocks`` is padded with
+        count=0 blocks to a multiple of the axis size so ``shard_map``
+        decode divides evenly — padding blocks decode to nothing. The
+        dispatch layer auto-selects the block-parallel ``shard_map`` decode
+        path when it sees sharded operands (``repro.kernels.vbyte_decode.
+        dispatch``); see docs/serving.md.
+        """
+        from repro.distributed.sharding import shard_compressed
+
+        return shard_compressed(self, mesh, axis=axis)
+
+    def replace_leaves(self, **leaves) -> "CompressedIntArray":
+        """New array with some leaves substituted (host_enc dropped if any
+        leaf changed shape is the caller's concern; sizes stay as declared)."""
+        return replace(self, **leaves)
 
     # -- decoding ------------------------------------------------------------
     def decode_blocked(self, *, plan="auto"):
@@ -165,31 +303,26 @@ class CompressedIntArray:
         ``plan`` is a dispatch plan name or ``DecodePlan``
         (``repro.kernels.vbyte_decode.dispatch``): ``"auto"`` consults the
         autotune cache, ``"kernel"``/``"jnp"`` force the Pallas / pure-jnp
-        path.
+        path, ``"sharded"`` forces the block-parallel ``shard_map`` path
+        (auto-selected anyway when the operands are sharded).
         """
         from repro.kernels.vbyte_decode import dispatch
 
-        return dispatch.decode(
-            self.device_operands(),
-            format=self.format,
-            block_size=self.enc.block_size,
-            differential=self.enc.differential,
-            plan=plan,
-        )
+        return dispatch.decode(self, plan=plan)
 
     def decode(self, *, use_kernel: bool | None = None, plan="auto") -> np.ndarray:
         """Decode to uint32[n] (host-visible).
 
-        ``use_kernel`` is the legacy boolean (True → Pallas kernel, False →
-        jnp decoder); it maps onto the dispatch plan and is kept for
-        back-compat. Prefer ``plan=``.
+        ``use_kernel`` is the deprecated legacy boolean (True → Pallas
+        kernel, False → jnp decoder); it maps onto the dispatch plan and
+        emits a ``DeprecationWarning``. Use ``plan=``.
         """
         if use_kernel is not None:
-            plan = "kernel" if use_kernel else "jnp"
+            plan = warn_use_kernel(use_kernel)
         grid = np.asarray(self.decode_blocked(plan=plan))
         if self.ragged:  # block b holds list b: concatenate the valid prefixes
-            mask = (np.arange(self.enc.block_size)[None, :]
-                    < np.asarray(self.enc.counts)[:, None])
+            mask = (np.arange(self.block_size)[None, :]
+                    < np.asarray(self.counts)[:, None])
             return grid[mask].astype(np.uint32)
         return grid.reshape(-1)[: self.n].astype(np.uint32)
 
@@ -197,19 +330,26 @@ class CompressedIntArray:
         """Byte-at-a-time reference decode (slow; tests/benchmarks only)."""
         if self.format == "streamvbyte":
             out = svb.decode_blocked_scalar(
-                self.enc.control,
-                self.enc.data,
-                self.enc.counts,
-                self.enc.bases,
-                self.enc.block_size,
-                differential=self.enc.differential,
+                np.asarray(self.control),
+                np.asarray(self.data),
+                np.asarray(self.counts),
+                np.asarray(self.bases),
+                self.block_size,
+                differential=self.differential,
             )
         else:
             out = vref.decode_blocked_scalar(
-                self.enc.payload,
-                self.enc.counts,
-                self.enc.bases,
-                self.enc.block_size,
-                differential=self.enc.differential,
+                np.asarray(self.payload),
+                np.asarray(self.counts),
+                np.asarray(self.bases),
+                self.block_size,
+                differential=self.differential,
             )
         return out.reshape(-1)[: self.n].astype(np.uint32)
+
+
+jax.tree_util.register_pytree_with_keys(
+    CompressedIntArray,
+    CompressedIntArray.tree_flatten_with_keys,
+    CompressedIntArray.tree_unflatten,
+)

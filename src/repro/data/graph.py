@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.compressed_array import CompressedIntArray
 from repro.core.vbyte.encode import encode_blocked
 
 from .sampler import CSRGraph
@@ -31,12 +32,14 @@ def adjacency_gaps(csr: CSRGraph) -> np.ndarray:
 def compress_adjacency(csr: CSRGraph, *, block_size: int = 128) -> dict:
     """Device-ready compressed adjacency batch fields.
 
-    Besides the blocked VByte gap payload, two kinds of skip bases are
-    precomputed (the paper's inverted-index skip pointers, applied to
-    adjacency): ``gap_bases`` [n_blocks] — the gap running sum entering each
-    block (makes the global cumsum a block-local differential decode) — and
-    ``row_gap_bases`` [n_nodes] — the running sum entering each list (makes
-    absolute-id reconstruction shard-local). ~4 B each per block/row.
+    ``gaps`` is a ``CompressedIntArray`` (a pytree — it rides inside the
+    batch dict straight through ``jit``): the blocked VByte gap stream with
+    ``differential=True`` against precomputed running-sum ``bases``
+    [n_blocks] — the gap running sum entering each block, which makes the
+    global cumsum a block-local differential decode (the paper's
+    inverted-index skip pointers, applied to adjacency). ``row_gap_bases``
+    [n_nodes] — the running sum entering each list — makes absolute-id
+    reconstruction shard-local. ~4 B each per block/row.
     """
     gaps = adjacency_gaps(csr)
     enc = encode_blocked(gaps, block_size=block_size, differential=False)
@@ -44,10 +47,13 @@ def compress_adjacency(csr: CSRGraph, *, block_size: int = 128) -> dict:
     block_starts = np.arange(enc.n_blocks) * block_size
     block_starts = np.minimum(block_starts, len(gaps))
     row_starts = np.minimum(csr.indptr[:-1], len(gaps))
+    gaps_arr = CompressedIntArray.from_operands(
+        {"payload": enc.payload, "counts": enc.counts,
+         "bases": csum[block_starts].astype(np.uint32)},  # running-sum bases
+        format="vbyte", block_size=block_size, differential=True,
+        n=len(gaps))
     return {
-        "gap_payload": enc.payload,
-        "gap_counts": enc.counts,
-        "gap_bases": csum[block_starts].astype(np.uint32),  # running-sum bases
+        "gaps": gaps_arr,
         "row_gap_bases": csum[row_starts].astype(np.uint32),
         "row_offsets": csr.indptr.astype(np.int32),
         "edge_valid": np.ones(csr.n_edges, bool),

@@ -25,9 +25,12 @@ class CompressedTokenPipeline:
         self.step_tokens = batch * (seq_len + 1)
         self.n_steps = len(self.tokens) // self.step_tokens
         # dispatch plan (repro.kernels.vbyte_decode.dispatch); use_kernel is
-        # the legacy boolean alias
-        self.plan = ("kernel" if use_kernel else "jnp") \
-            if use_kernel is not None else plan
+        # the deprecated legacy boolean alias
+        if use_kernel is not None:
+            from repro.core.compressed_array import warn_use_kernel
+
+            plan = warn_use_kernel(use_kernel)
+        self.plan = plan
         self.block_size = block_size
         if self.n_steps == 0:
             raise ValueError("token stream shorter than one step")

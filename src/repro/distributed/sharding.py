@@ -132,6 +132,67 @@ def recsys_param_spec(cfg, *, serving: bool = False):
 
 
 # ----------------------------------------------------------------------------
+# compressed-array (blocked CompressedIntArray) rules
+# ----------------------------------------------------------------------------
+# Every leaf of a CompressedIntArray leads with the block dimension, and every
+# block decodes independently (per-block counts/bases carry all cross-block
+# state) — so the block dim is THE sharding dim: payload/control/data get
+# P(axis, None), counts/bases get P(axis). The dispatch layer then runs the
+# decode per shard under shard_map with zero cross-device decode traffic
+# (repro.kernels.vbyte_decode.dispatch; docs/serving.md).
+
+def compressed_block_specs(format: str, axis=DP) -> dict:
+    """Per-leaf PartitionSpecs for a blocked compressed stream, as a dict
+    keyed like ``device_operands()`` (usable as shard_map in_specs)."""
+    from repro.core.compressed_array import FORMAT_LEAVES
+
+    return {nm: P(axis, None) if nm in ("payload", "control", "data")
+            else P(axis)
+            for nm in FORMAT_LEAVES[format]}
+
+
+def compressed_array_specs(arr, axis=DP):
+    """A CompressedIntArray-shaped pytree of PartitionSpecs (same treedef as
+    ``arr``) — block dim on ``axis``. Feed to ``to_named`` / ``in_shardings``
+    next to the abstract batch templates the registry builds."""
+    import dataclasses
+
+    return dataclasses.replace(arr, host_enc=None,
+                               **compressed_block_specs(arr.format, axis))
+
+
+def shard_compressed(arr, mesh: Mesh, axis="data"):
+    """Place ``arr``'s block dimension across ``mesh[axis]`` (NamedSharding).
+
+    Pads ``n_blocks`` with count=0 blocks to a multiple of the axis size so
+    block-parallel ``shard_map`` decode divides evenly; padding blocks hold
+    no integers, so every decode/epilogue output is unchanged. Axis names
+    absent from the mesh are dropped (the ``constrain`` convention), which
+    makes the same call work on 1-device test meshes (fully replicated).
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.compressed_array import FORMAT_LEAVES
+
+    axes = _resolve_axes((axis,), mesh)[0]
+    names = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    n_shards = 1
+    for a in names:
+        n_shards *= mesh.shape[a]
+    pad = (-arr.n_blocks) % max(n_shards, 1)
+    leaves = {}
+    for nm in FORMAT_LEAVES[arr.format]:
+        x = jnp.asarray(getattr(arr, nm))
+        if pad:
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        leaves[nm] = jax.device_put(x, NamedSharding(mesh, spec))
+    return dataclasses.replace(arr, **leaves)
+
+
+# ----------------------------------------------------------------------------
 # assembling full state / batch shardings
 # ----------------------------------------------------------------------------
 def tree_specs(params, rule):

@@ -22,6 +22,19 @@ A :class:`DecodePlan` names one concrete path:
 heuristic default is the fused path on the current backend. Legacy string
 plans keep old call sites working: ``"kernel"`` → Pallas, ``"jnp"`` → jnp,
 ``"fused"``/``"unfused"`` force fusion on the default path.
+
+**Sharded block-parallel decode.** Because every block decodes
+independently (per-block ``counts``/``bases`` carry all cross-block
+state), a compressed stream whose block dimension is placed across a mesh
+axis (``CompressedIntArray.shard(mesh, axis="data")``) decodes where it
+lives: :func:`decode` detects block-sharded operands and runs the chosen
+single-device plan **per shard** under ``shard_map`` — same decode-tile
+code, zero cross-device decode traffic, so the sharded result is bit-exact
+with the single-device path by construction (fused epilogues included:
+each block's bag/score/rebase output is block-local). ``plan="sharded"``
+forces this path (raises if the operands aren't sharded); otherwise it is
+auto-selected. Detection needs concrete arrays — call :func:`decode`
+outside any enclosing ``jit`` (it jits internally) to use it.
 """
 from __future__ import annotations
 
@@ -36,6 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.vbyte import masked as vmasked
 from repro.core.vbyte import stream_masked as svb_masked
@@ -201,47 +216,21 @@ def _apply_only(grid: jax.Array, counts: jax.Array, extras: dict, *,
     return eplib.apply_grid(epilogue, grid, counts, extras)
 
 
-def decode(
-    operands: dict,  # device_operands(): payload|control/data + counts/bases
-    *,
-    format: str,
-    block_size: int,
-    differential: bool,
-    epilogue: str = "stream",
-    epilogue_operands: dict | None = None,
-    plan: DecodePlan | str | None = "auto",
-    interpret: bool | None = None,
-):
-    """Decode a blocked compressed stream, optionally fused into a consumer.
+def _execute(operands: dict, extras: dict, *, format: str, epilogue: str,
+             block_size: int, differential: bool, plan: DecodePlan,
+             interpret: bool | None = None):
+    """Run one resolved plan on (already validated/normalized) operands.
 
-    Returns the epilogue's output: the ``uint32 [n_blocks, block_size]``
-    grid for ``epilogue="stream"``, ``[n_blocks, d]`` bag sums for
-    ``"bag_sum"``, ``(ids, scores)`` for ``"dot_score"``, rebased edge ids
-    for ``"adjacency_rebase"``.
+    This is the single-device execution body; the sharded path runs exactly
+    this function per shard under ``shard_map``, which is what makes the
+    sharded decode bit-exact with the single-device one by construction.
     """
-    if format not in eplib.FORMAT_OPERANDS:
-        raise ValueError(f"unknown format {format!r}; expected one of "
-                         f"{tuple(eplib.FORMAT_OPERANDS)}")
     ep = eplib.get_epilogue(epilogue)
-    extras = dict(epilogue_operands or {})
-    ep.check(differential, extras)
-    p = resolve_plan(plan, format=format, epilogue=epilogue,
-                     block_size=block_size)
-
-    fmt_keys = eplib.FORMAT_OPERANDS[format] + ("counts", "bases")
-    missing = [k for k in fmt_keys if k not in operands]
-    if missing:
-        raise ValueError(f"format {format!r} operands missing {missing}")
-    nb = operands[fmt_keys[0]].shape[0]
-    operands = dict(operands)
-    operands["counts"] = normalize_block_meta("counts", operands["counts"], nb)
-    operands["bases"] = normalize_block_meta("bases", operands["bases"], nb)
-
     if epilogue == "stream":
         return _decode_grid(operands, format=format, block_size=block_size,
-                            differential=differential, plan=p)
+                            differential=differential, plan=plan)
 
-    if p.path == "pallas" and p.fused:
+    if plan.path == "pallas" and plan.fused:
         # broadcast extras (tables) must be VMEM-resident per grid step;
         # past the budget, degrade to pallas-decode + jnp epilogue instead
         # of failing Mosaic compilation (docs/kernels.md §TPU notes)
@@ -252,15 +241,159 @@ def decode(
             return eplib.fused_decode(
                 operands, extras, format=format, epilogue=epilogue,
                 block_size=block_size, differential=differential,
-                block_tile=p.block_tile, interpret=interpret)
-        p = DecodePlan("pallas", fused=False, block_tile=p.block_tile)
-    if p.path == "jnp" and p.fused:
+                block_tile=plan.block_tile, interpret=interpret)
+        plan = DecodePlan("pallas", fused=False, block_tile=plan.block_tile)
+    if plan.path == "jnp" and plan.fused:
         return _jnp_fused(operands, extras, format=format, epilogue=epilogue,
                           block_size=block_size, differential=differential)
     # unfused: decode grid, then the epilogue as a second dispatch
     grid = _decode_grid(operands, format=format, block_size=block_size,
-                        differential=differential, plan=p)
+                        differential=differential, plan=plan)
     return _apply_only(grid, operands["counts"], extras, epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# sharded block-parallel execution (shard_map over the block dimension)
+# ---------------------------------------------------------------------------
+def operand_mesh_axes(operands: dict):
+    """``(mesh, block_axes)`` when every operand's block dim is sharded over
+    a >1-device mesh axis with ``NamedSharding``; ``None`` otherwise.
+
+    Tracers (operands seen under an enclosing ``jit``) have no concrete
+    sharding — detection then returns ``None`` and the single-device body
+    runs, which GSPMD partitions as usual.
+    """
+    mesh = None
+    axes = None
+    for v in operands.values():
+        try:
+            sh = v.sharding
+        except Exception:
+            return None
+        if not isinstance(sh, NamedSharding):
+            return None
+        spec = tuple(sh.spec) + (None,) * (v.ndim - len(sh.spec))
+        a = spec[0]
+        a = (a,) if isinstance(a, str) else tuple(a or ())
+        if any(x is not None for x in spec[1:]):
+            return None  # only block-dim sharding is block-parallel-safe
+        if mesh is None:
+            mesh, axes = sh.mesh, a
+        elif sh.mesh != mesh or a != axes:
+            return None
+    if mesh is None or not axes:
+        return None
+    n_shards = 1
+    for name in axes:
+        n_shards *= mesh.shape[name]
+    return (mesh, axes) if n_shards > 1 else None
+
+
+@functools.lru_cache(maxsize=128)
+def _build_sharded_fn(mesh, axes: tuple, format: str, epilogue: str,
+                      block_size: int, differential: bool, plan: DecodePlan,
+                      interpret: bool | None, multi_query: bool):
+    """jit(shard_map(execute-body)) for one (mesh, workload) — cached so
+    repeated serving calls reuse one trace. Exposed for tests (the compiled
+    HLO must contain no cross-device collectives)."""
+    ep = eplib.get_epilogue(epilogue)
+    spec_block = P(axes, None)
+    in_operands = {k: spec_block for k in eplib.FORMAT_OPERANDS[format]}
+    in_operands.update(counts=P(axes), bases=P(axes))
+    in_extras = {k: (spec_block if k in ep.tiled_extras else P())
+                 for k in ep.extras}
+    if epilogue == "dot_score":
+        out_specs = (spec_block,
+                     P(axes, None, None) if multi_query else spec_block)
+    else:
+        out_specs = spec_block  # stream / bag_sum / adjacency_rebase: [nb, ·]
+
+    body = functools.partial(
+        _execute, format=format, epilogue=epilogue, block_size=block_size,
+        differential=differential, plan=plan, interpret=interpret)
+    return jax.jit(shard_map(
+        lambda operands, extras: body(operands, extras),
+        mesh=mesh, in_specs=(in_operands, in_extras), out_specs=out_specs,
+        check_rep=False))
+
+
+def decode(
+    operands,  # CompressedIntArray, or device_operands()-style dict
+    *,
+    format: str | None = None,
+    block_size: int | None = None,
+    differential: bool | None = None,
+    epilogue: str = "stream",
+    epilogue_operands: dict | None = None,
+    plan: DecodePlan | str | None = "auto",
+    interpret: bool | None = None,
+):
+    """Decode a blocked compressed stream, optionally fused into a consumer.
+
+    ``operands`` is either a ``CompressedIntArray`` (format/block_size/
+    differential come from its static aux data) or the raw operand dict
+    (``payload`` | ``control``/``data`` + ``counts``/``bases``), in which
+    case the three metadata kwargs are required.
+
+    Returns the epilogue's output: the ``uint32 [n_blocks, block_size]``
+    grid for ``epilogue="stream"``, ``[n_blocks, d]`` bag sums for
+    ``"bag_sum"``, ``(ids, scores)`` for ``"dot_score"``, rebased edge ids
+    for ``"adjacency_rebase"``.
+
+    When the operands' block dimension is sharded over a >1-device mesh
+    axis (``CompressedIntArray.shard``), the plan runs per shard under
+    ``shard_map`` — block-parallel, no cross-device decode traffic.
+    ``plan="sharded"`` forces that path and raises if operands aren't
+    sharded.
+    """
+    from repro.core.compressed_array import CompressedIntArray
+
+    if isinstance(operands, CompressedIntArray):
+        arr = operands
+        operands = arr.device_operands()
+        format = arr.format if format is None else format
+        block_size = arr.block_size if block_size is None else block_size
+        differential = (arr.differential if differential is None
+                        else differential)
+    if format is None or block_size is None or differential is None:
+        raise ValueError(
+            "format=/block_size=/differential= are required when operands "
+            "are a raw dict (pass a CompressedIntArray to omit them)")
+    if format not in eplib.FORMAT_OPERANDS:
+        raise ValueError(f"unknown format {format!r}; expected one of "
+                         f"{tuple(eplib.FORMAT_OPERANDS)}")
+    ep = eplib.get_epilogue(epilogue)
+    extras = dict(epilogue_operands or {})
+    ep.check(differential, extras)
+    force_sharded = plan == "sharded"
+    p = resolve_plan("auto" if force_sharded else plan, format=format,
+                     epilogue=epilogue, block_size=block_size)
+
+    fmt_keys = eplib.FORMAT_OPERANDS[format] + ("counts", "bases")
+    missing = [k for k in fmt_keys if k not in operands]
+    if missing:
+        raise ValueError(f"format {format!r} operands missing {missing}")
+    nb = operands[fmt_keys[0]].shape[0]
+    operands = {k: operands[k] for k in fmt_keys}
+    operands["counts"] = normalize_block_meta("counts", operands["counts"], nb)
+    operands["bases"] = normalize_block_meta("bases", operands["bases"], nb)
+
+    mesh_axes = operand_mesh_axes(operands)
+    if force_sharded and mesh_axes is None:
+        raise ValueError(
+            "plan='sharded' requires operands whose block dimension is "
+            "sharded over a >1-device mesh axis — use "
+            "CompressedIntArray.shard(mesh, axis=...) first")
+    if mesh_axes is not None:
+        mesh, axes = mesh_axes
+        q = extras["query"] if epilogue == "dot_score" else None
+        multi_query = bool(q is not None and q.size // q.shape[-1] > 1)
+        fn = _build_sharded_fn(mesh, axes, format, epilogue, block_size,
+                               differential, p, interpret, multi_query)
+        return fn(operands, extras)
+    return _execute(operands, extras, format=format, epilogue=epilogue,
+                    block_size=block_size, differential=differential,
+                    plan=p, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -73,8 +73,11 @@ def _dot_score_apply(vals, valid, *, table, query):
     ids = jnp.where(valid, vals, 0)  # pad slots score id 0 (the pad row)
     vecs = jnp.take(table, ids.reshape(-1), axis=0, mode="clip")
     vecs = vecs.reshape(T, B, -1)
-    scores = jnp.einsum("tbd,d->tb", vecs, query.reshape(-1))
-    return ids, scores.astype(jnp.float32)
+    q = query.reshape(-1, query.shape[-1])  # [n_queries, d]
+    if q.shape[0] == 1:  # single query: scores [T, B] (the original contract)
+        return ids, jnp.einsum("tbd,d->tb", vecs, q[0]).astype(jnp.float32)
+    # microbatched queries (the serving engine's bucket): scores [T, B, q]
+    return ids, jnp.einsum("tbd,qd->tbq", vecs, q).astype(jnp.float32)
 
 
 def _adjacency_rebase_apply(vals, valid, *, edge_base):
@@ -137,7 +140,12 @@ def _bag_sum_out(nb, B, bt, extras):
 
 def _dot_score_out(nb, B, bt, extras):
     ids, ids_spec = _grid_out(nb, B, bt, jnp.int32)
-    scores, scores_spec = _grid_out(nb, B, bt, jnp.float32)
+    nq = extras["query"].size // extras["query"].shape[-1]
+    if nq == 1:
+        scores, scores_spec = _grid_out(nb, B, bt, jnp.float32)
+    else:
+        scores = jax.ShapeDtypeStruct((nb, B, nq), jnp.float32)
+        scores_spec = pl.BlockSpec((bt, B, nq), lambda g: (g, 0, 0))
     return (ids, scores), (ids_spec, scores_spec)
 
 

@@ -1,24 +1,36 @@
-"""Serving launcher: prefill + decode loop (LM) or scoring (recsys).
+"""Serving launcher: LM prefill+decode loop, recsys scoring, and the
+batched compressed serving engine (:class:`ServingEngine`).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval \
+        --reduced --devices 8 --requests 256
+
+The two-tower arch runs the ``ServingEngine``: a compressed candidate
+corpus resident on the mesh (``CompressedIntArray.shard`` — block dim over
+the data axis), retrieval requests microbatched to a fixed set of jitted
+bucket shapes, and scoring through the fused ``dot_score`` decode epilogue
+against a precomputed item-vector table. It prints aggregate QPS and
+p50/p99 request latency and merges them into ``experiments/benchmarks.json``
+(the cross-PR perf trajectory). See docs/serving.md.
+
+``--devices N`` forces N host-platform devices (sets XLA_FLAGS before jax
+initializes), which is how the sharded engine is exercised on CPU.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.distributed.api import activate_mesh
-from repro.launch.mesh import make_host_mesh
-from repro.models import registry
 
 
 def serve_lm(cfg, tokens_to_gen: int, batch: int):
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
     from repro.models import lm
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -43,7 +55,11 @@ def serve_lm(cfg, tokens_to_gen: int, batch: int):
 
 
 def serve_recsys(cfg, batch: int):
-    from repro.data.synthetic import recsys_batch
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
     from repro.models import recsys
 
     params = recsys.init_params(jax.random.PRNGKey(0), cfg)
@@ -74,23 +90,309 @@ def serve_recsys(cfg, batch: int):
           f"(scores shape {scores.shape})")
 
 
+# ---------------------------------------------------------------------------
+# the batched compressed serving engine
+# ---------------------------------------------------------------------------
+class ServingEngine:
+    """Serve retrieval / embedding-bag requests from a sharded compressed corpus.
+
+    Architecture (docs/serving.md):
+
+    * **Resident corpus** — the candidate id list lives compressed on the
+      mesh: ``CompressedIntArray.shard(mesh, axis="data")`` places the block
+      dimension across devices, and every decode runs block-parallel under
+      ``shard_map`` where the bytes sit (no re-upload per request, no
+      cross-device decode traffic).
+    * **Precomputed item table** — the two-tower item tower runs ONCE over
+      the vocabulary at engine build; serving gathers from the resulting
+      ``[V, d]`` table inside the fused ``dot_score`` decode epilogue, so a
+      request costs user-tower + decode-gather-dot + top-k.
+    * **Bucketed microbatching** — requests are grouped to the next bucket
+      size (default 1/2/4/8) and padded, so every serving step hits one of a
+      fixed set of jitted shapes — no retracing in steady state. The decoded
+      corpus is shared by the whole microbatch: the ``dot_score`` epilogue
+      takes the bucket's ``[b, d]`` query matrix in one pass.
+
+    ``retrieve(user_ids, hists)`` serves one microbatch; ``run_workload``
+    drives a request list through the bucketing loop and reports aggregate
+    QPS and per-request p50/p99 latency.
+    """
+
+    def __init__(self, params, cfg, corpus, *, mesh=None, axis="data",
+                 top_k: int = 10, buckets=(1, 2, 4, 8),
+                 plan="auto", dtype=None):
+        import numpy as np
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import recsys
+        from repro.nn import layers as nnl
+
+        self._np, self._jax, self._jnp = np, jax, jnp
+        self.cfg = cfg
+        self.params = params
+        self.top_k = top_k
+        self.plan = plan
+        self.buckets = tuple(sorted(buckets))
+        self.dtype = dtype or nnl.DEFAULT_COMPUTE_DTYPE
+        self.mesh = mesh
+
+        # resident corpus: sharded over the mesh axis, or (single device)
+        # placed once — either way requests never re-upload the bytes
+        self.corpus = (corpus.shard(mesh, axis=axis) if mesh is not None
+                       else corpus.replace_leaves(**corpus.device_operands()))
+
+        # precompute the item-vector table once: item_tower over the whole
+        # (rounded) vocabulary. Row 0 is the pad row; dot_score pad slots
+        # gather it, and retrieve() masks id==0 before top-k.
+        item_ids = jnp.arange(cfg.vocab_rows, dtype=jnp.int32)
+        table = jax.jit(
+            lambda p: recsys.item_tower(p, item_ids, cfg, dtype=self.dtype)
+        )(params).astype(self.dtype)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            table = jax.device_put(table, NamedSharding(mesh, P()))
+        self.item_table = jax.block_until_ready(table)
+
+        # per-bucket jitted user tower + top-k post; the fused decode jits
+        # itself per (mesh, workload) inside the dispatch layer
+        self._user_fn = jax.jit(
+            lambda p, uid, hist: recsys.user_tower(p, uid, hist, cfg,
+                                                   dtype=self.dtype))
+        self._topk_fn = jax.jit(self._mask_and_topk)
+        self._stats = []
+
+    # -- retrieval ---------------------------------------------------------
+    def _mask_and_topk(self, ids, scores):
+        jnp = self._jnp
+        flat_ids = ids.reshape(-1)  # [C]
+        if scores.ndim == 2:  # single query: [nb, B]
+            s = scores.reshape(1, -1)
+        else:  # [nb, B, b] -> [b, C]
+            s = scores.reshape(-1, scores.shape[-1]).T
+        s = jnp.where(flat_ids[None, :] == 0, -jnp.inf, s)  # mask pad slots
+        top_s, top_i = self._jax.lax.top_k(s, self.top_k)
+        return top_s, jnp.take(flat_ids, top_i)
+
+    def bucket_of(self, k: int) -> int:
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
+
+    def retrieve(self, user_ids, hists):
+        """Serve one microbatch: [b] user ids + [b, L] histories →
+        (scores [b, k], item ids [b, k]). b must be one of the buckets."""
+        from repro.kernels.vbyte_decode import dispatch
+
+        u = self._user_fn(self.params, user_ids, hists)  # [b, d]
+        ids, scores = dispatch.decode(
+            self.corpus, epilogue="dot_score",
+            epilogue_operands={"table": self.item_table, "query": u},
+            plan=self.plan)
+        return self._topk_fn(ids, scores)
+
+    # -- embedding-bag endpoint -------------------------------------------
+    def embed_bags(self, bags, *, format="vbyte"):
+        """Pooled embeddings for ragged id bags (one request = one bag).
+
+        The bag list is compressed on the host (one block per bag, ragged
+        layout) and reduced in the decode kernel's ``bag_sum`` epilogue —
+        the microbatched analogue of ``user_tower_compressed``'s history
+        path. Returns ``[len(bags), d]``.
+        """
+        from repro.core import CompressedIntArray
+        from repro.nn.embedding_bag import embedding_bag_compressed
+
+        k = len(bags)
+        b = self.bucket_of(k)
+        padded = list(bags) + [[] for _ in range(b - k)]
+        arr = CompressedIntArray.encode_ragged(
+            padded, format=format, block_size=self.cfg.seq_len,
+            differential=False)
+        out = embedding_bag_compressed(
+            self.params["item_id_emb"]["emb"], arr, mode="mean",
+            plan=self.plan, dtype=self.dtype)
+        return out[:k]
+
+    # -- workload driver ---------------------------------------------------
+    def warmup(self):
+        """Compile every bucket shape up front (excluded from latencies)."""
+        np, jnp = self._np, self._jnp
+        rng = np.random.default_rng(0)
+        for b in self.buckets:
+            uid = jnp.asarray(rng.integers(1, max(self.cfg.n_users, 2), b),
+                              jnp.int32)
+            hist = jnp.asarray(
+                rng.integers(1, self.cfg.n_items, (b, self.cfg.seq_len)),
+                jnp.int32)
+            self._jax.block_until_ready(self.retrieve(uid, hist))
+
+    def run_workload(self, requests, *, max_batch: int | None = None) -> dict:
+        """Drive (user_id, hist) requests through the microbatching loop.
+
+        Requests are drained greedily up to the largest bucket, padded to
+        the bucket shape, and served. This is a closed-loop drain of a
+        pre-built request list, so the reported p50/p99 are per-request
+        **service** latencies (host marshal + engine step for the request's
+        microbatch); queueing delay behind earlier batches is not included —
+        aggregate QPS over the whole drain captures that side.
+        """
+        np, jnp, jax = self._np, self._jnp, self._jax
+        # a microbatch can never exceed the largest jitted bucket shape
+        max_batch = min(max_batch or self.buckets[-1], self.buckets[-1])
+        lat = []
+        i = 0
+        t_start = time.perf_counter()
+        while i < len(requests):
+            take = min(max_batch, len(requests) - i)
+            b = self.bucket_of(take)
+            chunk = requests[i:i + take]
+            t0 = time.perf_counter()
+            uid = np.full(b, 1, np.int32)
+            hist = np.ones((b, self.cfg.seq_len), np.int32)
+            for j, (u, h) in enumerate(chunk):
+                uid[j] = u
+                hist[j] = h
+            top_s, top_i = self.retrieve(jnp.asarray(uid), jnp.asarray(hist))
+            jax.block_until_ready((top_s, top_i))
+            dt = time.perf_counter() - t0
+            lat.extend([dt] * take)  # whole microbatch completes together
+            i += take
+        wall = time.perf_counter() - t_start
+        lat_ms = np.sort(np.array(lat)) * 1e3
+        stats = {
+            "n_requests": len(requests),
+            "n_devices": (int(self.mesh.devices.size)
+                          if self.mesh is not None else 1),
+            "qps": round(len(requests) / wall, 1),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "mean_ms": round(float(lat_ms.mean()), 3),
+            "top_k": self.top_k,
+            "corpus_n": self.corpus.n,
+            "buckets": list(self.buckets),
+        }
+        self._stats.append(stats)
+        return stats
+
+
+def _repo_benchmarks_path() -> str:
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))  # <repo>/src
+    root = os.path.dirname(src) if os.path.basename(src) == "src" else "."
+    return os.path.join(root, "experiments", "benchmarks.json")
+
+
+def record_benchmark(section: str, payload, path: str | None = None):
+    """Merge one section into the tracked benchmarks JSON (run.py's format)."""
+    path = path or _repo_benchmarks_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        merged = {}
+    merged[section] = payload
+    merged["updated_at"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
+def serve_engine(cfg, *, requests: int, candidates: int, top_k: int = 10,
+                 record: bool = True, seed: int = 0) -> dict:
+    """Build the sharded compressed engine and drive a synthetic workload."""
+    import numpy as np
+
+    import jax
+
+    from repro.core import CompressedIntArray
+    from repro.models import recsys
+
+    rng = np.random.default_rng(seed)
+    params = recsys.init_params(jax.random.PRNGKey(0), cfg)
+
+    n_cand = min(candidates, cfg.n_items - 1)
+    cands = np.sort(rng.choice(np.arange(1, cfg.n_items), n_cand,
+                               replace=False)).astype(np.uint64)
+    corpus = CompressedIntArray.encode(cands, differential=True)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    print(f"corpus: {corpus.n} candidate ids, {corpus.bits_per_int:.2f} "
+          f"bits/int ({corpus.compression_ratio:.2f}x vs uint32), "
+          f"{corpus.n_blocks} blocks over {n_dev} device(s)")
+
+    engine = ServingEngine(params, cfg, corpus, mesh=mesh, top_k=top_k)
+    engine.warmup()
+
+    reqs = [(int(rng.integers(1, max(cfg.n_users, 2))),
+             rng.integers(1, cfg.n_items, cfg.seq_len).astype(np.int32))
+            for _ in range(requests)]
+    stats = engine.run_workload(reqs)
+    print(f"served {stats['n_requests']} requests on {stats['n_devices']} "
+          f"device(s): {stats['qps']} QPS, "
+          f"p50 {stats['p50_ms']} ms, p99 {stats['p99_ms']} ms "
+          f"(top-{top_k} of {stats['corpus_n']} compressed candidates)")
+
+    # embedding-bag endpoint smoke (microbatched ragged bags)
+    bags = [np.sort(rng.choice(np.arange(1, cfg.n_items),
+                               rng.integers(1, cfg.seq_len + 1),
+                               replace=False)) for _ in range(5)]
+    emb = engine.embed_bags(bags)
+    print(f"embedding-bag endpoint: {len(bags)} bags -> {emb.shape}")
+
+    if record:
+        path = record_benchmark("serving_engine", stats)
+        print(f"recorded -> {path}")
+    return stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices (sharded engine)")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--candidates", type=int, default=1 << 16)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--no-record", action="store_true",
+                    help="skip merging engine stats into benchmarks.json")
     args = ap.parse_args()
+
+    if args.devices:
+        # appended LAST so it wins over any inherited duplicate (XLA takes
+        # the final occurrence of a repeated flag)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    # jax must initialize AFTER the device-count flag is set
+    from repro.distributed.api import activate_mesh
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import registry
 
     fam = registry.family_of(args.arch)
     cfg = registry.reduced_config(args.arch)
-    with activate_mesh(make_host_mesh()):
-        if fam == "lm":
+    if fam == "lm":
+        with activate_mesh(make_host_mesh()):
             serve_lm(cfg, args.tokens, args.batch)
-        elif fam == "recsys":
-            serve_recsys(cfg, args.batch)
+    elif fam == "recsys":
+        if cfg.kind == "two_tower":
+            serve_engine(cfg, requests=args.requests,
+                         candidates=args.candidates, top_k=args.top_k,
+                         record=not args.no_record)
         else:
-            raise SystemExit("gnn has no serve step (train-only shapes)")
+            with activate_mesh(make_host_mesh()):
+                serve_recsys(cfg, args.batch)
+    else:
+        raise SystemExit("gnn has no serve step (train-only shapes)")
 
 
 if __name__ == "__main__":

@@ -56,7 +56,7 @@ def _edges_from_batch(batch, cfg: GNNConfig):
     if cfg.compressed_adjacency:
         n_edges = batch["edge_valid"].shape[0]  # static edge capacity
         src, dst = decode_compressed_edges(
-            batch["gap_payload"], batch["gap_counts"], batch["gap_bases"],
+            batch["gaps"],  # CompressedIntArray: a pytree leaf group of the batch
             batch["row_offsets"], n_edges,
             row_gap_bases=batch.get("row_gap_bases"),
             plan=cfg.decode_plan,

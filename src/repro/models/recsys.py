@@ -250,27 +250,26 @@ def user_tower(params, user_id, hist, cfg: RecSysConfig, *, dtype=nn.DEFAULT_COM
     return v / jnp.maximum(jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(dtype)
 
 
-def user_tower_compressed(params, user_id, hist_operands: dict,
-                          cfg: RecSysConfig, *, format: str = "vbyte",
-                          differential: bool = False, block_size: int | None = None,
+def user_tower_compressed(params, user_id, hists,
+                          cfg: RecSysConfig, *,
                           plan="auto", dtype=nn.DEFAULT_COMPUTE_DTYPE):
     """User tower over compressed histories: fused one-pass embedding bag.
 
-    ``hist_operands`` is the ragged encoding of the batch's history bags —
-    ``CompressedIntArray.encode_ragged(histories, block_size=seq_len)
-    .device_operands()`` — one block per user. The mean-bag is the decode
-    kernel's ``bag_sum`` epilogue: history ids never round-trip through HBM
-    between decode and gather (they do in ``user_tower``'s padded path).
-    Matches ``user_tower`` exactly when the padded histories hold the same
-    ids (pad id 0 excluded) and ``block_size == seq_len``.
+    ``hists`` is the ragged encoding of the batch's history bags —
+    ``CompressedIntArray.encode_ragged(histories, block_size=seq_len)`` —
+    one block per user (the array is a pytree; pass it straight through
+    jit). The mean-bag is the decode kernel's ``bag_sum`` epilogue: history
+    ids never round-trip through HBM between decode and gather (they do in
+    ``user_tower``'s padded path). Matches ``user_tower`` exactly when the
+    padded histories hold the same ids (pad id 0 excluded) and the bags
+    were encoded with ``block_size == seq_len``.
     """
     from repro.nn.embedding_bag import embedding_bag_compressed
 
     u = nn.embedding_lookup(params["user_emb"], user_id, dtype=dtype)  # [B, id_dim]
     bag = embedding_bag_compressed(
-        params["item_id_emb"]["emb"], hist_operands, format=format,
-        block_size=block_size or cfg.seq_len, differential=differential,
-        mode="mean", plan=plan, dtype=dtype)
+        params["item_id_emb"]["emb"], hists, mode="mean", plan=plan,
+        dtype=dtype)[: u.shape[0]]
     x = jnp.concatenate([u, bag.astype(dtype)], axis=-1)
     v = nn.mlp(params["user_mlp"], x, final_act=False, dtype=dtype)
     return v / jnp.maximum(jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(dtype)
@@ -313,14 +312,42 @@ def serve_scores(params, batch, cfg: RecSysConfig, *, dtype=nn.DEFAULT_COMPUTE_D
     return _item_scores(params, h[:, -1], batch["cands"], dtype)  # [B, C]
 
 
-def _cand_operands(batch) -> tuple[dict, str]:
-    """Candidate-list device operands from a serve batch (either format)."""
+def _cand_array(batch):
+    """The compressed candidate list from a serve batch.
+
+    The pytree-native form is ``batch["cands"]``: the ``CompressedIntArray``
+    itself (either format — its static aux data carries format/block_size/
+    differential). The legacy unpacked ``cand_payload``/``cand_control``…
+    keys are still accepted with a ``DeprecationWarning``.
+    """
+    from repro.core.compressed_array import CompressedIntArray
+
+    if "cands" in batch:
+        return batch["cands"]
+    import warnings
+
+    warnings.warn(
+        "cand_payload/cand_control/... batch keys are deprecated; pass the "
+        "CompressedIntArray itself as batch['cands']", DeprecationWarning,
+        stacklevel=3)
+    import numpy as np
+
+    def legacy_n(counts):
+        try:  # the real count when concrete; capacity when traced (n is
+            return int(np.asarray(counts).sum())  # unused by the serve path)
+        except TypeError:
+            return counts.shape[0] * 128
     if "cand_control" in batch:
-        return ({"control": batch["cand_control"], "data": batch["cand_data"],
-                 "counts": batch["cand_counts"], "bases": batch["cand_bases"]},
-                "streamvbyte")
-    return ({"payload": batch["cand_payload"], "counts": batch["cand_counts"],
-             "bases": batch["cand_bases"]}, "vbyte")
+        return CompressedIntArray.from_operands(
+            {"control": batch["cand_control"], "data": batch["cand_data"],
+             "counts": batch["cand_counts"], "bases": batch["cand_bases"]},
+            format="streamvbyte", block_size=128, differential=True,
+            n=legacy_n(batch["cand_counts"]))
+    return CompressedIntArray.from_operands(
+        {"payload": batch["cand_payload"], "counts": batch["cand_counts"],
+         "bases": batch["cand_bases"]},
+        format="vbyte", block_size=128, differential=True,
+        n=legacy_n(batch["cand_counts"]))
 
 
 def retrieval_scores_compressed(params, batch, cfg: RecSysConfig, *, top_k: int = 100,
@@ -329,31 +356,39 @@ def retrieval_scores_compressed(params, batch, cfg: RecSysConfig, *, top_k: int 
     """retrieval_cand: score 1 query against a compressed candidate list.
 
     The sorted candidate id list (delta-coded, VByte or Stream VByte —
-    ``cand_payload`` vs ``cand_control``/``cand_data`` batch keys) is decoded
-    *inside* the serving graph. For the dot-product heads (sasrec/bert4rec)
-    the scoring itself is the decode kernel's ``dot_score`` epilogue: ids
-    gather item vectors and dot against the query in VMEM, so the [C, d]
+    ``batch["cands"]``, a ``CompressedIntArray``) is decoded *inside* the
+    serving graph. For the dot-product heads (sasrec/bert4rec) the scoring
+    itself is the decode kernel's ``dot_score`` epilogue: ids gather item
+    vectors and dot against the query in VMEM, so the [C, d]
     candidate-vector matrix never materializes in HBM — only ids and scores
-    come out. Tower/ranker heads (two_tower, bst) decode-then-score.
+    come out. Tower/ranker heads (two_tower, bst) decode-then-score. (The
+    resident-corpus serving loop lives one level up, in
+    ``repro.launch.serve.ServingEngine``, which serves the two-tower path
+    through the same fused ``dot_score`` epilogue against a precomputed
+    item-vector table.)
 
-    ``plan`` is the dispatch plan; ``use_kernel`` the legacy boolean alias.
-    For VByte candidates off-TPU, ``"auto"`` resolves to the gather-lowered
-    ``"ref"`` decoder for every kind: the scatter-based masked path emits a
-    cross-shard scatter-add (an all-reduce of the [n_cand] id array) under
-    GSPMD, while the searchsorted/gather lowering stays block-local (§Perf
-    retrieval iteration 2).
+    ``plan`` is the dispatch plan; ``use_kernel`` the deprecated legacy
+    boolean alias. For VByte candidates off-TPU, ``"auto"`` resolves to the
+    gather-lowered ``"ref"`` decoder for every kind: the scatter-based
+    masked path emits a cross-shard scatter-add (an all-reduce of the
+    [n_cand] id array) under GSPMD, while the searchsorted/gather lowering
+    stays block-local (§Perf retrieval iteration 2).
     """
     from repro.kernels.vbyte_decode import dispatch
 
-    operands, fmt = _cand_operands(batch)
+    cands_arr = _cand_array(batch)
+    fmt = cands_arr.format
     if use_kernel is not None:
-        plan = "kernel" if use_kernel else ("ref" if fmt == "vbyte" else "jnp")
+        from repro.core.compressed_array import warn_use_kernel
+
+        plan = warn_use_kernel(use_kernel)
+        if plan == "jnp" and fmt == "vbyte":
+            plan = "ref"
     if (plan == "auto" and fmt == "vbyte"
             and dispatch.default_plan().path != "pallas"):
         # off-TPU, ALL kinds keep the block-local ref decode (dot-score
         # kinds run it unfused: ref grid + dot_score as a second dispatch)
         plan = "ref"
-    kw = dict(format=fmt, block_size=128, differential=True, plan=plan)
 
     if cfg.kind in ("sasrec", "bert4rec"):
         # one-pass fused path: decode → gather item vectors → dot, in-kernel
@@ -361,12 +396,12 @@ def retrieval_scores_compressed(params, batch, cfg: RecSysConfig, *, top_k: int 
                       dtype=dtype)[:, -1]  # [1, d]
         table = params["item_emb"]["emb"].astype(dtype)
         ids, scores = dispatch.decode(
-            operands, epilogue="dot_score",
-            epilogue_operands={"table": table, "query": h}, **kw)
+            cands_arr, epilogue="dot_score",
+            epilogue_operands={"table": table, "query": h}, plan=plan)
         cands = constrain(ids.reshape(-1), ("pod", "data", "model"))
         scores = constrain(scores.reshape(-1), ("pod", "data", "model"))
     else:
-        cands = dispatch.decode(operands, **kw)
+        cands = dispatch.decode(cands_arr, plan=plan)
         cands = cands.reshape(-1).astype(jnp.int32)  # padded with 0 = pad row
         cands = constrain(cands, ("pod", "data", "model"))
         C = cands.shape[0]

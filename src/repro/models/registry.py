@@ -194,17 +194,23 @@ def _gnn_batch(cfg, shape: ShapeDef):
         nb = -(-E // 128)
         nb = -(-nb // 512) * 512  # block-shardable
         entries.update({
-            "gap_payload": ((nb, stride), jnp.uint8, P(ALL, None)),
-            "gap_counts": ((nb,), jnp.int32, P(ALL)),
-            "gap_bases": ((nb,), jnp.uint32, P(ALL)),
             "row_gap_bases": ((N,), jnp.uint32, P(None)),  # skip bases: replicated
             "row_offsets": ((N + 1,), jnp.int32, P(None)),
         })
-    else:
-        entries.update({
-            "edge_src": ((E,), jnp.int32, espec),
-            "edge_dst": ((E,), jnp.int32, espec),
-        })
+        batch, specs = _split(entries)
+        # the gap stream rides in the batch as a CompressedIntArray pytree:
+        # abstract leaves (SDS) for lowering, P leaves for the shardings —
+        # both trees share the array's treedef (block dim over the mesh)
+        batch["gaps"] = _abstract_compressed(
+            {"payload": ((nb, stride), jnp.uint8), "counts": ((nb,), jnp.int32),
+             "bases": ((nb,), jnp.uint32)},
+            format="vbyte", differential=True, n=E)
+        specs["gaps"] = shd.compressed_array_specs(batch["gaps"], axis=ALL)
+        return batch, specs
+    entries.update({
+        "edge_src": ((E,), jnp.int32, espec),
+        "edge_dst": ((E,), jnp.int32, espec),
+    })
     return _split(entries)
 
 
@@ -260,15 +266,30 @@ def _recsys_batch(cfg, shape: ShapeDef):
         nb = nc // 128
         stride = d["payload_stride"]
         entries = {
-            "cand_payload": ((nb, stride), jnp.uint8, P(ALL, None)),
-            "cand_counts": ((nb,), jnp.int32, P(ALL)),
-            "cand_bases": ((nb,), jnp.uint32, P(ALL)),
             "hist": ((1, L), jnp.int32, P(None, None)),
         }
         if k == "two_tower":
             entries["user_id"] = ((1,), jnp.int32, P(None))
-        return _split(entries)
+        batch, specs = _split(entries)
+        # candidate list: the CompressedIntArray itself is the batch entry
+        # (pytree — SDS leaves for lowering, block dim sharded over the mesh)
+        batch["cands"] = _abstract_compressed(
+            {"payload": ((nb, stride), jnp.uint8), "counts": ((nb,), jnp.int32),
+             "bases": ((nb,), jnp.uint32)},
+            format="vbyte", differential=True, n=nc)
+        specs["cands"] = shd.compressed_array_specs(batch["cands"], axis=ALL)
+        return batch, specs
     raise ValueError((cfg.kind, shape.step))
+
+
+def _abstract_compressed(leaves: dict, *, format: str, differential: bool,
+                         n: int, block_size: int = 128):
+    """CompressedIntArray of ShapeDtypeStructs (an abstract batch template)."""
+    from repro.core.compressed_array import CompressedIntArray
+
+    return CompressedIntArray.from_operands(
+        {nm: SDS(s, dt) for nm, (s, dt) in leaves.items()},
+        format=format, block_size=block_size, differential=differential, n=n)
 
 
 # ----------------------------------------------------------------------------

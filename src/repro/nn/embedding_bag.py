@@ -56,27 +56,31 @@ def embedding_bag(
 
 def embedding_bag_compressed(
     table: jax.Array,  # [V, d]
-    operands: dict,  # blocked device operands (one bag per block; see encode_ragged)
+    bags,  # CompressedIntArray (one bag per block; see encode_ragged), or dict
     *,
-    format: str = "vbyte",
-    block_size: int = 128,
-    differential: bool = False,
+    format: str | None = None,
+    block_size: int | None = None,
+    differential: bool | None = None,
     mode: str = "sum",
     plan="auto",
     dtype=DEFAULT_COMPUTE_DTYPE,
 ) -> jax.Array:
     """Fused EmbeddingBag over a compressed id stream: one bag per block.
 
-    ``operands`` is ``CompressedIntArray.encode_ragged(...).device_operands()``
-    (or any blocked layout where block b is bag b). Returns
-    ``[n_blocks, d]``. The decode→``jnp.take``→``segment_sum`` chain this
-    replaces decodes the ids to HBM first; here the gather-sum is the decode
-    kernel's epilogue and the ids stay in VMEM.
+    ``bags`` is the ``CompressedIntArray`` from ``encode_ragged(...)`` (or
+    any blocked layout where block b is bag b) — format/block metadata ride
+    on the array, so the kwargs are only needed with a raw operand dict.
+    Returns ``[n_blocks, d]``. The decode→``jnp.take``→``segment_sum``
+    chain this replaces decodes the ids to HBM first; here the gather-sum
+    is the decode kernel's epilogue and the ids stay in VMEM. A sharded
+    ``bags`` (``CompressedIntArray.shard``) reduces each bag on the shard
+    that owns its block.
     """
     from repro.kernels.vbyte_decode import dispatch
 
+    counts = bags["counts"] if isinstance(bags, dict) else bags.counts
     out = dispatch.decode(
-        operands,
+        bags,
         format=format,
         block_size=block_size,
         differential=differential,
@@ -87,7 +91,7 @@ def embedding_bag_compressed(
     if mode == "sum":
         return out
     if mode == "mean":
-        counts = jnp.reshape(operands["counts"], (-1,)).astype(out.dtype)
+        counts = jnp.reshape(counts, (-1,)).astype(out.dtype)
         return out / jnp.maximum(counts, 1)[:, None]
     raise ValueError(f"unknown mode {mode!r} (fused path supports sum|mean)")
 

@@ -54,15 +54,16 @@ def gin_layer(params, h: jax.Array, src: jax.Array, dst: jax.Array, *,
     return jax.nn.relu(x)
 
 
-def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_edges,
-                            *, row_gap_bases=None, block_size: int = 128,
+def decode_compressed_edges(gaps, row_offsets, n_edges,
+                            *, row_gap_bases=None,
                             plan="auto", use_kernel: bool | None = None):
     """Decode a per-list delta-encoded VByte adjacency stream on device.
 
-    Each node's sorted neighbor list is delta-encoded independently
-    (first gap = absolute id); the concatenated gap stream is VByte-blocked.
-
-    ``gap_bases`` holds the *gap-stream running sum* at each block start
+    ``gaps`` is the blocked gap stream as a ``CompressedIntArray``
+    (``repro.data.graph.compress_adjacency`` builds it): each node's sorted
+    neighbor list is delta-encoded independently (first gap = absolute id)
+    and the concatenated gap stream is VByte-blocked, with ``gaps.bases``
+    holding the *gap-stream running sum* at each block start
     (host-precomputed, 4 B/block) so the global inclusive cumsum is a fused
     per-block differential decode — no cross-block (hence cross-shard)
     prefix dependency. ``row_gap_bases`` [n_nodes] holds the running sum at
@@ -75,16 +76,18 @@ def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_e
     gathered from the decoded stream (legacy global path).
 
     ``plan`` selects the dispatch path (``repro.kernels.vbyte_decode.
-    dispatch``); ``use_kernel`` is the legacy boolean alias.
+    dispatch``); ``use_kernel`` is the deprecated legacy boolean alias.
 
     Returns (src [E], dst [E]) int32 edge index.
     """
     from repro.kernels.vbyte_decode import dispatch
 
     if use_kernel is not None:
-        plan = "kernel" if use_kernel else "jnp"
-    operands = {"payload": gap_payload, "counts": gap_counts, "bases": gap_bases}
-    nb = gap_payload.shape[0]
+        from repro.core.compressed_array import warn_use_kernel
+
+        plan = warn_use_kernel(use_kernel)
+    nb = gaps.n_blocks
+    block_size = gaps.block_size
 
     # edge e belongs to list l(e): row_offsets[l] <= e < row_offsets[l+1].
     # Pure-metadata computation — runs BEFORE (in parallel with) the decode.
@@ -97,8 +100,7 @@ def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_e
         base = jnp.pad(base, (0, nb * block_size - n_edges))
         edge_base = jax.lax.bitcast_convert_type(base, jnp.int32)
         dst_grid = dispatch.decode(
-            operands, format="vbyte", block_size=block_size, differential=True,
-            epilogue="adjacency_rebase",
+            gaps, epilogue="adjacency_rebase",
             epilogue_operands={"edge_base": edge_base.reshape(nb, block_size)},
             plan=plan)
         dst = dst_grid.reshape(-1)[:n_edges]
@@ -107,11 +109,10 @@ def decode_compressed_edges(gap_payload, gap_counts, gap_bases, row_offsets, n_e
     # legacy global path: differential decode against per-block running-sum
     # bases = global inclusive cumsum of gaps, computed block-locally; the
     # per-list bases are then gathered from the decoded stream itself.
-    incl = dispatch.decode(operands, format="vbyte", block_size=block_size,
-                           differential=True, plan=plan)
+    incl = dispatch.decode(gaps, plan=plan)
     incl = incl.reshape(-1)[:n_edges].astype(jnp.uint32)
-    gaps = incl - jnp.concatenate([jnp.zeros((1,), jnp.uint32), incl[:-1]])
-    excl = incl - gaps
+    gaps_v = incl - jnp.concatenate([jnp.zeros((1,), jnp.uint32), incl[:-1]])
+    excl = incl - gaps_v
     base = jnp.take(excl, jnp.take(row_offsets, src))
     dst = (incl - base).astype(jnp.int32)
     return dst, src  # neighbors are sources aggregated into the list owner

@@ -31,19 +31,18 @@ def test_normalize_block_meta_rejects(bad_shape):
         normalize_block_meta("counts", x, 4)
 
 
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_decoders_accept_column_metadata(rng, use_kernel):
+@pytest.mark.parametrize("plan", ["jnp", "kernel"])
+def test_decoders_accept_column_metadata(rng, plan):
     """[n_blocks, 1] counts/bases decode identically to [n_blocks]."""
     vals = np.sort(rng.integers(0, 2**20, 200)).astype(np.uint64)
     for fmt in ("vbyte", "streamvbyte"):
         arr = CompressedIntArray.encode(vals, format=fmt, differential=True)
         ops = dict(arr.device_operands())
-        ref = arr.decode(use_kernel=use_kernel)
+        ref = arr.decode(plan=plan)
         ops["counts"] = ops["counts"][:, None]
         ops["bases"] = ops["bases"][:, None]
         out = dispatch.decode(ops, format=fmt, block_size=128,
-                              differential=True,
-                              plan="kernel" if use_kernel else "jnp")
+                              differential=True, plan=plan)
         np.testing.assert_array_equal(
             np.asarray(out).reshape(-1)[: arr.n].astype(np.uint32), ref)
 

@@ -2,7 +2,7 @@
 jnp decoder and the Pallas interpret-mode kernel must agree **bit-exactly**
 on randomized blocked inputs — parameterized over block_size, differential,
 and ragged tails. This is the acceptance gate for the Stream-VByte tentpole:
-``encode(format="streamvbyte").decode(use_kernel=True)`` == scalar oracle on
+``encode(format="streamvbyte").decode(plan="kernel")`` == scalar oracle on
 >=10k randomized values."""
 import numpy as np
 import pytest
@@ -24,8 +24,8 @@ def _assert_parity(vals, fmt, block_size, differential):
     arr = CompressedIntArray.encode(vals, format=fmt, block_size=block_size,
                                     differential=differential)
     oracle = arr.decode_scalar_oracle()
-    masked = arr.decode(use_kernel=False)
-    kernel = arr.decode(use_kernel=True)
+    masked = arr.decode(plan="jnp")
+    kernel = arr.decode(plan="kernel")
     np.testing.assert_array_equal(masked, oracle)
     np.testing.assert_array_equal(kernel, oracle)
     np.testing.assert_array_equal(oracle.astype(np.uint64), vals)
@@ -54,7 +54,7 @@ def test_streamvbyte_kernel_acceptance(rng):
     oracle on >=10k randomized values spanning every byte-length regime."""
     vals = _random_values(rng, 10_240, False)
     arr = CompressedIntArray.encode(vals, format="streamvbyte")
-    kernel = arr.decode(use_kernel=True)
+    kernel = arr.decode(plan="kernel")
     np.testing.assert_array_equal(kernel, arr.decode_scalar_oracle())
     np.testing.assert_array_equal(kernel.astype(np.uint64), vals)
 
@@ -63,6 +63,6 @@ def test_streamvbyte_kernel_acceptance_differential(rng):
     vals = _random_values(rng, 10_240, True)
     arr = CompressedIntArray.encode(vals, format="streamvbyte",
                                     differential=True)
-    kernel = arr.decode(use_kernel=True)
+    kernel = arr.decode(plan="kernel")
     np.testing.assert_array_equal(kernel, arr.decode_scalar_oracle())
     np.testing.assert_array_equal(kernel.astype(np.uint64), vals)

@@ -120,10 +120,14 @@ def test_ragged_encode_roundtrip_and_fused_bag(rng, fmt, table):
     for mode in ("sum", "mean"):
         ref = bag_from_padded(table, jnp.asarray(padded), mode=mode,
                               dtype=jnp.float32)
-        out = embedding_bag_compressed(
+        out = embedding_bag_compressed(table, arr, mode=mode,
+                                       dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+        # the raw operand-dict form still works with explicit metadata
+        out2 = embedding_bag_compressed(
             table, arr.device_operands(), format=fmt, block_size=B,
             differential=True, mode=mode, dtype=jnp.float32)
-        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
 def test_fused_adjacency_equals_legacy_and_raw(rng):
@@ -136,9 +140,7 @@ def test_fused_adjacency_equals_legacy_and_raw(rng):
     g = random_graph(rng, 80, 400, 4, 3)
     csr = CSRGraph.from_edges(g["edge_src"], g["edge_dst"], 80)
     comp = compress_adjacency(csr)
-    args = (jnp.asarray(comp["gap_payload"]), jnp.asarray(comp["gap_counts"]),
-            jnp.asarray(comp["gap_bases"]), jnp.asarray(comp["row_offsets"]),
-            csr.n_edges)
+    args = (comp["gaps"], jnp.asarray(comp["row_offsets"]), csr.n_edges)
     outs = {}
     for label, kw in (
         ("fused_auto", dict(row_gap_bases=jnp.asarray(comp["row_gap_bases"]))),

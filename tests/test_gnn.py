@@ -38,8 +38,7 @@ def test_compressed_adjacency_equals_raw(rng):
     comp = compress_adjacency(csr)
     n_edges = csr.n_edges
     src, dst = decode_compressed_edges(
-        jnp.asarray(comp["gap_payload"]), jnp.asarray(comp["gap_counts"]),
-        jnp.asarray(comp["gap_bases"]), jnp.asarray(comp["row_offsets"]), n_edges)
+        comp["gaps"], jnp.asarray(comp["row_offsets"]), n_edges)
     # decoded (neighbor, owner) pairs must equal the CSR content
     own = np.repeat(np.arange(200), np.diff(csr.indptr))
     np.testing.assert_array_equal(np.asarray(dst), own)
@@ -89,7 +88,11 @@ def test_gnn_compressed_model_path(rng):
     cmp_batch = {"feats": raw_batch["feats"], "labels": raw_batch["labels"],
                  "label_mask": raw_batch["label_mask"],
                  "edge_valid": jnp.ones(csr.n_edges, bool),
-                 **{k: jnp.asarray(v) for k, v in comp.items() if not k.startswith("_")}}
+                 # the gaps CompressedIntArray is a pytree: tree.map uploads
+                 # its leaves like any other batch entry
+                 **jax.tree.map(jnp.asarray,
+                                {k: v for k, v in comp.items()
+                                 if not k.startswith("_")})}
     lr, _ = gnn.loss_fn(params, raw_batch, cfg_raw, dtype=jnp.float32)
     lc, _ = gnn.loss_fn(params, cmp_batch, cfg_cmp, dtype=jnp.float32)
     assert abs(float(lr) - float(lc)) < 1e-5

@@ -157,7 +157,7 @@ def test_empty_block_layout(fmt):
     arr = CompressedIntArray.encode(np.zeros(0, np.uint64), format=fmt)
     assert arr.n == 0 and arr.n_blocks == 1
     assert arr.decode().size == 0
-    assert arr.decode(use_kernel=True).size == 0
+    assert arr.decode(plan="kernel").size == 0
     assert arr.decode_scalar_oracle().size == 0
 
 

@@ -181,7 +181,7 @@ def test_bag_from_padded_ignores_pad(rng):
 # -- data pipeline -------------------------------------------------------------
 def test_token_pipeline_roundtrip(rng):
     toks = token_stream(rng, 4096, 1000)
-    pipe = CompressedTokenPipeline(toks, batch=4, seq_len=63, use_kernel=True)
+    pipe = CompressedTokenPipeline(toks, batch=4, seq_len=63, plan="kernel")
     b0 = pipe.get_batch(0)
     assert b0["tokens"].shape == (4, 64)
     np.testing.assert_array_equal(np.asarray(b0["tokens"]).reshape(-1),

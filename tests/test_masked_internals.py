@@ -73,7 +73,7 @@ def test_wraparound_identity():
     from repro.core.compressed_array import CompressedIntArray
 
     arr = CompressedIntArray.encode(vals, block_size=8)
-    assert np.array_equal(arr.decode(use_kernel=True).astype(np.uint64), vals)
+    assert np.array_equal(arr.decode(plan="kernel").astype(np.uint64), vals)
 
 
 # -- Stream-VByte internals ---------------------------------------------------
@@ -116,4 +116,4 @@ def test_svb_wraparound_identity():
     from repro.core.compressed_array import CompressedIntArray
 
     arr = CompressedIntArray.encode(vals, format="streamvbyte", block_size=8)
-    assert np.array_equal(arr.decode(use_kernel=True).astype(np.uint64), vals)
+    assert np.array_equal(arr.decode(plan="kernel").astype(np.uint64), vals)

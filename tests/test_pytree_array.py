@@ -1,0 +1,209 @@
+"""Pytree semantics of CompressedIntArray: flatten/unflatten round-trips,
+jit-argument stability (no retrace on new data of the same shape), grad and
+scan pass-through, and the ``use_kernel`` deprecation surface."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CompressedIntArray
+from repro.core.compressed_array import FORMAT_LEAVES
+
+FMTS = ["vbyte", "streamvbyte"]
+
+
+def _encode(rng, fmt, n=300, *, differential=True, block_size=32, small=False):
+    hi = 120 if small else 2**20  # small=True pins every int to 1 byte
+    vals = np.sort(rng.integers(0, hi, n)).astype(np.uint64)
+    return CompressedIntArray.encode(vals, format=fmt, block_size=block_size,
+                                     differential=differential), vals
+
+
+# ---------------------------------------------------------------------------
+# flatten / unflatten
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_tree_roundtrip(rng, fmt):
+    arr, vals = _encode(rng, fmt)
+    leaves, treedef = jax.tree_util.tree_flatten(arr)
+    assert len(leaves) == len(FORMAT_LEAVES[fmt])
+    arr2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(arr2, CompressedIntArray)
+    # static aux survives; the host encoding deliberately does not
+    assert (arr2.format, arr2.block_size, arr2.differential, arr2.n,
+            arr2.ragged) == (fmt, 32, True, arr.n, False)
+    assert arr2.host_enc is None
+    np.testing.assert_array_equal(arr2.decode(), vals.astype(np.uint32))
+    with pytest.raises(RuntimeError, match="host-side encoding"):
+        _ = arr2.bits_per_int
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_tree_map_preserves_type(rng, fmt):
+    arr, _ = _encode(rng, fmt)
+    arr2 = jax.tree.map(jnp.asarray, arr)
+    assert isinstance(arr2, CompressedIntArray)
+    assert arr2.format == fmt and arr2.n == arr.n
+    np.testing.assert_array_equal(arr2.decode(), arr.decode())
+
+
+def test_two_formats_have_distinct_treedefs(rng):
+    a, _ = _encode(rng, "vbyte")
+    b, _ = _encode(rng, "streamvbyte")
+    assert (jax.tree_util.tree_structure(a)
+            != jax.tree_util.tree_structure(b))
+
+
+def test_from_operands_validation(rng):
+    arr, _ = _encode(rng, "vbyte")
+    ops = arr.device_operands()
+    rebuilt = CompressedIntArray.from_operands(
+        ops, format="vbyte", block_size=32, differential=True)
+    assert rebuilt.n == arr.n  # n defaults to sum(counts)
+    np.testing.assert_array_equal(rebuilt.decode(), arr.decode())
+    with pytest.raises(ValueError, match="missing"):
+        CompressedIntArray.from_operands(
+            {"counts": ops["counts"], "bases": ops["bases"]}, format="vbyte")
+    with pytest.raises(ValueError, match="unknown format"):
+        CompressedIntArray.from_operands(ops, format="pfor")
+    with pytest.raises(ValueError, match="n= is required"):
+        CompressedIntArray.from_operands(
+            {"payload": jax.ShapeDtypeStruct((2, 128), jnp.uint8),
+             "counts": jax.ShapeDtypeStruct((2,), jnp.int32),
+             "bases": jax.ShapeDtypeStruct((2,), jnp.uint32)},
+            format="vbyte")
+
+
+# ---------------------------------------------------------------------------
+# jit / grad / scan pass-through
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_jit_pass_through_and_no_retrace(rng, fmt):
+    """Same-shape arrays with different data share ONE jit trace."""
+    traces = []
+
+    @jax.jit
+    def f(arr):
+        traces.append(1)  # trace-time side effect
+        return arr.decode_blocked(plan="jnp")
+
+    # small=True keeps every int at 1 encoded byte, so both arrays get the
+    # same payload stride (shape) no matter the data
+    a1, v1 = _encode(rng, fmt, small=True)
+    a2, v2 = _encode(rng, fmt, small=True)
+    out1 = np.asarray(f(a1)).reshape(-1)[: a1.n]
+    out2 = np.asarray(f(a2)).reshape(-1)[: a2.n]
+    np.testing.assert_array_equal(out1, v1.astype(np.uint32))
+    np.testing.assert_array_equal(out2, v2.astype(np.uint32))
+    assert len(traces) == 1, "same-shape CompressedIntArray must not retrace"
+
+
+def test_jit_retraces_on_static_aux_change(rng):
+    traces = []
+
+    @jax.jit
+    def f(arr):
+        traces.append(1)
+        return arr.decode_blocked(plan="jnp")
+
+    a_diff, _ = _encode(rng, "vbyte", small=True, differential=True)
+    a_abs, _ = _encode(rng, "vbyte", small=True, differential=False)
+    f(a_diff)
+    f(a_abs)  # differential flips -> different static aux -> new trace
+    assert len(traces) == 2
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_grad_through_fused_bag(rng, fmt):
+    """The array passes through grad as a jit arg; gradients flow to the
+    table through the fused bag_sum epilogue."""
+    from repro.nn.embedding_bag import embedding_bag_compressed
+
+    lists = [np.sort(rng.choice(np.arange(1, 64), size=k, replace=False))
+             for k in (3, 0, 5)]
+    bags = CompressedIntArray.encode_ragged(lists, format=fmt, block_size=8,
+                                            differential=True)
+    table = jnp.asarray(rng.standard_normal((64, 4)).astype(np.float32))
+
+    @jax.jit
+    def loss(tab, arr):
+        return embedding_bag_compressed(tab, arr, dtype=jnp.float32).sum()
+
+    g = jax.grad(loss)(table, bags)
+    # every id that appears in a bag contributes exactly 1.0 per output dim
+    expect = np.zeros((64, 4), np.float32)
+    for lst in lists:
+        for i in lst:
+            expect[i] += 1.0
+    np.testing.assert_allclose(np.asarray(g), expect, atol=1e-6)
+
+
+def test_scan_carries_array(rng):
+    arr, vals = _encode(rng, "vbyte", small=True)
+    arr = jax.tree.map(jnp.asarray, arr)
+
+    def body(carry, _):
+        return carry, carry.counts.sum()
+
+    out, sums = jax.lax.scan(body, arr, xs=jnp.arange(3))
+    assert isinstance(out, CompressedIntArray)
+    np.testing.assert_array_equal(np.asarray(sums), [arr.n] * 3)
+
+
+# ---------------------------------------------------------------------------
+# use_kernel deprecation surface
+# ---------------------------------------------------------------------------
+def test_decode_use_kernel_warns(rng):
+    arr, vals = _encode(rng, "vbyte")
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        out = arr.decode(use_kernel=True)
+    np.testing.assert_array_equal(out, vals.astype(np.uint32))
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        out = arr.decode(use_kernel=False)
+    np.testing.assert_array_equal(out, vals.astype(np.uint32))
+
+
+def test_pipeline_use_kernel_warns(rng):
+    from repro.data.pipeline import CompressedTokenPipeline
+
+    toks = rng.integers(0, 100, 2 * 9 * 3).astype(np.uint64)
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        pipe = CompressedTokenPipeline(toks, batch=2, seq_len=8,
+                                       use_kernel=False)
+    assert pipe.plan == "jnp"
+    pipe2 = CompressedTokenPipeline(toks, batch=2, seq_len=8, plan="kernel")
+    np.testing.assert_array_equal(
+        np.asarray(pipe.get_batch(0)["tokens"]),
+        np.asarray(pipe2.get_batch(0)["tokens"]))
+
+
+def test_decode_compressed_edges_use_kernel_warns(rng):
+    from repro.data.graph import compress_adjacency
+    from repro.data.sampler import CSRGraph
+    from repro.data.synthetic import random_graph
+    from repro.nn.gnn import decode_compressed_edges
+
+    g = random_graph(rng, 20, 60, 4, 2)
+    csr = CSRGraph.from_edges(g["edge_src"], g["edge_dst"], 20)
+    comp = compress_adjacency(csr)
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        src, dst = decode_compressed_edges(
+            comp["gaps"], jnp.asarray(comp["row_offsets"]), csr.n_edges,
+            use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(src), csr.indices)
+
+
+def test_legacy_cand_batch_keys_warn(rng):
+    from repro.models.recsys import _cand_array
+
+    arr, _ = _encode(rng, "vbyte", block_size=128)
+    ops = arr.device_operands()
+    with pytest.warns(DeprecationWarning, match="cand_payload"):
+        rebuilt = _cand_array({"cand_payload": ops["payload"],
+                               "cand_counts": ops["counts"],
+                               "cand_bases": ops["bases"]})
+    assert rebuilt.format == "vbyte"
+    assert rebuilt.n == arr.n  # real count, not block capacity
+    batch = {"cands": arr}
+    assert _cand_array(batch) is arr  # pytree-native path: no warning, no copy

@@ -75,9 +75,7 @@ def test_retrieval_compressed_matches_direct(rng, kind):
     n_cand = 256
     cands = np.sort(rng.choice(np.arange(1, cfg.n_items), n_cand, replace=False))
     arr = CompressedIntArray.encode(cands.astype(np.uint64), differential=True)
-    ops = arr.device_operands()
-    batch = {"cand_payload": ops["payload"], "cand_counts": ops["counts"],
-             "cand_bases": ops["bases"],
+    batch = {"cands": arr,  # the CompressedIntArray itself is the batch entry
              "hist": jnp.asarray(rng.integers(1, cfg.n_items, (1, cfg.seq_len)),
                                  dtype=jnp.int32)}
     if kind == "two_tower":

@@ -25,7 +25,7 @@ def test_end_to_end_compressed_training_with_restart(tmp_path, rng):
                       n_kv_heads=2, d_ff=64, vocab=256,
                       q_chunk=16, kv_chunk=16, loss_chunk=8)
     toks = token_stream(rng, 4 * 33 * 8, cfg.vocab)
-    pipe = CompressedTokenPipeline(toks, batch=4, seq_len=32, use_kernel=True)
+    pipe = CompressedTokenPipeline(toks, batch=4, seq_len=32, plan="kernel")
     assert pipe.compression_ratio() > 1.0
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -62,9 +62,7 @@ def test_end_to_end_serving_compressed_candidates(rng):
     params = recsys.init_params(jax.random.PRNGKey(0), cfg)
     cands = np.sort(rng.choice(np.arange(1, cfg.n_items), 512, replace=False))
     arr = CompressedIntArray.encode(cands.astype(np.uint64), differential=True)
-    ops = arr.device_operands()
-    batch = {"cand_payload": ops["payload"], "cand_counts": ops["counts"],
-             "cand_bases": ops["bases"],
+    batch = {"cands": arr,  # pytree-native: the array itself rides the batch
              "user_id": jnp.asarray([3], jnp.int32),
              "hist": jnp.asarray(rng.integers(1, cfg.n_items, (1, cfg.seq_len)),
                                  jnp.int32)}
