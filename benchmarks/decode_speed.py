@@ -194,6 +194,121 @@ def run_fused(n_ints: int = 1 << 18, d: int = 8, vocab: int = 1 << 16,
     return rows
 
 
+def run_decode_cores(n_ints: int = 1 << 18, reps: int = 8,
+                     chunk_widths=(32, 64, 128), block_size: int = 128,
+                     interpret_blocks: int = 64) -> list[dict]:
+    """Dense vs banded decode-tile cores on the jnp grid + cost model.
+
+    The tracked decode-kernel perf trajectory (``--only decode``): for each
+    format and chunk width the SAME tile-core code that runs inside the
+    Pallas kernels is jitted over the full ``[n_blocks, S]`` grid (pure
+    jnp — XLA-CPU here, XLA-TPU on device), timed against the dense core
+    (``chunk_width=None``, the pre-banded baseline), and paired with the
+    modeled routing MACs / VMEM bytes of one ``[8, S]`` kernel tile
+    (``banded.routing_cost``). Pallas interpret-mode rows are appended at
+    a tiny size for coverage and tagged ``interpret: true`` — interpret
+    wall time is a correctness artifact, not a perf number, and
+    ``benchmarks/report.py`` excludes those rows from headline tables.
+    """
+    from repro.kernels.vbyte_decode import banded, ops
+    from repro.kernels.vbyte_decode.kernel import decode_tile, prefix_sum_tile
+    from repro.kernels.vbyte_decode.stream_kernel import stream_decode_tile
+
+    rng = np.random.default_rng(5)
+    values = np.sort(rng.integers(0, CLUEWEB_DOCS, size=n_ints)).astype(np.uint64)
+    B = block_size
+    rows = []
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(values, format=fmt, block_size=B,
+                                        differential=True)
+        od = arr.device_operands()
+        counts2 = jnp.asarray(np.asarray(od["counts"]).reshape(-1, 1)
+                              .astype(np.int32))
+        bases2 = jax.lax.bitcast_convert_type(
+            jnp.asarray(np.asarray(od["bases"]).reshape(-1, 1)
+                        .astype(np.uint32)), jnp.int32)
+        nb = arr.n_blocks
+        if fmt == "vbyte":
+            S = od["payload"].shape[1]
+            fmt_args = (jnp.asarray(od["payload"]),)
+
+            def make(core_w):
+                @jax.jit
+                def f(payload, counts, bases):
+                    out, valid = decode_tile(payload, counts, block_size=B,
+                                             chunk_width=core_w)
+                    return prefix_sum_tile(out, valid, bases)
+                return lambda: f(*fmt_args, counts2, bases2)
+        else:
+            S = od["data"].shape[1]
+            fmt_args = (jnp.asarray(od["control"]), jnp.asarray(od["data"]))
+
+            def make(core_w):
+                @jax.jit
+                def f(control, data, counts, bases):
+                    out, valid = stream_decode_tile(control, data, counts,
+                                                    block_size=B,
+                                                    chunk_width=core_w)
+                    return prefix_sum_tile(out, valid, bases)
+                return lambda: f(*fmt_args, counts2, bases2)
+
+        widths = [None] + [w for w in chunk_widths if w <= B]
+        times = _bench_interleaved(
+            {str(w): make(w) for w in widths}, reps)
+        t_dense = times["None"]
+        for w in widths:
+            cost = banded.routing_cost(fmt, S=S, B=B, W=w, T=8)
+            rows.append({
+                "format": fmt,
+                "path": "jnp-grid-core",
+                "interpret": False,
+                "chunk_width": w,
+                "n_ints": n_ints,
+                "blocks": nb,
+                "stride": S,
+                "block_size": B,
+                "bits_per_int": round(arr.bits_per_int, 2),
+                "tiles_per_s": round(nb / 8 / times[str(w)], 1),
+                "mis": round(arr.n / times[str(w)] / 1e6, 1),
+                "speedup_vs_dense": round(t_dense / times[str(w)], 2),
+                "modeled_per_tile": {
+                    "mxu_macs": cost["mxu_total"],
+                    "vpu_ops": cost["vpu_total"],
+                    "vmem_bytes": cost["vmem_total"],
+                    "mac_reduction_vs_dense": (
+                        round(banded.routing_reduction(fmt, S=S, B=B, W=w), 2)
+                        if w else 1.0),
+                },
+            })
+
+        # interpret-mode Pallas coverage rows (tiny size, tagged): the wall
+        # time proves nothing about the kernel — keep it out of headlines
+        ib = min(interpret_blocks, nb)
+        small = {k: jnp.asarray(np.asarray(v)[:ib]) for k, v in od.items()}
+        for w in (None, 64 if B >= 64 else 8):
+            if fmt == "vbyte":
+                fn = lambda w=w: ops.vbyte_decode_blocked(
+                    **small, block_size=B, differential=True, chunk_width=w,
+                    interpret=True)
+            else:
+                fn = lambda w=w: ops.stream_vbyte_decode_blocked(
+                    **small, block_size=B, differential=True, chunk_width=w,
+                    interpret=True)
+            t, _ = _bench(fn, reps=2, warmup=1)
+            rows.append({
+                "format": fmt,
+                "path": "pallas-interpret",
+                "interpret": True,
+                "chunk_width": w,
+                "blocks": ib,
+                "stride": S,
+                "block_size": B,
+                "tiles_per_s": round(ib / 8 / t, 2),
+                "mis": round(ib * B / t / 1e6, 2),
+            })
+    return rows
+
+
 def tpu_projection(bits_per_int: float = 16.9) -> dict:
     """Roofline projection of the Pallas kernel on the TPU v5e target.
 

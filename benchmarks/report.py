@@ -1,4 +1,12 @@
-"""Generate the EXPERIMENTS.md data tables from experiments/dryrun/*.json."""
+"""Generate the EXPERIMENTS.md data tables from experiments/dryrun/*.json
+and the headline perf tables from experiments/benchmarks.json.
+
+Rows tagged ``interpret: true`` (Pallas kernels run through the Pallas
+interpreter on CPU — a correctness artifact whose wall time says nothing
+about the kernel) are **excluded** from every headline table and listed
+separately, so interpret-mode noise never pollutes the tracked perf
+trajectory.
+"""
 from __future__ import annotations
 
 import glob
@@ -59,9 +67,71 @@ def dryrun_table(recs) -> str:
     return out
 
 
+def split_interpret(rows: list[dict]) -> tuple[list[dict], list[dict]]:
+    """(headline_rows, interpret_rows): interpret-tagged wall times are a
+    correctness artifact and never belong in headline perf tables."""
+    headline = [r for r in rows if not r.get("interpret")]
+    interp = [r for r in rows if r.get("interpret")]
+    return headline, interp
+
+
+def decode_kernel_table(rows: list[dict]) -> str:
+    """Headline table for the --only decode section (interpret excluded)."""
+    headline, interp = split_interpret(rows)
+    out = ("| format | chunk W | tiles/s | Mint/s | vs dense | "
+           "modeled MACs/tile | MAC cut | VMEM/tile |\n"
+           + "|" + "---|" * 8 + "\n")
+    for r in headline:
+        m = r.get("modeled_per_tile", {})
+        out += ("| {f} | {w} | {t} | {mis} | {sp} | {macs} | {cut}x "
+                "| {v} KiB |\n").format(
+                    f=r["format"], w=r["chunk_width"] or "dense",
+                    t=r["tiles_per_s"], mis=r["mis"],
+                    sp=f"{r['speedup_vs_dense']}x"
+                       if "speedup_vs_dense" in r else "—",
+                    macs=m.get("mxu_macs", "—"),
+                    cut=m.get("mac_reduction_vs_dense", "—"),
+                    v=(m.get("vmem_bytes", 0) >> 10) or "—")
+    if interp:
+        out += (f"\n({len(interp)} interpret-mode Pallas rows excluded from "
+                "the table above — correctness coverage only, wall time not "
+                "meaningful)\n")
+    return out
+
+
+def fused_table(rows: list[dict]) -> str:
+    headline, _ = split_interpret(rows)
+    out = ("| format | epilogue | fused Mint/s | unfused Mint/s | speedup |\n"
+           + "|" + "---|" * 5 + "\n")
+    for r in headline:
+        out += (f"| {r['format']} | {r['epilogue']} | {r['fused_mis']} "
+                f"| {r['unfused_mis']} | {r['fused_speedup']}x |\n")
+    return out
+
+
+def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
+    """Render the headline perf tables from the tracked benchmarks JSON."""
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except (OSError, ValueError):
+        return f"(no benchmarks file at {path})"
+    out = ""
+    if "decode_kernel" in d:
+        out += ("## Decode-tile cores (dense vs banded)\n\n"
+                + decode_kernel_table(d["decode_kernel"]))
+    if "fused" in d:
+        out += "\n## Fused epilogues\n\n" + fused_table(d["fused"])
+    if "updated_at" in d:
+        out += f"\n(benchmarks.json updated {d['updated_at']})\n"
+    return out
+
+
 if __name__ == "__main__":
+    print(benchmarks_headline())
     recs = load_all()
-    print("## Dry-run\n")
-    print(dryrun_table(recs))
-    print("\n## Roofline (single-pod 16x16)\n")
-    print(roofline_table(recs))
+    if recs:
+        print("## Dry-run\n")
+        print(dryrun_table(recs))
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(roofline_table(recs))

@@ -1,6 +1,9 @@
 """Benchmark harness entry point: ``python -m benchmarks.run``.
 
 One benchmark per paper table/figure (+ framework-level extensions):
+  decode             — dense vs banded chunked-scatter decode-tile cores:
+                       tiles/sec + modeled routing MACs/VMEM per plan
+                       (interpret-mode rows tagged, excluded from headlines)
   decode_speed       — Fig. 2 (scalar vs masked mis, by posting-list group)
   buffered           — §V last ¶ (decode-to-L1-buffer vs full stream)
   compression_ratio  — §V bits/int by group + blocked-layout overhead
@@ -49,6 +52,32 @@ def bench_kernel_check(quick: bool = False):
                                             differential=diff)
             assert np.array_equal(svb.decode(plan="kernel"),
                                   svb.decode_scalar_oracle())
+            checked += 1
+
+    # banded-vs-dense parity across (chunk W, block_tile, stride_multiple)
+    # combos: the chunked scatter must be a pure perf knob — identical
+    # uint32 grids for both formats at every geometry
+    from repro.kernels.vbyte_decode.dispatch import DecodePlan
+
+    combos = ((32, 8, 128),) if quick else (
+        (32, 8, 128), (64, 16, 8), (128, 8, 64), (16, 4, 128))
+    bits = rng.integers(1, 33, size=700)
+    mixed = (rng.integers(0, 2**63, 700, dtype=np.uint64)
+             % (1 << bits.astype(np.uint64))).astype(np.uint64)
+    for W, bt, sm in combos:
+        for fmt in ("vbyte", "streamvbyte"):
+            arr = CompressedIntArray.encode(mixed, format=fmt,
+                                            stride_multiple=sm)
+            ops = arr.device_operands()
+            dense = dispatch.decode(ops, format=fmt, block_size=128,
+                                    differential=False,
+                                    plan=DecodePlan("pallas", True, bt))
+            band = dispatch.decode(ops, format=fmt, block_size=128,
+                                   differential=False,
+                                   plan=DecodePlan("pallas", True, bt,
+                                                   chunk=W))
+            assert np.array_equal(np.asarray(dense), np.asarray(band)), \
+                (fmt, W, bt, sm)
             checked += 1
 
     # fused epilogue parity: Pallas-fused == jnp-fused == unfused reference
@@ -111,7 +140,8 @@ def bench_kernel_check(quick: bool = False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="decode_speed|compression|kernel|fused|roofline")
+                    help="decode|decode_speed|compression|kernel|fused|"
+                         "serving|roofline")
     ap.add_argument("--json", default=None,
                     help="output path (default experiments/benchmarks.json; "
                          "--quick runs write the untracked -quick variant so "
@@ -128,6 +158,30 @@ def main():
 
     def want(name):
         return args.only in (None, name)
+
+    if want("decode"):
+        from benchmarks import decode_speed
+
+        # 2^16 (not 2^18): the dense core's grid-level one-hot is
+        # O(n·stride·4B) — ~170 MB here, unmanageable at 2^18 on CPU
+        n = 1 << 14 if args.quick else 1 << 16
+        print("== decode-tile cores: dense vs banded chunked scatter ==")
+        rows = decode_speed.run_decode_cores(
+            n_ints=n, reps=3 if args.quick else 8,
+            interpret_blocks=16 if args.quick else 64)
+        for r in rows:
+            w = r["chunk_width"]
+            tag = " [interpret]" if r["interpret"] else ""
+            model = r.get("modeled_per_tile")
+            m = (f"  macs/tile={model['mxu_macs']:>8} "
+                 f"({model['mac_reduction_vs_dense']}x) "
+                 f"vmem={model['vmem_bytes'] >> 10}KiB"
+                 if model else "")
+            print(f"  {r['format']:>11} W={str(w):>4}{tag} "
+                  f"tiles/s={r['tiles_per_s']:>8} mis={r['mis']:>7}"
+                  + (f" speedup={r['speedup_vs_dense']}x" if "speedup_vs_dense" in r else "")
+                  + m)
+        results["decode_kernel"] = rows
 
     if want("decode_speed"):
         from benchmarks import decode_speed

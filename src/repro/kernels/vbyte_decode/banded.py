@@ -1,0 +1,268 @@
+"""Chunked banded-scatter primitives shared by both decode-tile cores.
+
+The dense decode cores route bytes to output slots with a ``[T, S, B]``
+one-hot (every byte against every output) and recover ``out_idx`` with a
+full ``[S, S]`` triangular matmul — O(S·B) and O(S²) work for a job the
+paper does in O(bytes) with pshufb. The structural fact that makes routing
+cheap is the **chunk-band invariant**:
+
+    ``out_idx`` is monotone non-decreasing along the byte axis and
+    increments by at most 1 per byte, so the bytes of chunk ``c`` (a run of
+    ``W`` consecutive byte lanes) can only land in the ``W`` output slots
+    ``[chunk_base[c], chunk_base[c] + W)``, where ``chunk_base[c]`` is the
+    number of terminator flags in chunks ``0..c-1``.
+
+Routing therefore decomposes into
+
+1. a **chunked prefix sum**: within-chunk exclusive prefix of the
+   terminator/length flags via a ``[W, W]`` strict-triangular matmul
+   (O(S·W) MACs instead of O(S²)) plus a tiny ``[n_chunks, n_chunks]``
+   cross-chunk base combine,
+2. a **banded one-hot scatter**: a ``[T, n_chunks, W, W]`` one-hot routes
+   each chunk's bytes into its W-slot band (O(S·W) MACs per matmul instead
+   of O(S·B)),
+3. a **cross-chunk combine**: each chunk's band is placed at its
+   data-dependent ``chunk_base`` offset by a barrel shift (log₂ static
+   shifts + selects, pure VPU) and the overlapped bands are added in int32
+   — integers that straddle a chunk boundary get partial sums from both
+   chunks landing on the same global slot, and the int32 add recombines
+   them exactly (mod 2³²).
+
+Everything here is pure jnp/lax on statically-shaped values (static slices
+and concatenates only), so it runs inside a Pallas kernel body and on the
+full jnp grid alike. f32 matmul exactness: every per-slot per-chunk
+accumulation is a sum of at most 5 halfword pieces (< 2²⁰ ≪ 2²⁴) and every
+prefix-sum operand is a small count (< 2¹³), so the MXU results are exact;
+cross-chunk sums happen after the int32 cast, wrapping ≡ mod 2³².
+
+:func:`routing_cost` is the tracked FLOP/VMEM model of dense vs banded
+routing (``benchmarks/run.py --only decode`` persists it per plan).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def normalize_chunk_width(chunk_width: int, block_size: int) -> int:
+    """Validate a chunk width: positive multiple of 8, at most block_size."""
+    W = int(chunk_width)
+    if W <= 0 or W % 8:
+        raise ValueError(
+            f"chunk_width must be a positive multiple of 8; got {chunk_width}")
+    if W > block_size:
+        raise ValueError(
+            f"chunk_width {W} exceeds block_size {block_size}: a chunk's "
+            "output band would be wider than the output itself")
+    return W
+
+
+def pad_cols(x: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad the last axis up to a multiple (static concatenate only)."""
+    S = x.shape[-1]
+    pad = (-S) % multiple
+    if not pad:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+
+
+def chunked_prefix(flags: jax.Array, W: int) -> tuple[jax.Array, jax.Array]:
+    """Chunked exclusive prefix sum of small non-negative int32 values.
+
+    ``flags`` is ``int32 [T, Sp]`` with ``Sp % W == 0`` and per-row sums
+    < 2²⁴ (f32-exact). Returns ``(loc, base)``: ``loc int32 [T, nC, W]`` is
+    the within-chunk exclusive prefix, ``base int32 [T, nC]`` the sum over
+    all earlier chunks — the global exclusive prefix is ``base[..., None]
+    + loc``. Cost: O(Sp·W) MACs + O(nC²) for the base combine, replacing
+    the dense [Sp, Sp] triangular matmul's O(Sp²).
+    """
+    T, Sp = flags.shape
+    nC = Sp // W
+    f = flags.reshape(T, nC, W).astype(jnp.float32)
+    ii = lax.broadcasted_iota(jnp.int32, (W, W), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (W, W), 1)
+    tri = (ii < jj).astype(jnp.float32)  # [W, W], strict upper
+    loc = lax.dot_general(
+        f, tri, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(jnp.int32)  # [T, nC, W]
+    totals = loc[:, :, -1] + flags.reshape(T, nC, W)[:, :, -1]  # [T, nC]
+    cc = lax.broadcasted_iota(jnp.int32, (nC, nC), 0)
+    dd = lax.broadcasted_iota(jnp.int32, (nC, nC), 1)
+    tric = (cc < dd).astype(jnp.float32)
+    base = lax.dot(
+        totals.astype(jnp.float32), tric, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)  # [T, nC]
+    return loc, base
+
+
+def place_bands(bands: jax.Array, offsets: jax.Array,
+                out_width: int) -> jax.Array:
+    """Sum W-wide bands into a [T, out_width] row at data-dependent offsets.
+
+    ``bands`` int32 ``[T, G, Wb]``, ``offsets`` int32 ``[T, G]``; band
+    ``(t, g)`` contributes ``bands[t, g, l]`` to output column
+    ``offsets[t, g] + l``. Implemented as a barrel shift — ⌈log₂⌉ static
+    zero-fill right-shifts gated per band by the offset's bits — followed
+    by an int32 sum over bands (exact mod 2³²; overlapping bands, e.g.
+    integers straddling a chunk boundary, recombine here). Columns past
+    ``out_width`` fall off the end; callers guarantee live values stay
+    in range (masked contributions are zero).
+    """
+    T, G, Wb = bands.shape
+    x = bands
+    if Wb < out_width:
+        x = jnp.concatenate(
+            [x, jnp.zeros((T, G, out_width - Wb), x.dtype)], axis=-1)
+    elif Wb > out_width:
+        # a band wider than the output row: columns ≥ out_width can only
+        # hold masked zeros (live values index < out_width by contract)
+        x = x[..., :out_width]
+    off = jnp.clip(offsets, 0, out_width)[:, :, None]  # [T, G, 1]
+    k = 1
+    while k <= out_width:
+        bit = (off // k) % 2
+        if k < out_width:
+            shifted = jnp.concatenate(
+                [jnp.zeros((T, G, k), x.dtype), x[..., : out_width - k]],
+                axis=-1)
+        else:
+            shifted = jnp.zeros_like(x)
+        x = jnp.where(bit == 1, shifted, x)
+        k *= 2
+    return x.sum(axis=1)  # [T, out_width] int32, wrap-around exact
+
+
+def banded_scatter_u32(loc: jax.Array, lo: jax.Array, hi: jax.Array,
+                       base: jax.Array, out_width: int) -> jax.Array:
+    """Banded one-hot MXU scatter of 16-bit-split contributions.
+
+    ``loc`` int32 ``[T, nC, W]`` within-band slot per byte, ``lo``/``hi``
+    int32 ``[T, nC, W]`` halfword contributions (each < 2¹⁶, at most 5 per
+    (chunk, slot): f32-exact), ``base`` int32 ``[T, nC]`` band offsets.
+    Returns int32 ``[T, out_width]`` = lo + (hi << 16), exact mod 2³².
+    """
+    T, nC, W = loc.shape
+    lvec = lax.broadcasted_iota(jnp.int32, (T, nC, W, W), 3)
+    onehot = (loc[:, :, :, None] == lvec).astype(jnp.float32)  # [T,nC,W,W]
+    dn = (((2,), (2,)), ((0, 1), (0, 1)))  # contract bytes, batch (T, nC)
+    lo_b = lax.dot_general(
+        onehot, lo.astype(jnp.float32), dn,
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+    hi_b = lax.dot_general(
+        onehot, hi.astype(jnp.float32), dn,
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+    return (place_bands(lo_b, base, out_width)
+            + (place_bands(hi_b, base, out_width) << 16))
+
+
+# ---------------------------------------------------------------------------
+# FLOP / VMEM model — the tracked "modeled scatter MACs" numbers
+# ---------------------------------------------------------------------------
+def routing_cost(format: str, *, S: int, B: int, W: int | None,
+                 T: int = 8) -> dict:
+    """Model the byte→integer routing cost of one decode tile.
+
+    ``mxu_macs`` counts multiply-accumulates of the routing matmuls — the
+    prefix-sum triangular contractions, one-hot gathers and the two
+    16-bit-split scatter matmuls (the unit the docs quote: the dense cores
+    spend ~S·B MACs *per scatter matmul*). ``vpu_ops`` counts the per-lane
+    compare/select traffic that is not a contraction: one-hot equality
+    tests, the Stream VByte rank tensor, and the barrel-shift band
+    combine. VMEM counts routing intermediates that scale with the one-hot
+    (f32 one-hots, triangular constants, band buffers), not the
+    payload/output tiles common to both paths.
+
+    ``W=None`` models the dense core. Numbers are per tile of ``T`` blocks;
+    divide by T for per-block, as quoted in docs/kernels.md.
+    """
+    if format not in ("vbyte", "streamvbyte"):
+        raise ValueError(f"unknown format {format!r}")
+    f32 = 4
+    if W is None:
+        if format == "vbyte":
+            mxu = {
+                "prefix_out_idx": T * S * S,      # [T,S]×[S,S] strict tri
+                "scatter": 2 * T * S * B,         # lo + hi one-hot matmuls
+            }
+            vpu = {"onehot_build": T * S * B}
+            vmem = {
+                "onehot": T * S * B * f32,
+                "tri": S * S * f32,
+            }
+        else:
+            C = B // 4
+            mxu = {
+                "control_expand": T * C * B,      # [T,C]×[C,B] one-hot
+                "prefix_starts": T * B * B,       # [T,B]×[B,B] strict tri
+                "owner_start_gather": T * S * B,  # [T,S,B]×[T,B] one-hot
+                "scatter": 2 * T * S * B,
+            }
+            vpu = {
+                "owner_rank": T * S * B,          # [T,S,B] compare+sum
+                "onehot_build": T * S * B,
+            }
+            vmem = {
+                "onehot": T * S * B * f32,
+                "rank_tensor": T * S * B * f32,
+                "tri": B * B * f32,
+            }
+    else:
+        nC = -(-S // W)
+        Sp = nC * W
+        logB = max(1, math.ceil(math.log2(max(2, B + 1))))
+        if format == "vbyte":
+            mxu = {
+                "prefix_out_idx": T * Sp * W + T * nC * nC,
+                "scatter": 2 * T * Sp * W,
+            }
+            vpu = {
+                "onehot_build": T * nC * W * W,
+                "band_combine": 2 * T * nC * B * logB,
+            }
+            vmem = {
+                "onehot": T * nC * W * W * f32,
+                "tri": (W * W + nC * nC) * f32,
+                "bands": 2 * T * nC * B * f32,
+            }
+        else:
+            ng = -(-B // W)
+            logS = max(1, math.ceil(math.log2(max(2, Sp + 1))))
+            mxu = {
+                # control expand is a static ×4 broadcast in the banded
+                # core — no matmul
+                "prefix_starts": T * ng * W * W + T * ng * ng,
+                "prefix_out_idx": T * Sp * W + T * nC * nC,
+                "scatter": 2 * T * Sp * W,
+            }
+            vpu = {
+                "ends_band_build": T * ng * W * 4 * W,  # compare+sum
+                "ends_place": T * ng * Sp * logS,
+                "onehot_build": T * nC * W * W,
+                "band_combine": 2 * T * nC * B * logB,
+            }
+            vmem = {
+                "onehot": T * nC * W * W * f32,
+                "ends_band": T * ng * 4 * W * f32,
+                "tri": (W * W + 2 * max(ng, nC) ** 2) * f32,
+                "bands": 2 * T * nC * B * f32,
+            }
+    return {
+        "mxu_macs": mxu,
+        "mxu_total": sum(mxu.values()),
+        "vpu_ops": vpu,
+        "vpu_total": sum(vpu.values()),
+        "vmem_bytes": vmem,
+        "vmem_total": sum(vmem.values()),
+    }
+
+
+def routing_reduction(format: str, *, S: int, B: int, W: int,
+                      T: int = 8) -> float:
+    """Dense-over-banded modeled scatter-MAC ratio (the headline ≥4×)."""
+    dense = routing_cost(format, S=S, B=B, W=None, T=T)["mxu_total"]
+    banded = routing_cost(format, S=S, B=B, W=W, T=T)["mxu_total"]
+    return dense / banded

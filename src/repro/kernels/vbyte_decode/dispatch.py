@@ -42,7 +42,7 @@ import functools
 import json
 import os
 import time
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, replace
 
 import numpy as np
 
@@ -79,20 +79,34 @@ VMEM_BROADCAST_BUDGET = 4 << 20
 
 @dataclass(frozen=True)
 class DecodePlan:
-    """One concrete decode execution plan (see module docstring)."""
+    """One concrete decode execution plan (see module docstring).
+
+    ``chunk`` is the banded-scatter chunk width W: ``None`` runs the dense
+    O(S·B) routing, an integer W the chunked O(S·W) routing (see
+    ``banded.py``). On the Pallas path it selects the banded tile cores;
+    on the jnp path the chunked prefix decomposition of the vectorized
+    decoders. Both produce bit-identical uint32 grids, so the axis is a
+    pure perf knob — which is why it lives on the autotuned plan.
+    """
 
     path: str  # "pallas" | "jnp" | "ref" (gather-lowered; GSPMD-friendly)
     fused: bool = True
     block_tile: int = 8
+    chunk: int | None = None  # banded-scatter chunk width W (None = dense)
 
     def __post_init__(self):
         if self.path not in ("pallas", "jnp", "ref"):
             raise ValueError(f"unknown plan path {self.path!r}")
+        if self.chunk is not None and (self.chunk <= 0 or self.chunk % 8):
+            raise ValueError(
+                f"plan chunk width must be a positive multiple of 8 or "
+                f"None; got {self.chunk!r}")
 
     @property
     def label(self) -> str:
         return f"{self.path}{'_fused' if self.fused else '_unfused'}" \
-               + (f"_bt{self.block_tile}" if self.path == "pallas" else "")
+               + (f"_bt{self.block_tile}" if self.path == "pallas" else "") \
+               + (f"_w{self.chunk}" if self.chunk is not None else "")
 
 
 # ---------------------------------------------------------------------------
@@ -125,14 +139,31 @@ def load_cache(path: str | None = None, *, reload: bool = False) -> dict:
     return _CACHE
 
 
-def default_plan(epilogue: str = "stream") -> DecodePlan:
+# per-format default banded chunk width: the smallest W that clears the
+# ≥4x modeled routing-MAC reduction at default shapes without shrinking
+# the MXU tiles below usefulness (docs/kernels.md §Banded chunked scatter)
+DEFAULT_CHUNK = {"vbyte": 64, "streamvbyte": 32}
+
+
+def default_plan(epilogue: str = "stream",
+                 format: str = "vbyte") -> DecodePlan:
     """Heuristic when the cache has no measurement for a workload."""
     if jax.default_backend() == "tpu":
-        return DecodePlan("pallas", fused=True, block_tile=8)
+        return DecodePlan("pallas", fused=True, block_tile=8,
+                          chunk=DEFAULT_CHUNK.get(format, 64))
     # CPU proxy: interpret-mode Pallas is a correctness path, not a perf
     # path; the jnp decoders vectorize through XLA-CPU. Fusion still wins
     # (one executable, no id-stream round-trip) — see benchmarks.json.
     return DecodePlan("jnp", fused=True)
+
+
+def _clamp_chunk(chunk: int | None, block_size: int) -> int | None:
+    """Shrink a heuristic chunk width to the workload's block size (a band
+    can't be wider than the output row); None when no multiple of 8 fits."""
+    if chunk is None or chunk <= block_size:
+        return chunk
+    clamped = (block_size // 8) * 8
+    return clamped or None
 
 
 def resolve_plan(plan, *, format: str, epilogue: str,
@@ -143,8 +174,10 @@ def resolve_plan(plan, *, format: str, epilogue: str,
         entry = load_cache().get(cache_key(format, epilogue, block_size))
         if entry and "plan" in entry:
             p = entry["plan"]
-            return DecodePlan(p["path"], p["fused"], p.get("block_tile", 8))
-        return default_plan(epilogue)
+            return DecodePlan(p["path"], p["fused"], p.get("block_tile", 8),
+                              p.get("chunk"))
+        d = default_plan(epilogue, format)
+        return replace(d, chunk=_clamp_chunk(d.chunk, block_size))
     if plan in ("kernel", "pallas"):
         return DecodePlan("pallas", fused=True)
     if plan == "jnp":
@@ -152,12 +185,19 @@ def resolve_plan(plan, *, format: str, epilogue: str,
     if plan == "ref":
         return DecodePlan("ref", fused=False)
     if plan == "fused":
-        return DecodePlan(default_plan(epilogue).path, fused=True)
+        return DecodePlan(default_plan(epilogue, format).path, fused=True)
     if plan == "unfused":
-        return DecodePlan(default_plan(epilogue).path, fused=False)
+        return DecodePlan(default_plan(epilogue, format).path, fused=False)
+    if plan == "banded":
+        return replace(default_plan(epilogue, format),
+                       chunk=_clamp_chunk(DEFAULT_CHUNK.get(format, 64),
+                                          block_size))
+    if plan == "dense":
+        return replace(default_plan(epilogue, format), chunk=None)
     raise ValueError(
         f"unknown plan {plan!r}; expected a DecodePlan or one of "
-        "'auto', 'kernel', 'pallas', 'jnp', 'fused', 'unfused'")
+        "'auto', 'kernel', 'pallas', 'jnp', 'fused', 'unfused', "
+        "'banded', 'dense'")
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +210,7 @@ def _decode_grid(operands: dict, *, format: str, block_size: int,
         fn = (vbyte_decode_blocked if format == "vbyte"
               else stream_vbyte_decode_blocked)
         return fn(**operands, block_size=block_size, differential=differential,
-                  block_tile=plan.block_tile)
+                  block_tile=plan.block_tile, chunk_width=plan.chunk)
     if plan.path == "ref":
         if format != "vbyte":
             raise ValueError(
@@ -186,14 +226,17 @@ def _decode_grid(operands: dict, *, format: str, block_size: int,
             **operands, block_size=block_size, differential=differential)
     dec = vmasked.decode_blocked if format == "vbyte" \
         else svb_masked.decode_blocked
-    return dec(**operands, block_size=block_size, differential=differential)
+    return dec(**operands, block_size=block_size, differential=differential,
+               chunk_width=plan.chunk)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("format", "epilogue", "block_size", "differential")
+    jax.jit, static_argnames=("format", "epilogue", "block_size",
+                              "differential", "chunk_width")
 )
 def _jnp_fused(operands: dict, extras: dict, *, format: str, epilogue: str,
-               block_size: int, differential: bool):
+               block_size: int, differential: bool,
+               chunk_width: int | None = None):
     """Fused CPU path: decode + epilogue in ONE XLA executable.
 
     The optimization barrier pins the decoded grid as a fusion boundary:
@@ -204,7 +247,8 @@ def _jnp_fused(operands: dict, extras: dict, *, format: str, epilogue: str,
     """
     dec = vmasked.decode_blocked if format == "vbyte" \
         else svb_masked.decode_blocked
-    grid = dec(**operands, block_size=block_size, differential=differential)
+    grid = dec(**operands, block_size=block_size, differential=differential,
+               chunk_width=chunk_width)
     grid = lax.optimization_barrier(grid)
     return eplib.apply_grid(epilogue, grid, operands["counts"], extras)
 
@@ -241,11 +285,14 @@ def _execute(operands: dict, extras: dict, *, format: str, epilogue: str,
             return eplib.fused_decode(
                 operands, extras, format=format, epilogue=epilogue,
                 block_size=block_size, differential=differential,
-                block_tile=plan.block_tile, interpret=interpret)
-        plan = DecodePlan("pallas", fused=False, block_tile=plan.block_tile)
+                block_tile=plan.block_tile, chunk_width=plan.chunk,
+                interpret=interpret)
+        plan = DecodePlan("pallas", fused=False, block_tile=plan.block_tile,
+                          chunk=plan.chunk)
     if plan.path == "jnp" and plan.fused:
         return _jnp_fused(operands, extras, format=format, epilogue=epilogue,
-                          block_size=block_size, differential=differential)
+                          block_size=block_size, differential=differential,
+                          chunk_width=plan.chunk)
     # unfused: decode grid, then the epilogue as a second dispatch
     grid = _decode_grid(operands, format=format, block_size=block_size,
                         differential=differential, plan=plan)
@@ -467,20 +514,30 @@ def autotune(
             seed=seed)
         for ep_name in epilogue_names:
             if ep_name == "stream":
-                # no consumer: fused vs unfused is the same program — only
-                # the decoder path / block tile are real degrees of freedom
-                candidates = [DecodePlan("jnp", True)]
+                # no consumer: fused vs unfused is the same program — the
+                # decoder path, block tile and banded chunk width are the
+                # real degrees of freedom
+                w0 = DEFAULT_CHUNK.get(fmt, 64)
+                candidates = [DecodePlan("jnp", True),
+                              DecodePlan("jnp", True, chunk=w0)]
                 if fmt == "vbyte":
                     candidates.append(DecodePlan("ref", False))
                 if include_pallas:
-                    candidates += [DecodePlan("pallas", True, bt)
-                                   for bt in (8, 16)]
+                    candidates += [DecodePlan("pallas", True, bt, chunk=w)
+                                   for bt in (8, 16)
+                                   for w in dict.fromkeys((None, 32, w0))]
+                    # the banded cores' smaller one-hot/triangular VMEM
+                    # footprint is what makes tiles past 8 blocks fit
+                    candidates += [DecodePlan("pallas", True, 32, chunk=w0)]
             else:
-                candidates = [DecodePlan("jnp", True), DecodePlan("jnp", False)]
+                w0 = DEFAULT_CHUNK.get(fmt, 64)
+                candidates = [DecodePlan("jnp", True), DecodePlan("jnp", False),
+                              DecodePlan("jnp", True, chunk=w0)]
                 if include_pallas:
-                    candidates += [DecodePlan("pallas", True, bt)
-                                   for bt in (8, 16)]
-                    candidates += [DecodePlan("pallas", False, 8)]
+                    candidates += [DecodePlan("pallas", True, bt, chunk=w)
+                                   for bt in (8, 16) for w in (None, w0)]
+                    candidates += [DecodePlan("pallas", True, 32, chunk=w0),
+                                   DecodePlan("pallas", False, 8)]
             timings = {}
             for cand in candidates:
                 fn = functools.partial(

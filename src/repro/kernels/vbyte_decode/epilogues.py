@@ -203,6 +203,7 @@ def fused_decode_pallas(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool = False,
 ):
     """Raw pallas_call builder: one pass over (decode tile → epilogue)."""
@@ -233,11 +234,13 @@ def fused_decode_pallas(
         out_refs = refs[n_fmt + 2 + len(extra_names):]
         if format == "vbyte":
             vals, valid = decode_tile(refs[0][...], counts_ref[...],
-                                      block_size=block_size)
+                                      block_size=block_size,
+                                      chunk_width=chunk_width)
         else:
             vals, valid = stream_decode_tile(refs[0][...], refs[1][...],
                                              counts_ref[...],
-                                             block_size=block_size)
+                                             block_size=block_size,
+                                             chunk_width=chunk_width)
         if differential:
             vals = prefix_sum_tile(vals, valid, bases_ref[...])
         res = ep.apply(vals, valid, **extra_vals)
@@ -257,7 +260,7 @@ def fused_decode_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=("format", "epilogue", "block_size", "differential",
-                     "block_tile", "interpret"),
+                     "block_tile", "chunk_width", "interpret"),
 )
 def fused_decode(
     operands: dict,  # format operands incl. counts/bases (device_operands())
@@ -268,6 +271,7 @@ def fused_decode(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool | None = None,
 ):
     """Public fused decode→epilogue entry (jit'd; both formats).
@@ -305,7 +309,7 @@ def fused_decode(
     out = fused_decode_pallas(
         format, fmt_arrays, counts2, bases2, extras,
         epilogue=epilogue, block_size=block_size, differential=differential,
-        block_tile=block_tile, interpret=interpret,
+        block_tile=block_tile, chunk_width=chunk_width, interpret=interpret,
     )
     if isinstance(out, (tuple, list)):
         return tuple(o[:nb] for o in out)

@@ -20,6 +20,11 @@ branch-free:
 into 16-bit halves before each matmul: per-output sums stay < 2^24 (f32-exact)
 and are recombined with wrap-around int32 adds (≡ mod 2^32, i.e. uint32).
 
+``chunk_width=W`` swaps the dense O(S²)+O(S·B) routing for the chunked
+banded scatter (``banded.py``): out_idx is monotone with increments ≤ 1,
+so a W-byte chunk's outputs live in one W-slot band — O(S·W) routing MACs,
+bit-identical output (docs/kernels.md §Banded chunked scatter).
+
 All tensors live in VMEM; block dims are multiples of (8, 128) lanes.
 """
 from __future__ import annotations
@@ -30,6 +35,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+
+from .banded import (banded_scatter_u32, chunked_prefix, normalize_chunk_width,
+                     pad_cols)
 
 
 def _shift_right(x: jax.Array, k: int) -> jax.Array:
@@ -47,8 +55,8 @@ def _row_cumsum_exact_u32(x: jax.Array, incl_tri: jax.Array) -> jax.Array:
     return lo_s + (hi_s << 16)
 
 
-def decode_tile(payload: jax.Array, counts: jax.Array, *,
-                block_size: int) -> tuple[jax.Array, jax.Array]:
+def decode_tile(payload: jax.Array, counts: jax.Array, *, block_size: int,
+                chunk_width: int | None = None) -> tuple[jax.Array, jax.Array]:
     """Decode one VMEM tile of Masked-VByte bytes — the shared decode-tile core.
 
     ``payload`` is the raw ``uint8 [T, S]`` tile, ``counts`` the ``int32
@@ -56,6 +64,13 @@ def decode_tile(payload: jax.Array, counts: jax.Array, *,
     ``[T, B]`` (bitcast of uint32, masked rows zeroed) and ``valid`` bool
     ``[T, B]``. Pure jnp/lax — callable both from a Pallas kernel body and
     from host-level code; every fused epilogue consumes this contract.
+
+    ``chunk_width=None`` runs the dense O(S²)+O(S·B) routing (full
+    triangular prefix matmul + [T, S, B] one-hot scatter). An integer ``W``
+    selects the chunked banded-scatter routing (``banded.py``): out_idx is
+    monotone and increments ≤1 per byte, so chunk ``c``'s bytes land only
+    in slots ``[chunk_base[c], chunk_base[c]+W)`` — O(S·W) MACs, identical
+    uint32 output bit-for-bit.
     """
     T, S = payload.shape
     B = block_size
@@ -64,15 +79,9 @@ def decode_tile(payload: jax.Array, counts: jax.Array, *,
     cont = b >> 7
     end = 1 - cont
 
-    # exclusive prefix sum over the byte axis: out_idx[t,i] = #terminators < i
-    ii = lax.broadcasted_iota(jnp.int32, (S, S), 0)
-    jj = lax.broadcasted_iota(jnp.int32, (S, S), 1)
-    strict_tri = (ii < jj).astype(jnp.float32)  # [S, S], U[k,i]=1 iff k<i
-    out_idx = lax.dot(
-        end.astype(jnp.float32), strict_tri, preferred_element_type=jnp.float32
-    ).astype(jnp.int32)
-
-    # within-integer byte position (≤ 4): closed form over preceding cont flags
+    # within-integer byte position (≤ 4): closed form over preceding cont
+    # flags — static shifts over the full row, so integers whose bytes
+    # straddle a chunk boundary see their true position either way
     c1 = _shift_right(cont, 1)
     c2 = _shift_right(cont, 2)
     c3 = _shift_right(cont, 3)
@@ -80,19 +89,50 @@ def decode_tile(payload: jax.Array, counts: jax.Array, *,
     pos = c1 * (1 + c2 * (1 + c3 * (1 + c4)))
 
     contrib = (b & 0x7F) << (7 * pos)  # int32, wraps ≡ uint32
-    keep = out_idx < counts  # [T,S] < [T,1]
-    contrib = jnp.where(keep, contrib, 0)
-    out_idx = jnp.where(keep, out_idx, B - 1)  # clamp masked bytes in-range
 
-    # one-hot MXU scatter: out[t,j] = Σ_i [out_idx[t,i]==j]·contrib[t,i]
-    jvec = lax.broadcasted_iota(jnp.int32, (T, S, B), 2)
-    onehot = (out_idx[:, :, None] == jvec).astype(jnp.float32)  # [T,S,B]
-    dnums = (((1,), (1,)), ((0,), (0,)))  # contract over S, batch over T
-    lo = (contrib & 0xFFFF).astype(jnp.float32)
-    hi = ((contrib >> 16) & 0xFFFF).astype(jnp.float32)
-    lo_sum = lax.dot_general(onehot, lo, dnums, preferred_element_type=jnp.float32)
-    hi_sum = lax.dot_general(onehot, hi, dnums, preferred_element_type=jnp.float32)
-    out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T,B]
+    if chunk_width is None:
+        # dense routing: exclusive prefix sum over the full byte axis
+        # (out_idx[t,i] = #terminators < i) + full-width one-hot scatter
+        ii = lax.broadcasted_iota(jnp.int32, (S, S), 0)
+        jj = lax.broadcasted_iota(jnp.int32, (S, S), 1)
+        strict_tri = (ii < jj).astype(jnp.float32)  # [S,S], U[k,i]=1 iff k<i
+        out_idx = lax.dot(
+            end.astype(jnp.float32), strict_tri,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+
+        keep = out_idx < counts  # [T,S] < [T,1]
+        contrib = jnp.where(keep, contrib, 0)
+        out_idx = jnp.where(keep, out_idx, B - 1)  # clamp masked bytes
+
+        # one-hot MXU scatter: out[t,j] = Σ_i [out_idx[t,i]==j]·contrib[t,i]
+        jvec = lax.broadcasted_iota(jnp.int32, (T, S, B), 2)
+        onehot = (out_idx[:, :, None] == jvec).astype(jnp.float32)  # [T,S,B]
+        dnums = (((1,), (1,)), ((0,), (0,)))  # contract over S, batch over T
+        lo = (contrib & 0xFFFF).astype(jnp.float32)
+        hi = ((contrib >> 16) & 0xFFFF).astype(jnp.float32)
+        lo_sum = lax.dot_general(onehot, lo, dnums,
+                                 preferred_element_type=jnp.float32)
+        hi_sum = lax.dot_general(onehot, hi, dnums,
+                                 preferred_element_type=jnp.float32)
+        out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)
+    else:
+        W = normalize_chunk_width(chunk_width, B)
+        # chunked prefix: loc = #terminators earlier in the chunk (the
+        # within-band slot, < W by construction), base = #terminators in
+        # earlier chunks. Padding flags are zeros, so bases are unaffected.
+        end_p = pad_cols(end, W)  # [T, Sp]
+        Sp = end_p.shape[1]
+        nC = Sp // W
+        loc, base = chunked_prefix(end_p, W)
+        out_idx = (base[:, :, None] + loc).reshape(T, Sp)[:, :S]
+
+        keep = out_idx < counts  # [T,S] < [T,1]
+        contrib = jnp.where(keep, contrib, 0)
+        lo = pad_cols(contrib & 0xFFFF, W).reshape(T, nC, W)
+        hi = pad_cols((contrib >> 16) & 0xFFFF, W).reshape(T, nC, W)
+        # banded one-hot scatter into W-slot bands + barrel-shift combine;
+        # straddling integers recombine via the overlapped int32 band add
+        out = banded_scatter_u32(loc, lo, hi, base, B)
 
     jrow = lax.broadcasted_iota(jnp.int32, (T, B), 1)
     valid = jrow < counts
@@ -115,9 +155,10 @@ def prefix_sum_tile(out: jax.Array, valid: jax.Array, bases: jax.Array) -> jax.A
 
 
 def _decode_tile_kernel(payload_ref, counts_ref, bases_ref, out_ref, *,
-                        block_size: int, differential: bool):
+                        block_size: int, differential: bool,
+                        chunk_width: int | None):
     out, valid = decode_tile(payload_ref[...], counts_ref[...],
-                             block_size=block_size)
+                             block_size=block_size, chunk_width=chunk_width)
     if differential:
         out = prefix_sum_tile(out, valid, bases_ref[...])
     out_ref[...] = out
@@ -131,6 +172,7 @@ def decode_blocked_pallas(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call wrapper; see ops.vbyte_decode_blocked for the public API."""
@@ -139,7 +181,8 @@ def decode_blocked_pallas(
         raise ValueError(f"n_blocks={nb} must be a multiple of block_tile={block_tile}")
     grid = (nb // block_tile,)
     kernel = functools.partial(
-        _decode_tile_kernel, block_size=block_size, differential=differential
+        _decode_tile_kernel, block_size=block_size, differential=differential,
+        chunk_width=chunk_width,
     )
     return pl.pallas_call(
         kernel,

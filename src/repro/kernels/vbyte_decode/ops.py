@@ -39,7 +39,8 @@ def normalize_block_meta(name: str, x: jax.Array, n_blocks: int) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_size", "differential", "block_tile", "interpret")
+    jax.jit, static_argnames=("block_size", "differential", "block_tile",
+                              "chunk_width", "interpret")
 )
 def vbyte_decode_blocked(
     payload: jax.Array,  # uint8 [n_blocks, stride]
@@ -49,6 +50,7 @@ def vbyte_decode_blocked(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Decode a blocked VByte payload to uint32[n_blocks, block_size]."""
@@ -74,6 +76,7 @@ def vbyte_decode_blocked(
         block_size=block_size,
         differential=differential,
         block_tile=block_tile,
+        chunk_width=chunk_width,
         interpret=interpret,
     )
     out = jax.lax.bitcast_convert_type(out, jnp.uint32)
@@ -81,7 +84,8 @@ def vbyte_decode_blocked(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_size", "differential", "block_tile", "interpret")
+    jax.jit, static_argnames=("block_size", "differential", "block_tile",
+                              "chunk_width", "interpret")
 )
 def stream_vbyte_decode_blocked(
     control: jax.Array,  # uint8 [n_blocks, block_size // 4]
@@ -92,6 +96,7 @@ def stream_vbyte_decode_blocked(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Decode a blocked Stream-VByte payload to uint32[n_blocks, block_size]."""
@@ -119,6 +124,7 @@ def stream_vbyte_decode_blocked(
         block_size=block_size,
         differential=differential,
         block_tile=block_tile,
+        chunk_width=chunk_width,
         interpret=interpret,
     )
     out = jax.lax.bitcast_convert_type(out, jnp.uint32)

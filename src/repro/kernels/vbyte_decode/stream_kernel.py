@@ -25,6 +25,12 @@ continuation-bit machinery entirely:
 All tensors live in VMEM; shapes are static; padding control codes are zeros
 (code 0 = length 1) so masking by ``count`` is load-bearing, as everywhere
 else in this repo.
+
+``chunk_width=W`` replaces the O(S·B) rank/gather/scatter routing above
+with the chunked banded scatter: per-integer end flags are banded into
+byte space (a W-integer chunk spans ≤ 4W data bytes), after which the
+byte→integer machinery is exactly the Masked-VByte banded core — O(S·W)
+MACs, bit-identical output (docs/kernels.md §Banded chunked scatter).
 """
 from __future__ import annotations
 
@@ -35,18 +41,40 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .banded import (banded_scatter_u32, chunked_prefix, normalize_chunk_width,
+                     pad_cols, place_bands)
 from .kernel import prefix_sum_tile
 
 MAX_BYTES_PER_INT = 4
 
 
+def _shift_right_fill(x: jax.Array, k: int, fill: int) -> jax.Array:
+    """x[..., i-k] with constant fill — static slices only (Mosaic-safe)."""
+    t, s = x.shape
+    return jnp.concatenate(
+        [jnp.full((t, k), fill, x.dtype), x[:, : s - k]], axis=1)
+
+
 def stream_decode_tile(control: jax.Array, data: jax.Array, counts: jax.Array,
-                       *, block_size: int) -> tuple[jax.Array, jax.Array]:
+                       *, block_size: int,
+                       chunk_width: int | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
     """Decode one VMEM tile of Stream-VByte (control, data) bytes.
 
     Same ``(out int32 [T, B], valid bool [T, B])`` contract as
     ``kernel.decode_tile`` — the shared decode-tile core every fused
     epilogue plugs into.
+
+    ``chunk_width=None`` runs the dense routing: the full ``[T, S, B]``
+    owner-rank tensor (every data byte compared against every integer's
+    start) reused as a one-hot for the owner-start gather and the two
+    scatter matmuls. An integer ``W`` selects the chunked banded routing:
+    per-integer **end flags** are scattered into byte space through narrow
+    ``[T, ng, W, 4W]`` bands (an integer chunk of W integers spans ≤ 4W
+    data bytes), after which the byte→integer machinery is exactly the
+    Masked-VByte banded core — chunked prefix of the end flags, closed-form
+    in-integer positions, ``[T, nC, W, W]`` banded scatter. O(S·W) instead
+    of O(S·B), identical uint32 output bit-for-bit.
     """
     T, C = control.shape
     _, S = data.shape
@@ -54,20 +82,38 @@ def stream_decode_tile(control: jax.Array, data: jax.Array, counts: jax.Array,
 
     ctrl = control.astype(jnp.int32)  # [T, C]
 
-    # expand control bytes C -> B: column j reads ctrl[:, j // 4]. A one-hot
-    # f32 matmul plays the role of the unpack shuffle (ctrl < 256: f32-exact).
-    cc = lax.broadcasted_iota(jnp.int32, (C, B), 0)
-    jj = lax.broadcasted_iota(jnp.int32, (C, B), 1)
-    expand = (jj // 4 == cc).astype(jnp.float32)  # [C, B]
-    packed = lax.dot(
-        ctrl.astype(jnp.float32), expand, preferred_element_type=jnp.float32
-    ).astype(jnp.int32)  # [T, B]
+    # expand control bytes C -> B: column j reads ctrl[:, j // 4].
+    if chunk_width is None:
+        # dense core: a one-hot f32 matmul plays the role of the unpack
+        # shuffle (ctrl < 256: f32-exact)
+        cc = lax.broadcasted_iota(jnp.int32, (C, B), 0)
+        jj = lax.broadcasted_iota(jnp.int32, (C, B), 1)
+        expand = (jj // 4 == cc).astype(jnp.float32)  # [C, B]
+        packed = lax.dot(
+            ctrl.astype(jnp.float32), expand,
+            preferred_element_type=jnp.float32).astype(jnp.int32)  # [T, B]
+    else:
+        # banded core: the unpack is a static ×4 lane broadcast — zero MACs
+        packed = jnp.broadcast_to(ctrl[:, :, None], (T, C, 4)).reshape(T, B)
 
     jrow = lax.broadcasted_iota(jnp.int32, (T, B), 1)
     code = (packed >> (2 * (jrow % 4))) & 3
     valid_int = jrow < counts  # [T, B] < [T, 1]
     length = jnp.where(valid_int, code + 1, 0)
 
+    if chunk_width is None:
+        out = _dense_stream_routing(data, length, valid_int, S, B, T)
+    else:
+        out = _banded_stream_routing(
+            data, length, valid_int, counts,
+            W=normalize_chunk_width(chunk_width, B), S=S, B=B, T=T)
+
+    out = jnp.where(valid_int, out, 0)
+    return out, valid_int
+
+
+def _dense_stream_routing(data, length, valid_int, S, B, T):
+    """Dense O(S·B) routing: full rank tensor + one-hot gather/scatter."""
     # start offset of every integer: exclusive prefix sum over lengths
     # (strict-triangular MXU matmul; sums ≤ 4·B ≪ 2^24, f32-exact)
     kk = lax.broadcasted_iota(jnp.int32, (B, B), 0)
@@ -112,16 +158,74 @@ def stream_decode_tile(control: jax.Array, data: jax.Array, counts: jax.Array,
     hi_sum = lax.dot_general(
         onehot, hi.astype(jnp.float32), sdnums, preferred_element_type=jnp.float32
     )
-    out = lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T, B]
+    return lo_sum.astype(jnp.int32) + (hi_sum.astype(jnp.int32) << 16)  # [T, B]
 
-    out = jnp.where(valid_int, out, 0)
-    return out, valid_int
+
+def _banded_stream_routing(data, length, valid_int, counts, *, W, S, B, T):
+    """Chunked O(S·W) routing via end flags in byte space.
+
+    Stage 1 — integer-axis chunking: chunked prefix of the lengths gives
+    every integer's start; an integer chunk of W integers spans at most
+    4W data bytes, so each integer's end flag (at ``start+len-1``) lands
+    inside a [4W]-wide band anchored at the chunk's first start. The bands
+    are summed into byte space at their (data-dependent) anchors by the
+    shared barrel-shift placement.
+
+    Stage 2 — byte-axis chunking: with end flags materialized, the owner
+    of byte i is the number of flags strictly before i and the in-integer
+    position has the Masked-VByte closed form (lengths ≤ 4 close it after
+    three terms), so the chunked prefix + banded one-hot scatter of
+    ``banded.py`` finish the job exactly as in ``kernel.decode_tile``.
+    """
+    # integer starts via chunked prefix over the lengths (B axis, padded to
+    # a chunk multiple; padding lengths are zero so starts stay == total)
+    len_p = pad_cols(length, W)  # [T, Bp]
+    Bp = len_p.shape[1]
+    ng = Bp // W
+    loc_l, base_l = chunked_prefix(len_p, W)
+    starts_p = (base_l[:, :, None] + loc_l).reshape(T, Bp)
+
+    # end flag of integer j sits at starts[j] + length[j] - 1; scatter the
+    # flags through [ng, W, 4W] bands anchored at each chunk's first start
+    end_pos = starts_p + len_p - 1  # [T, Bp]; invalid ints masked below
+    byte_base = starts_p.reshape(T, ng, W)[:, :, 0]  # [T, ng] anchors
+    local_end = end_pos.reshape(T, ng, W) - byte_base[:, :, None]
+    ovec = lax.broadcasted_iota(jnp.int32, (T, ng, W, 4 * W), 3)
+    is_end = ((local_end[:, :, :, None] == ovec)
+              & (len_p.reshape(T, ng, W)[:, :, :, None] > 0))
+    ends_band = jnp.sum(is_end.astype(jnp.int32), axis=2)  # [T, ng, 4W]
+    Sp = S + ((-S) % W)
+    ends = place_bands(ends_band, byte_base, Sp)  # [T, Sp] end flags
+
+    # in-integer position: closed form over preceding non-end flags
+    # (lengths ≤ 4 ⇒ three terms); byte -1 is treated as an end (fill=1)
+    e1 = _shift_right_fill(ends, 1, 1)
+    e2 = _shift_right_fill(ends, 2, 1)
+    e3 = _shift_right_fill(ends, 3, 1)
+    pos = (1 - e1) * (1 + (1 - e2) * (1 + (1 - e3)))  # [T, Sp]
+    pos = pos[:, :S]
+
+    # owner of byte i = #end flags strictly before i (chunked prefix);
+    # bytes past the last valid end flag get out_idx == count ⇒ masked
+    loc_b, base_b = chunked_prefix(ends, W)
+    nC = Sp // W
+    out_idx = (base_b[:, :, None] + loc_b).reshape(T, Sp)[:, :S]
+    keep = out_idx < counts  # [T, S] < [T, 1]
+
+    byte = data.astype(jnp.int32)
+    lo = jnp.where(keep & (pos < 2), byte << (8 * pos), 0)
+    hi = jnp.where(keep & (pos >= 2), byte << (8 * (pos - 2)), 0)
+    lo = pad_cols(lo, W).reshape(T, nC, W)
+    hi = pad_cols(hi, W).reshape(T, nC, W)
+    return banded_scatter_u32(loc_b, lo, hi, base_b, B)
 
 
 def _stream_decode_tile_kernel(control_ref, data_ref, counts_ref, bases_ref,
-                               out_ref, *, block_size: int, differential: bool):
+                               out_ref, *, block_size: int, differential: bool,
+                               chunk_width: int | None):
     out, valid = stream_decode_tile(control_ref[...], data_ref[...],
-                                    counts_ref[...], block_size=block_size)
+                                    counts_ref[...], block_size=block_size,
+                                    chunk_width=chunk_width)
     if differential:
         out = prefix_sum_tile(out, valid, bases_ref[...])
     out_ref[...] = out
@@ -136,6 +240,7 @@ def stream_decode_blocked_pallas(
     block_size: int,
     differential: bool,
     block_tile: int = 8,
+    chunk_width: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call wrapper; see ops.stream_vbyte_decode_blocked."""
@@ -147,7 +252,8 @@ def stream_decode_blocked_pallas(
         raise ValueError(f"n_blocks={nb} must be a multiple of block_tile={block_tile}")
     grid = (nb // block_tile,)
     kernel = functools.partial(
-        _stream_decode_tile_kernel, block_size=block_size, differential=differential
+        _stream_decode_tile_kernel, block_size=block_size,
+        differential=differential, chunk_width=chunk_width
     )
     return pl.pallas_call(
         kernel,

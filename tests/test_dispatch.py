@@ -114,7 +114,9 @@ def test_autotune_persists_and_auto_plan_reads_cache(tmp_path, monkeypatch):
     # unmeasured workloads fall back to the heuristic
     fallback = dispatch.resolve_plan("auto", format="streamvbyte",
                                      epilogue="dot_score", block_size=32)
-    assert fallback == dispatch.default_plan("dot_score")
+    expected = dispatch.default_plan("dot_score", "streamvbyte")
+    assert fallback == dispatch.replace(
+        expected, chunk=dispatch._clamp_chunk(expected.chunk, 32))
     dispatch.load_cache(reload=True)  # restore global cache state
 
 
