@@ -42,6 +42,31 @@ def run(groups=(10, 12, 14, 16, 18, 20, 22), lists_per_group: int = 4):
     return rows
 
 
+def run_posting_index(groups=(10, 12, 14, 16), lists_per_group: int = 4):
+    """Index-level compression per length group K, next to decode speed.
+
+    Builds a real inverted index per group (``repro.index.build_index``:
+    d-gaps + skip tables, both formats) from the same ClueWeb09-style
+    posting lists and reports corpus-weighted bits/int against the paper's
+    §V figure ('this value ranges from 8 to slightly less than 16').
+    """
+    from repro.data.synthetic import posting_list_group
+    from repro.index import build_index
+
+    rng = np.random.default_rng(17)
+    rows = []
+    for k in groups:
+        lists = posting_list_group(rng, k, lists_per_group,
+                                   universe=CLUEWEB_DOCS)
+        row = {"group_K": k, "paper_range_bits": [8, 16]}
+        for fmt, key in (("vbyte", "bits_per_int"),
+                         ("streamvbyte", "svb_bits_per_int")):
+            idx = build_index(lists, format=fmt, n_docs=CLUEWEB_DOCS)
+            row[key] = round(idx.bits_per_int, 2)
+        rows.append(row)
+    return rows
+
+
 def run_integrations():
     rng = np.random.default_rng(5)
     out = {}

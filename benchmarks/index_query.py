@@ -1,0 +1,154 @@
+"""Inverted-index query benchmarks: queries/sec and decoded-ints/sec per
+posting-list length group K, AND vs OR vs top-k, fused (membership /
+bm25_accum epilogues + skip-table pruning) vs unfused, and the
+decode-then-intersect baseline the fused path must beat (decode every
+term's full posting list to host, ``np.intersect1d`` the results — the
+query shape every call site would write without the index subsystem).
+
+Like benchmarks/serving.py, multi-device rows need their own process (jax
+locks the host-platform device count at first init), so :func:`run` spawns
+``python -m benchmarks.index_query --devices N`` per count. Single-device
+processes measure the per-group table; multi-device processes measure the
+sharded ``SearchEngine`` workload (block-parallel ``shard_map`` decode,
+per-shard score partials merged on host).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _bench_queries(engine, queries, *, plan, use_skip, reps=3):
+    """Time one query workload (best of ``reps`` passes — shared-host
+    noise swamps single small samples); returns (qps, decoded-ints/s,
+    skip rate)."""
+    from repro.index import QueryStats
+
+    engine.plan = plan
+    engine.use_skip = use_skip
+    for mode, terms in queries:  # compile every query's shapes (steady state)
+        engine.search(terms, mode)
+    wall = float("inf")
+    for _ in range(reps):
+        st = QueryStats()
+        t0 = time.perf_counter()
+        for mode, terms in queries:
+            engine.search(terms, mode, stats=st)
+        wall = min(wall, time.perf_counter() - t0)
+    total = st.blocks_decoded + st.blocks_skipped
+    return (round(len(queries) / wall, 2),
+            round(st.ints_decoded / wall / 1e6, 3),
+            round(st.blocks_skipped / total, 3) if total else 0.0)
+
+
+def _measure(quick: bool) -> dict:
+    import numpy as np
+
+    import jax
+
+    from repro.data.synthetic import posting_list, posting_list_group
+    from repro.index import build_index
+    from repro.launch.serve import SearchEngine, search_queries
+
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(3)
+    universe = 1 << 22
+
+    if n_dev > 1:
+        # sharded engine workload: one group, mixed query modes
+        k = 8 if quick else 10
+        lists = posting_list_group(rng, k, 8, universe=universe)
+        index = build_index(lists, n_docs=universe)
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        engine = SearchEngine(index, mesh=mesh)
+        qs = search_queries(rng, index, 8 if quick else 24)
+        engine.warmup(qs)  # steady-state timing: compile every shape first
+        stats = engine.run_workload(qs)
+        return {"devices": n_dev, "engine": stats}
+
+    # default groups reach K=18 (262k..524k-int lists): block-level pruning
+    # needs lists much longer than the probe set before it can pay off —
+    # at K ≤ 8 a whole list is 1..4 blocks and the baseline's single tiny
+    # decode is unbeatable
+    groups = (6, 8) if quick else (10, 12, 14, 16, 18)
+    n_lists = 4 if quick else 6
+    n_queries = 6 if quick else 12
+    rows = []
+    for k in groups:
+        lists = dict(enumerate(
+            posting_list_group(rng, k, n_lists, universe=universe)))
+        # rare "title" terms: the selective drivers of realistic AND
+        # queries (the small side of small-vs-large intersection)
+        rare_ids = list(range(1000, 1003))
+        for t in rare_ids:
+            lists[t] = posting_list(rng, int(rng.integers(96, 192)),
+                                    universe=universe)
+        for fmt in ("vbyte", "streamvbyte"):
+            index = build_index(lists, format=fmt, n_docs=universe)
+            engine = SearchEngine(index)
+            group_ids = sorted(t for t in index.terms if t < 1000)
+            qs = {
+                # AND: rare driver ∧ long group list — the shape where
+                # skip-gather + fused membership replace a full decode
+                "and": [("and", [int(rng.choice(rare_ids)),
+                                 int(rng.choice(group_ids))])
+                        for _ in range(n_queries)],
+                "or": [("or", [int(t) for t in
+                               rng.choice(group_ids, 2, replace=False)])
+                       for _ in range(n_queries)],
+                "topk": [("topk", [int(rng.choice(rare_ids))]
+                          + [int(t) for t in
+                             rng.choice(group_ids, 2, replace=False)])
+                         for _ in range(n_queries)],
+                # required-term DAAT: rare driver scored against long
+                # optional terms through the fused bm25 epilogues
+                "topk_driver": [("topk_driver", [int(rng.choice(rare_ids))]
+                                 + [int(t) for t in
+                                    rng.choice(group_ids, 2, replace=False)])
+                                for _ in range(n_queries)],
+            }
+            for mode, queries in qs.items():
+                for plan, fused in (("fused", True), ("unfused", False)):
+                    qps, mis, skip = _bench_queries(
+                        engine, queries, plan=plan, use_skip=True)
+                    rows.append({"group_K": k, "format": fmt, "mode": mode,
+                                 "plan": plan, "qps": qps,
+                                 "decoded_mis": mis,
+                                 "block_skip_rate": skip})
+            # decode-then-intersect baseline for the AND workload: decode
+            # every term's full list to host, intersect with numpy
+            def _baseline(queries=qs["and"], index=index):
+                for _, terms in queries:
+                    docs = [index.terms[t].arr.decode(plan="jnp")
+                            for t in terms]
+                    out = docs[0]
+                    for d in docs[1:]:
+                        out = np.intersect1d(out, d)
+            _baseline()  # compile
+            wall = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                _baseline()
+                wall = min(wall, time.perf_counter() - t0)
+            base_qps = round(n_queries / wall, 2)
+            fused_qps = next(r["qps"] for r in rows
+                             if r["group_K"] == k and r["format"] == fmt
+                             and r["mode"] == "and" and r["plan"] == "fused")
+            rows.append({"group_K": k, "format": fmt, "mode": "and_baseline",
+                         "plan": "decode_then_intersect", "qps": base_qps,
+                         "fused_speedup_vs_baseline":
+                             round(fused_qps / base_qps, 2)})
+    return {"devices": 1, "groups": rows}
+
+
+def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
+    """Per-device-count query sweep (subprocess per count)."""
+    from benchmarks.serving import sweep_device_counts
+
+    return sweep_device_counts("benchmarks.index_query", device_counts,
+                               quick=quick)
+
+
+if __name__ == "__main__":
+    from benchmarks.serving import sweep_main
+
+    sweep_main(run, _measure)

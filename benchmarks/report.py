@@ -109,6 +109,31 @@ def fused_table(rows: list[dict]) -> str:
     return out
 
 
+def index_query_table(device_rows: list[dict]) -> str:
+    """Headline queries/sec table for the --only index section."""
+    out = ("| K | format | mode | plan | queries/s | decoded Mint/s | "
+           "skip rate |\n" + "|" + "---|" * 7 + "\n")
+    for dev in device_rows:
+        for r in dev.get("groups", []):
+            if r["mode"] == "and_baseline":
+                out += ("| {k} | {f} | and | baseline | {q} | — | "
+                        "fused {s}x |\n"
+                        .format(k=r["group_K"], f=r["format"], q=r["qps"],
+                                s=r["fused_speedup_vs_baseline"]))
+            else:
+                out += ("| {k} | {f} | {m} | {p} | {q} | {d} | {s} |\n"
+                        .format(k=r["group_K"], f=r["format"], m=r["mode"],
+                                p=r["plan"], q=r["qps"], d=r["decoded_mis"],
+                                s=r["block_skip_rate"]))
+    engines = [(d["devices"], d["engine"]) for d in device_rows
+               if "engine" in d]
+    if engines:
+        out += "\nSharded engine: " + ", ".join(
+            f"{n} devices → {e['qps']} QPS (p50 {e['p50_ms']} ms)"
+            for n, e in engines) + "\n"
+    return out
+
+
 def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     """Render the headline perf tables from the tracked benchmarks JSON."""
     try:
@@ -122,6 +147,9 @@ def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
                 + decode_kernel_table(d["decode_kernel"]))
     if "fused" in d:
         out += "\n## Fused epilogues\n\n" + fused_table(d["fused"])
+    if "index_query" in d:
+        out += ("\n## Inverted-index queries\n\n"
+                + index_query_table(d["index_query"]))
     if "updated_at" in d:
         out += f"\n(benchmarks.json updated {d['updated_at']})\n"
     return out

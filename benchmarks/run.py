@@ -13,6 +13,9 @@ One benchmark per paper table/figure (+ framework-level extensions):
   fused              — fused vs unfused decode→consume epilogues (+ autotune)
   serving            — sharded decode throughput + ServingEngine QPS/latency
                        at 1/2/8 forced host devices (subprocess per count)
+  index              — inverted-index queries/sec + decoded-ints/sec per
+                       length group: AND/OR/top-k, fused vs unfused vs the
+                       decode-then-intersect baseline, 1/2/8 devices
   roofline           — table from the dry-run artifacts (if present)
 
 Results are written as machine-readable JSON (``--json``, default
@@ -141,7 +144,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="decode|decode_speed|compression|kernel|fused|"
-                         "serving|roofline")
+                         "serving|index|roofline")
     ap.add_argument("--json", default=None,
                     help="output path (default experiments/benchmarks.json; "
                          "--quick runs write the untracked -quick variant so "
@@ -215,6 +218,12 @@ def main():
                   f"ratio={r['ratio_vs_u32']}x (svb {r['svb_ratio_vs_u32']}x) "
                   f"overhead={r['block_overhead']}")
         results["compression_ratio"] = rows
+        print("== posting-list index compression (bits/int vs paper 8..16) ==")
+        idx_rows = compression_ratio.run_posting_index()
+        for r in idx_rows:
+            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
+                  f"(svb {r['svb_bits_per_int']:>5})")
+        results["posting_index"] = idx_rows
         integ = compression_ratio.run_integrations()
         print(f"== framework id-stream compression ==\n  {integ}")
         results["integrations"] = integ
@@ -275,6 +284,34 @@ def main():
                   f"p99={eng['p99_ms']}ms")
         assert not any("error" in r for r in rows), "serving bench failed"
         results["serving"] = rows
+
+    if want("index"):
+        from benchmarks import index_query
+
+        print("== inverted-index queries: AND/OR/top-k, fused vs unfused ==")
+        counts = (1, 2) if args.quick else (1, 2, 8)
+        rows = index_query.run(device_counts=counts, quick=args.quick)
+        for r in rows:
+            if "error" in r:
+                print(f"  devices={r['devices']}: FAILED\n{r['error']}")
+                continue
+            if "engine" in r:
+                eng = r["engine"]
+                print(f"  devices={r['devices']}: engine {eng['qps']} QPS "
+                      f"p50={eng['p50_ms']}ms p99={eng['p99_ms']}ms")
+                continue
+            for g in r["groups"]:
+                if g["mode"] == "and_baseline":
+                    print(f"  K={g['group_K']:>2} {g['format']:>11} "
+                          f"and_baseline qps={g['qps']:>8} "
+                          f"(fused {g['fused_speedup_vs_baseline']}x)")
+                else:
+                    print(f"  K={g['group_K']:>2} {g['format']:>11} "
+                          f"{g['mode']:>5}/{g['plan']:<7} qps={g['qps']:>8} "
+                          f"decoded={g['decoded_mis']:>7} Mis "
+                          f"skip={g['block_skip_rate']}")
+        assert not any("error" in r for r in rows), "index bench failed"
+        results["index_query"] = rows
 
     if want("roofline"):
         from benchmarks import roofline

@@ -77,12 +77,20 @@ def _measure(quick: bool) -> dict:
     return {"devices": n_dev, "decode": decode_rows, "engine": engine_stats}
 
 
-def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
-    """Spawn one measurement process per device count; collect their JSON."""
+def sweep_device_counts(module: str, device_counts, *,
+                        quick: bool = False) -> list[dict]:
+    """Spawn ``python -m <module> --devices N`` per count; collect the JSON.
+
+    jax locks the host-platform device count at first init, so every count
+    needs its own process. Shared by the serving and index-query sweeps —
+    the target module's ``main()`` must accept ``--devices/--quick/--out``
+    and dump its measurement JSON to ``--out``.
+    """
     rows = []
     env_base = {k: v for k, v in os.environ.items()}
+    tag = module.rsplit(".", 1)[-1]
     for n in device_counts:
-        out = f"/tmp/repro-serving-{n}.json"
+        out = f"/tmp/repro-{tag}-{os.getpid()}-{n}.json"
         env = dict(env_base)
         # appended LAST: XLA resolves duplicate flags to the final occurrence,
         # so an inherited --xla_force_host_platform_device_count (e.g. the CI
@@ -90,7 +98,7 @@ def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
         env["XLA_FLAGS"] = (
             env_base.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={n}").strip()
-        cmd = [sys.executable, "-m", "benchmarks.serving",
+        cmd = [sys.executable, "-m", module,
                "--devices", str(n), "--out", out] + (
                    ["--quick"] if quick else [])
         r = subprocess.run(cmd, env=env, capture_output=True, text=True)
@@ -103,18 +111,19 @@ def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
     return rows
 
 
-def main():
+def sweep_main(run_fn, measure_fn):
+    """Shared --devices/--quick/--out CLI for the per-device-count sweeps."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if not args.devices:
-        for row in run(quick=args.quick):
+        for row in run_fn(quick=args.quick):
             print(row)
         return
     # in-process measurement: the parent already set XLA_FLAGS for us
-    result = _measure(args.quick)
+    result = measure_fn(args.quick)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
@@ -122,5 +131,11 @@ def main():
         print(json.dumps(result, indent=1))
 
 
+def run(device_counts=(1, 2, 8), *, quick: bool = False) -> list[dict]:
+    """Per-device-count serving sweep (subprocess per count)."""
+    return sweep_device_counts("benchmarks.serving", device_counts,
+                               quick=quick)
+
+
 if __name__ == "__main__":
-    main()
+    sweep_main(run, _measure)

@@ -296,6 +296,42 @@ class CompressedIntArray:
         leaf changed shape is the caller's concern; sizes stay as declared)."""
         return replace(self, **leaves)
 
+    def slice_blocks(self, start: int, stop: int, *,
+                     pad_to: int | None = None) -> "CompressedIntArray":
+        """Contiguous block range ``[start, stop)`` as a new array.
+
+        Blocks decode independently (per-block ``counts``/``bases`` carry
+        all cross-block state), so any contiguous range is itself a valid
+        compressed array — this is what the inverted index's skip-table
+        pruning decodes instead of whole posting lists (repro.index.query).
+        ``pad_to`` appends count-0 blocks up to a fixed block count so
+        pruned decodes hit a bounded set of jitted shapes. Host-side
+        (numpy) slicing; ``host_enc`` is dropped.
+        """
+        return self.take_blocks(np.arange(start, stop), pad_to=pad_to)
+
+    def take_blocks(self, blocks, *, pad_to: int | None = None
+                    ) -> "CompressedIntArray":
+        """Arbitrary block subset (row gather) as a new array.
+
+        Like :meth:`slice_blocks` but for a non-contiguous block set —
+        what skip-table pruning decodes when the probe set is spread out:
+        only blocks whose docid range contains a probe are gathered, in
+        order, everything else is never decoded. ``pad_to`` appends
+        count-0 blocks to a fixed block count (bounded jitted shapes).
+        """
+        idx = np.asarray(blocks, dtype=np.int64).reshape(-1)
+        names = FORMAT_LEAVES[self.format]
+        leaves = {}
+        for nm in names:
+            a = np.asarray(getattr(self, nm))[idx]
+            if pad_to is not None and a.shape[0] < pad_to:
+                pad = ((0, pad_to - a.shape[0]),) + ((0, 0),) * (a.ndim - 1)
+                a = np.pad(a, pad)
+            leaves[nm] = a
+        return replace(self, host_enc=None,
+                       n=int(leaves["counts"].sum()), **leaves)
+
     # -- decoding ------------------------------------------------------------
     def decode_blocked(self, *, plan="auto"):
         """Decode on device to the padded uint32[n_blocks, block_size] grid.
@@ -320,11 +356,12 @@ class CompressedIntArray:
         if use_kernel is not None:
             plan = warn_use_kernel(use_kernel)
         grid = np.asarray(self.decode_blocked(plan=plan))
-        if self.ragged:  # block b holds list b: concatenate the valid prefixes
-            mask = (np.arange(self.block_size)[None, :]
-                    < np.asarray(self.counts)[:, None])
-            return grid[mask].astype(np.uint32)
-        return grid.reshape(-1)[: self.n].astype(np.uint32)
+        # concatenate each block's valid prefix. (Not a flat [:n] trim —
+        # that silently corrupts outputs when a partial block precedes a
+        # full one, as a non-contiguous take_blocks gather can produce.)
+        mask = (np.arange(self.block_size)[None, :]
+                < np.asarray(self.counts)[:, None])
+        return grid[mask].astype(np.uint32)
 
     def decode_scalar_oracle(self) -> np.ndarray:
         """Byte-at-a-time reference decode (slow; tests/benchmarks only)."""

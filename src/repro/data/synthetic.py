@@ -15,14 +15,27 @@ CLUEWEB_DOCS = 50_000_000  # ClueWeb09 Cat. B document count (paper §V)
 
 def posting_list(rng: np.random.Generator, length: int,
                  universe: int = CLUEWEB_DOCS) -> np.ndarray:
-    """One sorted docid list of `length` distinct ids (uniform over universe)."""
+    """One sorted docid list of `length` distinct ids (uniform over universe).
+
+    Docids are uint32 (< 2^32, the decoders' contract). Short lists sample
+    exactly without replacement; from 2^22 ids up (the paper's K ≥ 22
+    length groups) ``rng.choice(replace=False)``'s O(universe) permutation
+    is too expensive, so the list comes from sorted-gap sampling instead:
+    draw ``length`` ids in the range shrunk by ``length``, sort, and add
+    ``arange`` so every gap is ≥ 1 — O(length) memory, strictly
+    increasing, uniform-ish over sorted distinct samples.
+    """
+    if universe > 1 << 32:
+        raise ValueError("universe must fit in uint32 docids")
     if length >= universe:
-        return np.arange(universe, dtype=np.uint64)
-    # sample without replacement via sorted gaps (O(length)); uniform-ish
-    ids = rng.choice(universe, size=length, replace=False) if length < 1 << 22 else None
-    if ids is None:
-        raise ValueError("list too long")
-    return np.sort(ids).astype(np.uint64)
+        return np.arange(universe, dtype=np.uint32)
+    if length < 1 << 22:
+        ids = rng.choice(universe, size=length, replace=False)
+        return np.sort(ids).astype(np.uint32)
+    # sorted-gap path: y sorted in [0, universe-length] + arange ⇒ distinct
+    y = np.sort(rng.integers(0, universe - length + 1, size=length,
+                             dtype=np.int64))
+    return (y + np.arange(length, dtype=np.int64)).astype(np.uint32)
 
 
 def posting_list_group(rng: np.random.Generator, k: int, n_lists: int,

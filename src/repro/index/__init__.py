@@ -1,0 +1,17 @@
+"""Compressed inverted-index query engine (docs/index.md).
+
+The paper's motivating workload: search engines serving d-gap-compressed
+posting lists. ``builder`` turns per-term sorted docid lists into a
+block-compressed index (VByte or Stream VByte, skip tables per block);
+``query`` runs conjunctive (AND), disjunctive (OR) and top-k scored
+queries as decode→intersect→score pipelines over the existing kernel
+stack — block-level pruning via the skip tables, intersection and scoring
+fused into the decode kernel's ``membership`` / ``bm25_accum`` epilogues.
+"""
+from .builder import InvertedIndex, TermPostings, build_index  # noqa: F401
+from .query import (  # noqa: F401
+    QueryStats,
+    conjunctive,
+    disjunctive,
+    topk,
+)

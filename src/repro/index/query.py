@@ -1,0 +1,349 @@
+"""Boolean and top-k queries over the compressed inverted index.
+
+Every query is a decode→intersect→score pipeline over the kernel stack —
+posting lists are never materialized as whole docid arrays unless they ARE
+the answer (a union's output):
+
+* **Conjunctive (AND)** — terms ordered by document frequency; the rarest
+  term is the *driver* and only its blocks inside the terms' common docid
+  window are decoded (``stream`` epilogue). Its docids become the probe
+  set, processed in fixed-width chunks: for every other term, each probe
+  binary-searches the skip table (``first_doc``/``last_doc``) and only
+  the blocks whose docid range actually contains a probe are gathered —
+  per chunk that is ≤ ``probe_width`` blocks out of the whole list, and
+  every other block is **never decoded**. The ``membership`` epilogue
+  decodes the gathered blocks and emits the chunk's match bitmap
+  in-kernel — the larger list's docids live and die in VMEM. This is
+  small-vs-large galloping intersection with the gallop done on the skip
+  table and the per-tile comparison vectorized on the VPU.
+* **Disjunctive (OR)** — the union is the output, so each term's live
+  blocks are decoded once (no probes to prune against) and merged.
+* **Top-k** — disjunctive top-k (the default) scores term-at-a-time: the
+  union pass already decodes every term's docids, so each term's
+  quantized impact scatters straight onto them (TAAT — no re-decode).
+  Conjunctive top-k (``mode="and"``) is degenerate under tf-free impacts
+  (every candidate is in every term → one constant score, computed
+  directly). Required-term top-k (``mode="driver"``) is the scored DAAT
+  shape: candidates are ``terms[0]``'s postings, and each optional
+  term's impact accumulates per candidate chunk through the fused
+  ``bm25_accum``/``bm25_accum_rows`` epilogues with the same skip-table
+  pruning as AND. Impacts are exact int32, so fused / unfused / sharded /
+  dense / banded runs are bit-identical; ties break by ascending docid.
+
+``plan=`` is forwarded to the dispatch layer, so queries inherit the
+autotuned plan cache, both Pallas/jnp paths, dense and banded cores —
+and, when a term's ``CompressedIntArray`` is block-sharded over a mesh
+(``use_skip=False`` resident-index mode, see ``launch.serve.SearchEngine``),
+the ``shard_map`` block-parallel path. :class:`QueryStats` counts decoded
+vs skipped blocks, which is how tests prove pruning never decodes
+non-overlapping blocks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.vbyte_decode import dispatch
+from repro.kernels.vbyte_decode.ops import normalize_probe
+
+from .builder import InvertedIndex, TermPostings
+
+# maximum probe-set width per membership/scoring pass. Chunks are sized
+# min(pow2(candidates), this), so a rare driver probes each term in ONE
+# dispatch; the cap bounds the [tile, B, P] comparison footprint (and the
+# jitted shape count — pow2 widths only).
+DEFAULT_PROBE_WIDTH = 512
+
+
+@dataclass
+class QueryStats:
+    """Decode accounting for one query (skip-table pruning evidence)."""
+
+    blocks_decoded: int = 0
+    blocks_skipped: int = 0
+    ints_decoded: int = 0  # valid integers in decoded blocks
+    decode_calls: int = 0
+    per_term_decoded: dict = field(default_factory=dict)
+
+    def count(self, term: int, decoded: int, skipped: int, ints: int):
+        self.blocks_decoded += decoded
+        self.blocks_skipped += skipped
+        self.ints_decoded += ints
+        self.decode_calls += 1
+        self.per_term_decoded[term] = (
+            self.per_term_decoded.get(term, 0) + decoded)
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def _overlap_blocks(tp: TermPostings, lo: int, hi: int) -> tuple[int, int]:
+    """Block range ``[i0, i1)`` whose ``[first, last]`` intersects [lo, hi].
+
+    ``first_doc``/``last_doc`` are sorted (postings are), so this is two
+    binary searches — the skip-table gallop.
+    """
+    i0 = int(np.searchsorted(tp.last_doc, lo, side="left"))
+    i1 = int(np.searchsorted(tp.first_doc, hi, side="right"))
+    return i0, max(i1, i0)
+
+
+def _decode_blocks(tp: TermPostings, i0: int, i1: int, *, plan, stats,
+                   use_skip: bool) -> np.ndarray:
+    """Decode blocks ``[i0, i1)`` of one term to sorted uint32 docids."""
+    if not use_skip:
+        i0, i1 = 0, tp.n_blocks
+    if i1 <= i0:
+        return np.zeros(0, np.uint32)
+    if use_skip and (i0, i1) != (0, tp.n_blocks):
+        sub = tp.arr.slice_blocks(i0, i1, pad_to=_pow2(i1 - i0))
+    else:
+        # whole list: decode the resident (possibly sharded) array in
+        # place — slicing would just copy and re-upload every leaf
+        sub = tp.arr
+    if stats is not None:
+        stats.count(tp.term, i1 - i0, tp.n_blocks - (i1 - i0), sub.n)
+    return sub.decode(plan=plan)
+
+
+def _route_probes(tp: TermPostings, chunk: np.ndarray):
+    """Per-probe skip-table gallop: ``(ok mask, block id per hit probe)``.
+
+    Each probe binary-searches ``first_doc``/``last_doc``; a probe that
+    lands between two blocks' docid ranges is in no block at all and is
+    settled without decoding anything. The hit probes each name the single
+    block that can contain them.
+    """
+    pos = np.searchsorted(tp.first_doc, chunk, side="right") - 1
+    ok = pos >= 0
+    ok &= chunk <= tp.last_doc[np.maximum(pos, 0)]
+    return ok, pos[ok]
+
+
+def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
+                probe_width: int, plan, stats, use_skip: bool) -> np.ndarray:
+    """One (term, candidate-chunk) pass: int32 [len(chunk)] per-candidate
+    result — the membership bitmap (``impact=0``), or the bm25 impact
+    contribution (``impact>0`` selects the scoring epilogues).
+
+    With skip pruning, each hit probe gathers its one candidate block and
+    the block-aligned ``*_rows`` epilogue compares probe t against tile t
+    only (O(B) per probe). Without (resident/sharded arrays), the whole
+    list decodes under the broadcast epilogue with the probe set in VMEM.
+    """
+    if use_skip:
+        ok, rows = _route_probes(tp, chunk)
+        if rows.size == 0:  # every probe galloped past: nothing decoded
+            if stats is not None:
+                stats.count(tp.term, 0, tp.n_blocks, 0)
+            return np.zeros(len(chunk), np.int32)
+        uniq = np.unique(rows)
+        res = np.zeros(len(chunk), np.int32)
+        if uniq.size * 2 > rows.size:
+            # mostly-distinct blocks: one gathered row per probe, O(B)
+            # compare against its own tile. Accounting reflects the real
+            # gathered-row work (a block decoded once per probe in it).
+            if stats is not None:
+                stats.count(tp.term, int(rows.size),
+                            tp.n_blocks - int(uniq.size),
+                            int(np.asarray(tp.arr.counts)[rows].sum()))
+            pad = _pow2(rows.size)
+            sub = tp.arr.take_blocks(rows, pad_to=pad)
+            probe = np.full((pad, 1), -1, np.int32)
+            probe[: rows.size, 0] = chunk[ok].astype(np.int32)
+            extras = {"probe": jnp.asarray(probe)}
+            if impact:
+                extras["impact"] = jnp.asarray([[impact]], jnp.int32)
+            out = dispatch.decode(
+                sub, epilogue=("bm25_accum_rows" if impact
+                               else "membership_rows"),
+                epilogue_operands=extras, plan=plan)
+            res[ok] = np.asarray(out)[: rows.size, 0]
+            return res
+        # probes pile into few blocks (short lists): duplicating rows
+        # would re-decode each block once per probe — gather each hit
+        # block ONCE and run the broadcast epilogue over the chunk
+        if stats is not None:
+            stats.count(tp.term, int(uniq.size),
+                        tp.n_blocks - int(uniq.size),
+                        int(np.asarray(tp.arr.counts)[uniq].sum()))
+        sub = tp.arr.take_blocks(uniq, pad_to=_pow2(uniq.size))
+        w = _pow2(len(chunk))
+        extras = {"probe": jnp.asarray(normalize_probe(chunk, w))}
+        if impact:
+            extras["impact"] = jnp.asarray([[impact]], jnp.int32)
+        out = dispatch.decode(
+            sub, epilogue=("bm25_accum" if impact else "membership"),
+            epilogue_operands=extras, plan=plan)
+        res[:] = np.asarray(out).sum(axis=0, dtype=np.int32)[: len(chunk)]
+        return res
+    sub = tp.arr
+    if stats is not None:
+        stats.count(tp.term, tp.n_blocks, 0, sub.n)
+    extras = {"probe": jnp.asarray(normalize_probe(chunk, probe_width))}
+    if impact:
+        extras["impact"] = jnp.asarray([[impact]], jnp.int32)
+    out = dispatch.decode(
+        sub, epilogue=("bm25_accum" if impact else "membership"),
+        epilogue_operands=extras, plan=plan)
+    # a docid lives in exactly one block → summing blocks is exact int32
+    return np.asarray(out).sum(axis=0, dtype=np.int32)[: len(chunk)]
+
+
+def _term_postings(index: InvertedIndex, terms) -> list[TermPostings]:
+    out = []
+    for t in terms:
+        tp = index.terms.get(t)
+        out.append(tp if tp is not None
+                   else TermPostings(term=t, arr=None,
+                                     first_doc=np.zeros(0, np.uint32),
+                                     last_doc=np.zeros(0, np.uint32), df=0))
+    return out
+
+
+def conjunctive(
+    index: InvertedIndex,
+    terms,
+    *,
+    plan="auto",
+    probe_width: int = DEFAULT_PROBE_WIDTH,
+    stats: QueryStats | None = None,
+    use_skip: bool = True,
+) -> np.ndarray:
+    """AND query: sorted uint32 docids present in every term's postings."""
+    if not terms:
+        raise ValueError("conjunctive query needs ≥1 term")
+    # dedup repeated terms: AND(t, t) = t, and each repeat would re-probe
+    tps = sorted(_term_postings(index, dict.fromkeys(terms)),
+                 key=lambda tp: tp.df)
+    if tps[0].df == 0:
+        return np.zeros(0, np.uint32)
+    # common docid window: outside [lo, hi] no doc can be in all terms
+    lo = max(int(tp.first_doc[0]) for tp in tps)
+    hi = min(int(tp.last_doc[-1]) for tp in tps)
+    if lo > hi:
+        return np.zeros(0, np.uint32)
+    driver, rest = tps[0], tps[1:]
+    i0, i1 = _overlap_blocks(driver, lo, hi)
+    cand = _decode_blocks(driver, i0, i1, plan=plan, stats=stats,
+                          use_skip=use_skip)
+    cand = cand[(cand >= lo) & (cand <= hi)]
+    for tp in rest:
+        if cand.size == 0:
+            break
+        w = min(_pow2(cand.size), probe_width)
+        keep = np.zeros(cand.size, bool)
+        for s in range(0, cand.size, w):
+            chunk = cand[s:s + w]
+            hit = _probe_pass(tp, chunk, impact=0, probe_width=w, plan=plan,
+                              stats=stats, use_skip=use_skip)
+            keep[s:s + len(chunk)] = hit.astype(bool)
+        cand = cand[keep]
+    return cand.astype(np.uint32)
+
+
+def disjunctive(
+    index: InvertedIndex,
+    terms,
+    *,
+    plan="auto",
+    stats: QueryStats | None = None,
+    use_skip: bool = True,
+) -> np.ndarray:
+    """OR query: sorted uint32 docids present in any term's postings."""
+    if not terms:
+        raise ValueError("disjunctive query needs ≥1 term")
+    parts = []
+    for tp in _term_postings(index, dict.fromkeys(terms)):  # dedup repeats
+        if tp.df == 0:
+            continue
+        parts.append(_decode_blocks(tp, 0, tp.n_blocks, plan=plan,
+                                    stats=stats, use_skip=use_skip))
+    if not parts:
+        return np.zeros(0, np.uint32)
+    return np.unique(np.concatenate(parts)).astype(np.uint32)
+
+
+def topk(
+    index: InvertedIndex,
+    terms,
+    k: int,
+    *,
+    mode: str = "or",
+    plan="auto",
+    probe_width: int = DEFAULT_PROBE_WIDTH,
+    stats: QueryStats | None = None,
+    use_skip: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k scored query: ``(docids uint32 [≤k], scores int32 [≤k])``.
+
+    Score(d) = Σ over query terms containing d of the term's quantized
+    impact (``InvertedIndex.impact``). ``mode="or"`` (default) is
+    term-at-a-time over the union decode. ``mode="and"`` restricts to the
+    conjunctive candidates — whose scores are then the same constant by
+    definition (every candidate is in every term), computed directly.
+    ``mode="driver"`` is required-term top-k, the genuinely scored DAAT
+    shape: docs containing ``terms[0]``, ranked by total impact over all
+    query terms via the fused ``bm25_accum``/``bm25_accum_rows``
+    epilogues (see module docstring). Results are ordered by (score desc,
+    docid asc) — exact integer ties are deterministic.
+    """
+    if mode == "or":
+        # TAAT: a disjunctive candidate set *contains* every term's
+        # postings, so probing it against each term would re-decode what
+        # the union pass already decoded. Instead each term decodes once
+        # (that decode builds the union) and scatters its impact onto its
+        # own — already decoded — docids. Exact int32, same result.
+        parts = {}
+        for t in dict.fromkeys(terms):
+            tp = index.terms.get(t)
+            if tp is None or tp.df == 0:
+                continue
+            parts[t] = _decode_blocks(tp, 0, tp.n_blocks, plan=plan,
+                                      stats=stats, use_skip=use_skip)
+        if not parts:
+            return np.zeros(0, np.uint32), np.zeros(0, np.int32)
+        cand = np.unique(np.concatenate(list(parts.values())))
+        scores = np.zeros(cand.size, np.int32)
+        for t, docs in parts.items():
+            scores[np.searchsorted(cand, docs)] += index.impact(t)
+    elif mode == "and":
+        # every conjunctive candidate is by definition in every query
+        # term, so the score is the same known constant for all of them —
+        # no scoring decode needed (tf-free impacts; ties → first k docids)
+        cand = conjunctive(index, terms, plan=plan, probe_width=probe_width,
+                           stats=stats, use_skip=use_skip)
+        total = sum(index.impact(t) for t in dict.fromkeys(terms))
+        scores = np.full(cand.size, total, np.int32)
+    elif mode == "driver":
+        # required-term top-k, the real DAAT shape: candidates are the
+        # docs containing terms[0], ranked by total impact over ALL query
+        # terms — per chunk the fused bm25_accum(_rows) epilogue decodes
+        # only skip-gathered blocks of each optional term and emits its
+        # impact contribution in-kernel
+        tp0 = index.terms.get(terms[0])
+        if tp0 is None or tp0.df == 0:
+            return np.zeros(0, np.uint32), np.zeros(0, np.int32)
+        cand = _decode_blocks(tp0, 0, tp0.n_blocks, plan=plan, stats=stats,
+                              use_skip=use_skip)
+        scores = np.full(cand.size, index.impact(terms[0]), np.int32)
+        for t in dict.fromkeys(terms[1:]):
+            tp = index.terms.get(t)
+            if t == terms[0] or tp is None or tp.df == 0:
+                continue
+            imp = index.impact(t)
+            w = min(_pow2(cand.size), probe_width)
+            for s in range(0, cand.size, w):
+                chunk = cand[s:s + w]
+                scores[s:s + len(chunk)] += _probe_pass(
+                    tp, chunk, impact=imp, probe_width=w, plan=plan,
+                    stats=stats, use_skip=use_skip)
+    else:
+        raise ValueError(
+            f"unknown topk mode {mode!r}; expected 'or'/'and'/'driver'")
+    order = np.lexsort((cand, -scores))[:k]
+    return cand[order].astype(np.uint32), scores[order]

@@ -2,6 +2,7 @@ from .dispatch import DecodePlan, autotune, decode, resolve_plan  # noqa: F401
 from .epilogues import EPILOGUES, apply_grid, fused_decode  # noqa: F401
 from .ops import (  # noqa: F401
     normalize_block_meta,
+    normalize_probe,
     stream_vbyte_decode_blocked,
     vbyte_decode_blocked,
 )

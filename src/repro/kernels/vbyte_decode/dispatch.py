@@ -353,7 +353,9 @@ def _build_sharded_fn(mesh, axes: tuple, format: str, epilogue: str,
         out_specs = (spec_block,
                      P(axes, None, None) if multi_query else spec_block)
     else:
-        out_specs = spec_block  # stream / bag_sum / adjacency_rebase: [nb, ·]
+        # stream / bag_sum / adjacency_rebase / membership / bm25_accum:
+        # one [nb, ·] output whose leading dim is the block dim
+        out_specs = spec_block
 
     body = functools.partial(
         _execute, format=format, epilogue=epilogue, block_size=block_size,
@@ -467,6 +469,9 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
                                     block_size=block_size, differential=True)
     operands = arr.device_operands()
     nb = arr.n_blocks
+    probe = jnp.asarray(np.sort(rng.choice(vocab, size=min(128, vocab),
+                                           replace=False))
+                        .astype(np.int32)[None, :])
     extras = {
         "bag_sum": {"table": jnp.asarray(
             rng.standard_normal((vocab, d)).astype(np.float32))},
@@ -476,6 +481,14 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
                 rng.standard_normal((1, d)).astype(np.float32))},
         "adjacency_rebase": {"edge_base": jnp.asarray(
             rng.integers(0, vocab, (nb, block_size)).astype(np.int32))},
+        "membership": {"probe": probe},
+        "bm25_accum": {"probe": probe,
+                       "impact": jnp.asarray([[7]], jnp.int32)},
+        "membership_rows": {"probe": jnp.asarray(
+            rng.integers(0, vocab, (nb, 1)).astype(np.int32))},
+        "bm25_accum_rows": {"probe": jnp.asarray(
+            rng.integers(0, vocab, (nb, 1)).astype(np.int32)),
+            "impact": jnp.asarray([[7]], jnp.int32)},
         "stream": {},
     }
     return operands, extras, arr.bits_per_int
@@ -484,7 +497,9 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
 def autotune(
     *,
     formats=("vbyte", "streamvbyte"),
-    epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase"),
+    epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase",
+                    "membership", "bm25_accum", "membership_rows",
+                    "bm25_accum_rows"),
     block_size: int = 128,
     n_blocks: int = 64,
     vocab: int = 4096,

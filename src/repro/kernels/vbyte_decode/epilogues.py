@@ -32,6 +32,24 @@ Registered epilogues:
                          matrix never exists in HBM.
 * ``adjacency_rebase`` — GNN adjacency: per-edge ``incl - row_gap_base``
                          subtraction fused into the differential epilogue.
+* ``membership``       — inverted-index intersection: decode a postings
+                         tile and emit a match bitmap against a sorted
+                         probe set resident in VMEM, so the larger list's
+                         docids never leave the kernel (repro.index.query).
+* ``bm25_accum``       — inverted-index scoring: decode gaps, rebase to
+                         docids (the differential prefix sum), and emit
+                         each probe candidate's quantized impact
+                         contribution; summing the per-block outputs
+                         accumulates the term's score exactly (int32).
+* ``membership_rows`` / ``bm25_accum_rows`` — the block-aligned variants:
+                         ``probe`` is a **tiled** ``[n_blocks, 1]`` extra
+                         (one candidate per gathered block — the skip
+                         table already knows the only block that can
+                         contain each probe), so the comparison is
+                         O(B) per probe instead of O(n_blocks·B). The
+                         broadcast variants above remain the path for
+                         resident/sharded postings that can't be
+                         probe-gathered on the host.
 """
 from __future__ import annotations
 
@@ -83,6 +101,40 @@ def _dot_score_apply(vals, valid, *, table, query):
 def _adjacency_rebase_apply(vals, valid, *, edge_base):
     # u32 wrap-around subtraction ≡ int32 subtraction, bitwise
     return jnp.where(valid, vals - edge_base, 0)
+
+
+def _membership_apply(vals, valid, *, probe):
+    # probe: int32 [1, P] sorted docids, padded with -1 (never matches —
+    # docids are < 2^31 so decoded vals are non-negative as int32). The
+    # [T, B, P] equality broadcast is the in-VMEM analogue of galloping
+    # intersection: every decoded slot is checked against every probe slot
+    # on the VPU, and the decoded tile never leaves the kernel.
+    p = probe.reshape(-1)
+    v = jnp.where(valid, vals, -1)  # masked slots never match
+    hit = (v[:, :, None] == p[None, None, :]) & (p[None, None, :] >= 0)
+    return hit.any(axis=1).astype(jnp.int32)  # [T, P] match bitmap
+
+
+def _bm25_accum_apply(vals, valid, *, probe, impact):
+    # impact: int32 [1, 1] quantized per-term impact. A docid lives in at
+    # most one block, so summing the [n_blocks, P] output over blocks
+    # accumulates each candidate's exact int32 score contribution.
+    return _membership_apply(vals, valid, probe=probe) * impact.reshape(())
+
+
+def _membership_rows_apply(vals, valid, *, probe):
+    # probe: int32 [T, 1] — block t's single candidate (tiled extra; -1 in
+    # padding rows never matches). One O(B) compare per probe, because the
+    # host-side skip gallop already routed each probe to its only
+    # possible block.
+    v = jnp.where(valid, vals, -1)
+    hit = (v == probe) & (probe >= 0)  # [T, B], probe broadcasts over B
+    return hit.any(axis=1, keepdims=True).astype(jnp.int32)  # [T, 1]
+
+
+def _bm25_accum_rows_apply(vals, valid, *, probe, impact):
+    return (_membership_rows_apply(vals, valid, probe=probe)
+            * impact.reshape(()))
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +201,17 @@ def _dot_score_out(nb, B, bt, extras):
     return (ids, scores), (ids_spec, scores_spec)
 
 
+def _probe_out(nb, B, bt, extras):
+    P = extras["probe"].shape[-1]
+    return (jax.ShapeDtypeStruct((nb, P), jnp.int32),
+            pl.BlockSpec((bt, P), lambda g: (g, 0)))
+
+
+def _rows_out(nb, B, bt, extras):
+    return (jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+            pl.BlockSpec((bt, 1), lambda g: (g, 0)))
+
+
 EPILOGUES = {
     "stream": Epilogue("stream", _stream_apply, out_info=_stream_out),
     "bag_sum": Epilogue("bag_sum", _bag_sum_apply, extras=("table",),
@@ -159,6 +222,17 @@ EPILOGUES = {
         "adjacency_rebase", _adjacency_rebase_apply, extras=("edge_base",),
         tiled_extras=("edge_base",), requires_differential=True,
         out_info=_stream_out),
+    "membership": Epilogue("membership", _membership_apply,
+                           extras=("probe",), out_info=_probe_out),
+    "bm25_accum": Epilogue("bm25_accum", _bm25_accum_apply,
+                           extras=("probe", "impact"), out_info=_probe_out),
+    "membership_rows": Epilogue(
+        "membership_rows", _membership_rows_apply, extras=("probe",),
+        tiled_extras=("probe",), out_info=_rows_out),
+    "bm25_accum_rows": Epilogue(
+        "bm25_accum_rows", _bm25_accum_rows_apply,
+        extras=("probe", "impact"), tiled_extras=("probe",),
+        out_info=_rows_out),
 }
 
 

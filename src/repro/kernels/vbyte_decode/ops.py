@@ -38,6 +38,30 @@ def normalize_block_meta(name: str, x: jax.Array, n_blocks: int) -> jax.Array:
         f"n_blocks={n_blocks}; got {shape}")
 
 
+def normalize_probe(probe, width: int):
+    """Validate + pad a sorted probe set for the membership/bm25 epilogues.
+
+    ``probe`` is a 1-D sorted array of docids (< 2^31 — the in-kernel
+    comparison runs in int32). Returns ``int32 [1, width]`` padded with -1
+    (the never-matches sentinel the epilogue masks out). Raises on unsorted,
+    too-long, or out-of-range inputs instead of silently mis-matching.
+    """
+    import numpy as np
+
+    p = np.asarray(probe).reshape(-1)
+    if p.size > width:
+        raise ValueError(f"probe has {p.size} ids > width={width}")
+    if p.size:
+        if p.min() < 0 or int(p.max()) >= 1 << 31:
+            raise ValueError("probe docids must be in [0, 2^31) — the "
+                             "membership epilogue compares in int32")
+        if np.any(np.diff(p.astype(np.int64)) < 0):
+            raise ValueError("probe must be sorted (non-decreasing)")
+    out = np.full((1, width), -1, np.int32)
+    out[0, : p.size] = p.astype(np.int32)
+    return out
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_size", "differential", "block_tile",
                               "chunk_width", "interpret")

@@ -1,10 +1,13 @@
-"""Serving launcher: LM prefill+decode loop, recsys scoring, and the
-batched compressed serving engine (:class:`ServingEngine`).
+"""Serving launcher: LM prefill+decode loop, recsys scoring, the batched
+compressed serving engine (:class:`ServingEngine`), and the inverted-index
+search engine (:class:`SearchEngine`).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval --reduced
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval \
         --reduced --devices 8 --requests 256
+    PYTHONPATH=src python -m repro.launch.serve --arch search --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --arch search --devices 8
 
 The two-tower arch runs the ``ServingEngine``: a compressed candidate
 corpus resident on the mesh (``CompressedIntArray.shard`` — block dim over
@@ -88,6 +91,19 @@ def serve_recsys(cfg, batch: int):
     dt = (time.time() - t0) / 10
     print(f"scored batch {batch}: {dt*1e3:.2f} ms/request "
           f"(scores shape {scores.shape})")
+
+
+def latency_summary(lat_s, wall_s: float, n_requests: int) -> dict:
+    """Shared QPS + percentile block for the engines' workload reports."""
+    import numpy as np
+
+    lat_ms = np.sort(np.asarray(lat_s)) * 1e3
+    return {
+        "qps": round(n_requests / wall_s, 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "mean_ms": round(float(lat_ms.mean()), 3),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -262,21 +278,169 @@ class ServingEngine:
             lat.extend([dt] * take)  # whole microbatch completes together
             i += take
         wall = time.perf_counter() - t_start
-        lat_ms = np.sort(np.array(lat)) * 1e3
         stats = {
             "n_requests": len(requests),
             "n_devices": (int(self.mesh.devices.size)
                           if self.mesh is not None else 1),
-            "qps": round(len(requests) / wall, 1),
-            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
-            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
-            "mean_ms": round(float(lat_ms.mean()), 3),
+            **latency_summary(lat, wall, len(requests)),
             "top_k": self.top_k,
             "corpus_n": self.corpus.n,
             "buckets": list(self.buckets),
         }
         self._stats.append(stats)
         return stats
+
+
+# ---------------------------------------------------------------------------
+# the inverted-index search engine
+# ---------------------------------------------------------------------------
+class SearchEngine:
+    """Serve boolean / top-k queries from a resident compressed inverted index.
+
+    Architecture (docs/index.md):
+
+    * **Resident index** — per-term compressed posting lists stay loaded
+      for the engine's lifetime. Single-device, the term leaves stay host-
+      side so the skip tables can slice out just the overlapping block
+      ranges before upload (block-level pruning). With a ``mesh``, every
+      term's block dimension is sharded across the devices instead
+      (``CompressedIntArray.shard``) and each query decodes block-parallel
+      under ``shard_map`` where the bytes live (``use_skip=False`` — the
+      mesh replaces host slicing as the parallelism mechanism); the
+      per-shard ``bm25_accum`` partials come back as one sharded
+      ``[n_blocks, P]`` output whose host-side block-sum is the partial
+      top-k merge.
+    * **Microbatched queries** — candidate sets are processed in fixed
+      ``probe_width`` chunks, so every membership/scoring step hits a
+      bounded set of jitted shapes — no steady-state retracing, the
+      query-engine analogue of ``ServingEngine``'s request buckets.
+
+    ``search(terms, mode=...)`` serves one query; ``run_workload`` drives a
+    query list and reports QPS, p50/p99 latency, and decode-vs-skip block
+    accounting.
+    """
+
+    def __init__(self, index, *, mesh=None, axis="data", top_k: int = 10,
+                 plan="auto", probe_width: int = 512):
+        from dataclasses import replace as _dc_replace
+
+        self.index = index
+        self.mesh = mesh
+        self.top_k = top_k
+        self.plan = plan
+        self.probe_width = probe_width
+        self.use_skip = mesh is None
+        if mesh is not None:
+            # shard every term's blocks across the mesh, once, up front
+            sharded = {}
+            for t, tp in index.terms.items():
+                arr = tp.arr.shard(mesh, axis=axis) if tp.df else tp.arr
+                sharded[t] = _dc_replace(tp, arr=arr)
+            self.index = _dc_replace(index, terms=sharded)
+        self._stats = []
+
+    def search(self, terms, mode: str = "and", *, stats=None):
+        """One query. ``mode``: 'and' | 'or' → sorted uint32 docids;
+        'topk' (disjunctive TAAT) | 'topk_driver' (required-term DAAT) →
+        (docids, int32 scores), ordered (score desc, docid asc)."""
+        from repro.index import conjunctive, disjunctive, topk
+
+        kw = dict(plan=self.plan, stats=stats, use_skip=self.use_skip)
+        if mode == "and":
+            return conjunctive(self.index, terms,
+                               probe_width=self.probe_width, **kw)
+        if mode == "or":
+            return disjunctive(self.index, terms, **kw)
+        if mode in ("topk", "topk_driver"):
+            return topk(self.index, terms, self.top_k,
+                        mode=("driver" if mode == "topk_driver" else "or"),
+                        probe_width=self.probe_width, **kw)
+        raise ValueError(f"unknown query mode {mode!r}")
+
+    def warmup(self, queries):
+        """Run each (mode, terms) query once to compile its shapes."""
+        for mode, terms in queries:
+            self.search(terms, mode)
+
+    def run_workload(self, queries) -> dict:
+        """Drive (mode, terms) queries sequentially; aggregate QPS/latency
+        plus the skip-table decode accounting over the whole workload."""
+        from repro.index import QueryStats
+
+        st = QueryStats()
+        lat = []
+        n_results = 0
+        t_start = time.perf_counter()
+        for mode, terms in queries:
+            t0 = time.perf_counter()
+            out = self.search(terms, mode, stats=st)
+            lat.append(time.perf_counter() - t0)
+            n_results += len(out[0] if isinstance(out, tuple) else out)
+        wall = time.perf_counter() - t_start
+        total_blocks = st.blocks_decoded + st.blocks_skipped
+        stats = {
+            "n_queries": len(queries),
+            "n_devices": (int(self.mesh.devices.size)
+                          if self.mesh is not None else 1),
+            **latency_summary(lat, wall, len(queries)),
+            "n_results": int(n_results),
+            "blocks_decoded": st.blocks_decoded,
+            "block_skip_rate": round(st.blocks_skipped / total_blocks, 3)
+                               if total_blocks else 0.0,
+            "ints_decoded": st.ints_decoded,
+            "decoded_ints_per_s": round(st.ints_decoded / wall, 1),
+            "index": self.index.stats(),
+        }
+        self._stats.append(stats)
+        return stats
+
+
+def search_queries(rng, index, n_queries: int, *,
+                   terms_per_query=(1, 2, 3, 5),
+                   modes=("and", "or", "topk", "topk_driver")) -> list:
+    """Synthetic query mix over an index's terms: (mode, terms) pairs."""
+    term_ids = sorted(index.terms)
+    out = []
+    for i in range(n_queries):
+        k = int(rng.choice(terms_per_query))
+        terms = [int(t) for t in
+                 rng.choice(term_ids, size=min(k, len(term_ids)),
+                            replace=False)]
+        out.append((modes[i % len(modes)], terms))
+    return out
+
+
+def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
+                 top_k: int = 10, record: bool = True, seed: int = 0) -> dict:
+    """Build a synthetic posting-list index and drive a query workload."""
+    import numpy as np
+
+    import jax
+
+    from repro.data.synthetic import posting_list_group
+    from repro.index import build_index
+
+    rng = np.random.default_rng(seed)
+    universe = 1 << 22
+    lists = posting_list_group(rng, group_k, n_lists, universe=universe)
+    index = build_index(lists, n_docs=universe)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    print(f"index: {index.n_terms} terms, {index.n_postings} postings, "
+          f"{index.bits_per_int:.2f} bits/int over {n_dev} device(s)")
+
+    engine = SearchEngine(index, mesh=mesh, top_k=top_k)
+    qs = search_queries(rng, index, queries)
+    engine.warmup(qs)  # compile every query's shapes; timing is steady-state
+    stats = engine.run_workload(qs)
+    print(f"served {stats['n_queries']} queries on {stats['n_devices']} "
+          f"device(s): {stats['qps']} QPS, p50 {stats['p50_ms']} ms, "
+          f"p99 {stats['p99_ms']} ms, block skip rate "
+          f"{stats['block_skip_rate']}")
+    if record:
+        path = record_benchmark("search_engine", stats)
+        print(f"recorded -> {path}")
+    return stats
 
 
 def _repo_benchmarks_path() -> str:
@@ -374,6 +538,11 @@ def main():
         ).strip()
 
     # jax must initialize AFTER the device-count flag is set
+    if args.arch == "search":
+        serve_search(queries=args.requests, top_k=args.top_k,
+                     record=not args.no_record)
+        return
+
     from repro.distributed.api import activate_mesh
     from repro.launch.mesh import make_host_mesh
     from repro.models import registry

@@ -1,0 +1,395 @@
+"""Inverted-index query engine vs a numpy brute-force oracle.
+
+Conjunctive / disjunctive / top-k results must be bit-identical to the
+oracle on both formats, dense and banded cores, fused and unfused plans,
+single-device and sharded — and the skip-table decode accounting must
+prove that blocks whose docid range overlaps no probe are never decoded.
+"""
+from collections import Counter
+from functools import reduce
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CompressedIntArray
+from repro.data.synthetic import posting_list
+from repro.index import (QueryStats, build_index, conjunctive, disjunctive,
+                         topk)
+from repro.kernels.vbyte_decode import dispatch, normalize_probe
+from repro.kernels.vbyte_decode.dispatch import DecodePlan
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+FMTS = ["vbyte", "streamvbyte"]
+B = 32  # block size (multiple of 4 for streamvbyte)
+U = 100_000  # docid universe
+
+
+def make_lists(rng, sizes, universe=U):
+    """Per-term sorted distinct docid lists (ragged vs B on purpose)."""
+    return {t: np.sort(rng.choice(universe, size=s, replace=False))
+            .astype(np.uint32) for t, s in enumerate(sizes)}
+
+
+def oracle_and(lists, terms):
+    return reduce(np.intersect1d,
+                  [lists.get(t, np.zeros(0, np.uint32)) for t in terms]
+                  ).astype(np.uint32)
+
+
+def oracle_or(lists, terms):
+    return reduce(np.union1d,
+                  [lists.get(t, np.zeros(0, np.uint32)) for t in terms]
+                  ).astype(np.uint32)
+
+
+def oracle_topk(index, lists, terms, k, mode="or"):
+    c = Counter()
+    for t in dict.fromkeys(terms):
+        for d in lists.get(t, ()):
+            c[int(d)] += index.impact(t)
+    if mode == "and":
+        inter = set(oracle_and(lists, terms).tolist())
+        c = Counter({d: s for d, s in c.items() if d in inter})
+    elif mode == "driver":
+        req = set(np.asarray(lists.get(terms[0], ())).tolist())
+        c = Counter({d: s for d, s in c.items() if d in req})
+    order = sorted(c.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return (np.array([d for d, _ in order], np.uint32),
+            np.array([s for _, s in order], np.int32))
+
+
+def assert_query_matches(index, lists, terms, k=10, **kw):
+    np.testing.assert_array_equal(conjunctive(index, terms, **kw),
+                                  oracle_and(lists, terms))
+    np.testing.assert_array_equal(disjunctive(index, terms, **kw),
+                                  oracle_or(lists, terms))
+    # TAAT union scoring / constant conjunctive / fused DAAT probing
+    for mode in ("or", "and", "driver"):
+        ids, scores = topk(index, terms, k, mode=mode, **kw)
+        eids, escores = oracle_topk(index, lists, terms, k, mode=mode)
+        np.testing.assert_array_equal(ids, eids, err_msg=mode)
+        np.testing.assert_array_equal(scores, escores, err_msg=mode)
+
+
+# ---------------------------------------------------------------------------
+# golden vectors
+# ---------------------------------------------------------------------------
+def test_golden_intersection_union():
+    lists = {0: np.array([3, 40, 41, 127, 128, 900, 4000], np.uint32),
+             1: np.array([40, 127, 129, 900, 5000], np.uint32),
+             2: np.array([1, 40, 900], np.uint32)}
+    idx = build_index(lists, block_size=4, n_docs=10_000)
+    np.testing.assert_array_equal(
+        conjunctive(idx, [0, 1], plan="jnp"),
+        np.array([40, 127, 900], np.uint32))
+    np.testing.assert_array_equal(
+        conjunctive(idx, [0, 1, 2], plan="jnp"),
+        np.array([40, 900], np.uint32))
+    np.testing.assert_array_equal(
+        disjunctive(idx, [1, 2], plan="jnp"),
+        np.array([1, 40, 127, 129, 900, 5000], np.uint32))
+    # single-term queries are the postings themselves
+    np.testing.assert_array_equal(conjunctive(idx, [2], plan="jnp"),
+                                  lists[2])
+    np.testing.assert_array_equal(disjunctive(idx, [2], plan="jnp"),
+                                  lists[2])
+
+
+# ---------------------------------------------------------------------------
+# randomized oracle parity: formats × plans × query widths
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("plan", ["fused", "unfused"])
+def test_boolean_and_topk_vs_oracle(rng, fmt, plan):
+    # ragged sizes (not multiples of B) + a rare term + a dominating term
+    lists = make_lists(rng, (45, 300, 701, 1150, 37))
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    for terms in ([1], [0, 3], [4, 1], [0, 1, 2], [0, 1, 2, 3, 4]):
+        assert_query_matches(idx, lists, terms, plan=plan)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_terms_missing_and_empty(rng, fmt):
+    lists = make_lists(rng, (60, 200))
+    lists[2] = np.zeros(0, np.uint32)  # empty term: one count-0 block
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    assert idx.df(2) == 0 and idx.impact(2) == 0
+    assert conjunctive(idx, [0, 2], plan="jnp").size == 0
+    assert conjunctive(idx, [0, 99], plan="jnp").size == 0  # unknown term
+    np.testing.assert_array_equal(disjunctive(idx, [0, 2, 99], plan="jnp"),
+                                  lists[0])
+    ids, scores = topk(idx, [0, 2, 99], 5, plan="jnp")
+    eids, escores = oracle_topk(idx, lists, [0, 2, 99], 5)
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_topk_ties_deterministic(rng, fmt):
+    """Equal dfs ⇒ equal impacts ⇒ exact score ties, broken by docid asc."""
+    a = np.sort(rng.choice(U, size=64, replace=False)).astype(np.uint32)
+    b = np.sort(rng.choice(U, size=64, replace=False)).astype(np.uint32)
+    lists = {0: a, 1: b}
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    assert idx.impact(0) == idx.impact(1)
+    for k in (3, 10, 500):  # k < #ties, k within, k > all results
+        ids, scores = topk(idx, [0, 1], k, plan="fused")
+        eids, escores = oracle_topk(idx, lists, [0, 1], k)
+        np.testing.assert_array_equal(ids, eids)
+        np.testing.assert_array_equal(scores, escores)
+    # repeated query terms must not double-count impacts
+    ids, scores = topk(idx, [0, 0, 1], 10, plan="fused")
+    eids, escores = oracle_topk(idx, lists, [0, 0, 1], 10)
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+
+
+# ---------------------------------------------------------------------------
+# skip-table pruning: decode-count accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_non_overlapping_blocks_never_decoded(fmt):
+    # term 1 spans two far-apart clusters; term 0 overlaps only cluster 1,
+    # so every cluster-2 block of term 1 must be pruned by the skip table
+    t0 = np.arange(100, 800, 3, dtype=np.uint32)
+    t1 = np.concatenate([np.arange(0, 1500, 2, dtype=np.uint32),
+                         np.arange(60_000, 63_000, 2, dtype=np.uint32)])
+    lists = {0: t0, 1: t1}
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    tp1 = idx.terms[1]
+    overlapping = int(np.sum((tp1.first_doc <= t0[-1])
+                             & (tp1.last_doc >= t0[0])))
+    assert overlapping < tp1.n_blocks  # the scenario is non-trivial
+    st = QueryStats()
+    got = conjunctive(idx, [0, 1], plan="jnp", stats=st)
+    np.testing.assert_array_equal(got, oracle_and(lists, [0, 1]))
+    # term 1 was probed per chunk: cluster-2 blocks never entered a decode
+    assert st.per_term_decoded[1] <= overlapping * \
+        (len(t0) // 128 + 1)  # ≤ overlapping blocks per probe chunk
+    assert st.blocks_skipped > 0
+    # globally disjoint ranges: nothing is decoded at all
+    far = {0: np.arange(0, 900, 2, dtype=np.uint32),
+           1: np.arange(50_000, 51_000, 2, dtype=np.uint32)}
+    idx2 = build_index(far, format=fmt, block_size=B, n_docs=U)
+    st2 = QueryStats()
+    assert conjunctive(idx2, [0, 1], plan="jnp", stats=st2).size == 0
+    assert st2.blocks_decoded == 0 and st2.decode_calls == 0
+
+
+def test_topk_skip_accounting(rng):
+    lists = make_lists(rng, (50, 900))
+    idx = build_index(lists, block_size=B, n_docs=U)
+    st = QueryStats()
+    ids, scores = topk(idx, [0, 1], 10, mode="driver", plan="jnp", stats=st)
+    total = st.blocks_decoded + st.blocks_skipped
+    assert total > 0 and st.blocks_skipped > 0
+    assert st.ints_decoded > 0 and st.decode_calls > 0
+    # DAAT scores genuinely vary: driver docs in both terms outrank
+    # driver-only docs (non-constant expected output for the bm25 path)
+    eids, escores = oracle_topk(idx, lists, [0, 1], 10, mode="driver")
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+
+
+# ---------------------------------------------------------------------------
+# plan-space parity: Pallas kernel, dense vs banded cores
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_kernel_plan_parity(rng, fmt):
+    lists = make_lists(rng, (40, 180), universe=4000)
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=4000)
+    for terms in ([0, 1], [1]):
+        np.testing.assert_array_equal(
+            conjunctive(idx, terms, plan="kernel", probe_width=64),
+            conjunctive(idx, terms, plan="jnp", probe_width=64))
+    for mode in ("or", "and", "driver"):
+        ids_k, sc_k = topk(idx, [0, 1], 7, mode=mode, plan="kernel",
+                           probe_width=64)
+        ids_j, sc_j = topk(idx, [0, 1], 7, mode=mode, plan="jnp",
+                           probe_width=64)
+        np.testing.assert_array_equal(ids_k, ids_j, err_msg=mode)
+        np.testing.assert_array_equal(sc_k, sc_j, err_msg=mode)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_dense_vs_banded_cores(rng, fmt):
+    lists = make_lists(rng, (90, 800, 350))
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    dense = DecodePlan("jnp", True)
+    banded = DecodePlan("jnp", True, chunk=16)
+    for terms in ([0, 1], [0, 1, 2]):
+        np.testing.assert_array_equal(
+            conjunctive(idx, terms, plan=dense),
+            conjunctive(idx, terms, plan=banded))
+        ids_d, sc_d = topk(idx, terms, 9, plan=dense)
+        ids_b, sc_b = topk(idx, terms, 9, plan=banded)
+        np.testing.assert_array_equal(ids_d, ids_b)
+        np.testing.assert_array_equal(sc_d, sc_b)
+        np.testing.assert_array_equal(conjunctive(idx, terms, plan=dense),
+                                      oracle_and(lists, terms))
+
+
+# ---------------------------------------------------------------------------
+# the epilogues themselves (all plans, count-0 blocks, probe padding)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_membership_bm25_epilogue_parity(rng, fmt):
+    vals = np.sort(rng.choice(3000, size=2 * B + 7, replace=False)
+                   ).astype(np.uint64)
+    arr = CompressedIntArray.encode(vals, format=fmt, block_size=B,
+                                    differential=True)
+    ops = {k: np.pad(np.asarray(v),
+                     ((0, 2),) + ((0, 0),) * (np.asarray(v).ndim - 1))
+           for k, v in arr.device_operands().items()}  # + 2 count-0 blocks
+    probe_ids = np.sort(rng.choice(3000, size=50, replace=False))
+    probe = normalize_probe(probe_ids, 64)
+    assert probe.shape == (1, 64) and (probe[0, 50:] == -1).all()
+    outs = {}
+    for plan in ("kernel", "jnp", "unfused"):
+        outs[plan] = np.asarray(dispatch.decode(
+            ops, format=fmt, block_size=B, differential=True,
+            epilogue="membership", epilogue_operands={"probe": probe},
+            plan=plan))
+    for plan, o in outs.items():
+        np.testing.assert_array_equal(o, outs["kernel"], err_msg=plan)
+    hits = outs["jnp"].any(axis=0)[:50]
+    np.testing.assert_array_equal(
+        hits.astype(bool), np.isin(probe_ids, vals.astype(np.int64)))
+    assert not outs["jnp"][:, 50:].any()  # pad probes never match
+    for plan in ("kernel", "jnp", "unfused"):
+        sc = np.asarray(dispatch.decode(
+            ops, format=fmt, block_size=B, differential=True,
+            epilogue="bm25_accum",
+            epilogue_operands={"probe": probe,
+                               "impact": np.asarray([[11]], np.int32)},
+            plan=plan))
+        np.testing.assert_array_equal(
+            sc.sum(axis=0)[:50], hits[:50].astype(np.int32) * 11,
+            err_msg=plan)
+
+
+def test_normalize_probe_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        normalize_probe(np.array([5, 3]), 8)
+    with pytest.raises(ValueError, match="width"):
+        normalize_probe(np.arange(9), 8)
+    with pytest.raises(ValueError, match="2\\^31"):
+        normalize_probe(np.array([1 << 31], np.int64), 8)
+    out = normalize_probe(np.zeros(0, np.uint32), 4)
+    assert (out == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# builder + slice_blocks
+# ---------------------------------------------------------------------------
+def test_builder_validation_and_stats(rng):
+    with pytest.raises(ValueError, match="strictly increasing"):
+        build_index({0: np.array([4, 4, 5], np.uint32)})
+    with pytest.raises(ValueError, match="2\\^31"):
+        build_index({0: np.array([1 << 31], np.uint64)})
+    lists = make_lists(rng, (70, 300))
+    idx = build_index(lists, block_size=B, n_docs=U)
+    s = idx.stats()
+    assert s["n_terms"] == 2 and s["n_postings"] == 370
+    assert 0 < idx.bits_per_int <= 40
+    assert idx.impact(0) > idx.impact(1) > 0  # rarer term scores higher
+    tp = idx.terms[1]
+    assert tp.n_blocks == -(-300 // B)
+    np.testing.assert_array_equal(tp.first_doc[0], lists[1][0])
+    np.testing.assert_array_equal(tp.last_doc[-1], lists[1][-1])
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_slice_blocks_decode(rng, fmt):
+    vals = np.sort(rng.choice(U, size=5 * B + 11, replace=False)
+                   ).astype(np.uint64)
+    arr = CompressedIntArray.encode(vals, format=fmt, block_size=B,
+                                    differential=True)
+    sub = arr.slice_blocks(2, 5)
+    np.testing.assert_array_equal(sub.decode(plan="jnp").astype(np.uint64),
+                                  vals[2 * B: 5 * B])
+    # tail slice (ragged last block) + count-0 padding blocks
+    sub = arr.slice_blocks(4, 6, pad_to=4)
+    assert sub.n_blocks == 4 and sub.n == B + 11
+    np.testing.assert_array_equal(sub.decode(plan="jnp").astype(np.uint64),
+                                  vals[4 * B:])
+    # non-contiguous gather with the partial block FIRST: decode() must
+    # concatenate valid prefixes per block, not flat-trim to n
+    sub = arr.take_blocks([5, 0])
+    np.testing.assert_array_equal(
+        sub.decode(plan="jnp").astype(np.uint64),
+        np.concatenate([vals[5 * B:], vals[:B]]))
+
+
+# ---------------------------------------------------------------------------
+# synthetic posting lists (satellite: long lists + uint32 contract)
+# ---------------------------------------------------------------------------
+def test_posting_list_dtype_and_short(rng):
+    ids = posting_list(rng, 500, universe=10_000)
+    assert ids.dtype == np.uint32 and len(ids) == 500
+    assert np.all(np.diff(ids.astype(np.int64)) > 0)
+
+
+def test_posting_list_long_sorted_gap_path(rng):
+    n = 1 << 22  # the length that used to raise ValueError("list too long")
+    ids = posting_list(rng, n, universe=1 << 23)
+    assert ids.dtype == np.uint32 and len(ids) == n
+    d = np.diff(ids.astype(np.int64))
+    assert d.min() >= 1  # strictly increasing ⇒ distinct
+    assert int(ids[-1]) < 1 << 23
+    # degenerate: length == universe
+    full = posting_list(rng, 16, universe=16)
+    np.testing.assert_array_equal(full, np.arange(16, dtype=np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# SearchEngine: workload driver + sharded parity
+# ---------------------------------------------------------------------------
+def test_search_engine_workload(rng):
+    from repro.launch.serve import SearchEngine, search_queries
+
+    lists = make_lists(rng, (60, 250, 400))
+    idx = build_index(lists, block_size=B, n_docs=U)
+    engine = SearchEngine(idx, top_k=5)
+    qs = search_queries(rng, idx, 9)
+    engine.warmup(qs[:3])
+    stats = engine.run_workload(qs)
+    assert stats["n_queries"] == 9 and stats["qps"] > 0
+    assert stats["blocks_decoded"] > 0
+    assert 0 <= stats["block_skip_rate"] <= 1
+    np.testing.assert_array_equal(engine.search([0, 1], "and"),
+                                  oracle_and(lists, [0, 1]))
+
+
+@multi_device
+@pytest.mark.parametrize("fmt", FMTS)
+def test_sharded_vs_single_parity(rng, fmt):
+    """Sharded engine (block-parallel shard_map, no skip slicing) must be
+    bit-identical to the single-device skip-pruned engine."""
+    from repro.launch.serve import SearchEngine
+
+    lists = make_lists(rng, (45, 300, 700))
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    single = SearchEngine(idx, top_k=8)
+    sharded = SearchEngine(idx, mesh=mesh, top_k=8)
+    assert not sharded.use_skip
+    for terms in ([0, 1], [0, 1, 2]):
+        np.testing.assert_array_equal(sharded.search(terms, "and"),
+                                      single.search(terms, "and"))
+        np.testing.assert_array_equal(sharded.search(terms, "or"),
+                                      single.search(terms, "or"))
+        for mode in ("topk", "topk_driver"):
+            ids_s, sc_s = sharded.search(terms, mode)
+            ids_1, sc_1 = single.search(terms, mode)
+            np.testing.assert_array_equal(ids_s, ids_1, err_msg=mode)
+            np.testing.assert_array_equal(sc_s, sc_1, err_msg=mode)
+        np.testing.assert_array_equal(ids_1,
+                                      oracle_topk(idx, lists, terms, 8,
+                                                  mode="driver")[0])
