@@ -19,8 +19,8 @@ import time
 
 def _bench_queries(engine, queries, *, plan, use_skip, reps=3):
     """Time one query workload (best of ``reps`` passes — shared-host
-    noise swamps single small samples); returns (qps, decoded-ints/s,
-    skip rate)."""
+    noise swamps single small samples); returns a stats row with qps,
+    decoded-Mints/s, and the skip / threshold-pruned block rates."""
     from repro.index import QueryStats
 
     engine.plan = plan
@@ -34,10 +34,18 @@ def _bench_queries(engine, queries, *, plan, use_skip, reps=3):
         for mode, terms in queries:
             engine.search(terms, mode, stats=st)
         wall = min(wall, time.perf_counter() - t0)
-    total = st.blocks_decoded + st.blocks_skipped
-    return (round(len(queries) / wall, 2),
-            round(st.ints_decoded / wall / 1e6, 3),
-            round(st.blocks_skipped / total, 3) if total else 0.0)
+    total = st.blocks_decoded + st.blocks_skipped + st.blocks_pruned
+    postings = st.ints_decoded + st.postings_pruned
+    return {
+        "qps": round(len(queries) / wall, 2),
+        "decoded_mis": round(st.ints_decoded / wall / 1e6, 3),
+        "block_skip_rate": (round(st.blocks_skipped / total, 3)
+                            if total else 0.0),
+        "pruned_block_rate": (round(st.blocks_pruned / total, 3)
+                              if total else 0.0),
+        "pruned_impact_rate": (round(st.postings_pruned / postings, 3)
+                               if postings else 0.0),
+    }
 
 
 def _measure(quick: bool) -> dict:
@@ -45,7 +53,8 @@ def _measure(quick: bool) -> dict:
 
     import jax
 
-    from repro.data.synthetic import posting_list, posting_list_group
+    from repro.data.synthetic import (posting_list, posting_list_group,
+                                      posting_tfs)
     from repro.index import build_index
     from repro.launch.serve import SearchEngine, search_queries
 
@@ -57,7 +66,8 @@ def _measure(quick: bool) -> dict:
         # sharded engine workload: one group, mixed query modes
         k = 8 if quick else 10
         lists = posting_list_group(rng, k, 8, universe=universe)
-        index = build_index(lists, n_docs=universe)
+        tfs = [posting_tfs(rng, len(v)) for v in lists]
+        index = build_index(lists, tfs=tfs, n_docs=universe)
         mesh = jax.make_mesh((n_dev,), ("data",))
         engine = SearchEngine(index, mesh=mesh)
         qs = search_queries(rng, index, 8 if quick else 24)
@@ -72,6 +82,12 @@ def _measure(quick: bool) -> dict:
     groups = (6, 8) if quick else (10, 12, 14, 16, 18)
     n_lists = 4 if quick else 6
     n_queries = 6 if quick else 12
+    # quick's short lists are only 1..4 blocks at bs=128 — too few for
+    # block-max pruning to have anything to skip; shrink the block size
+    # (and the probe/strip width below) so quick lists span several DAAT
+    # strips and the maxscore smoke still proves a nonzero pruned rate
+    block_size = 32 if quick else 128
+    probe_width = 128 if quick else 512
     rows = []
     for k in groups:
         lists = dict(enumerate(
@@ -82,10 +98,25 @@ def _measure(quick: bool) -> dict:
         for t in rare_ids:
             lists[t] = posting_list(rng, int(rng.integers(96, 192)),
                                     universe=universe)
+        # skewed per-posting term frequencies: the impact variance that
+        # gives MaxScore's block-max threshold something to prune
+        tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
         for fmt in ("vbyte", "streamvbyte"):
-            index = build_index(lists, format=fmt, n_docs=universe)
-            engine = SearchEngine(index)
+            index = build_index(lists, tfs=tfs, format=fmt,
+                                block_size=block_size, n_docs=universe)
+            engine = SearchEngine(index, probe_width=probe_width)
             group_ids = sorted(t for t in index.terms if t < 1000)
+            # one shared term mix for the scored modes so the
+            # maxscore-vs-TAAT headline is apples-to-apples. Selective
+            # rare-driver queries (two title terms + one body term) are
+            # MaxScore's target shape: the rare terms' saturated impacts
+            # push θ past the heavy term's bound after a handful of
+            # blocks, so the long list is probed at the candidates and
+            # otherwise never decoded. TAAT decodes it in full either way.
+            scored_terms = [[int(t) for t in
+                            rng.choice(rare_ids, 2, replace=False)]
+                            + [int(rng.choice(group_ids))]
+                            for _ in range(n_queries)]
             qs = {
                 # AND: rare driver ∧ long group list — the shape where
                 # skip-gather + fused membership replace a full decode
@@ -95,10 +126,11 @@ def _measure(quick: bool) -> dict:
                 "or": [("or", [int(t) for t in
                                rng.choice(group_ids, 2, replace=False)])
                        for _ in range(n_queries)],
-                "topk": [("topk", [int(rng.choice(rare_ids))]
-                          + [int(t) for t in
-                             rng.choice(group_ids, 2, replace=False)])
-                         for _ in range(n_queries)],
+                "topk": [("topk", t) for t in scored_terms],
+                # block-max pruned top-k: bit-identical results to "topk",
+                # but blocks/probes under the threshold never decode
+                "topk_maxscore": [("topk_maxscore", t)
+                                  for t in scored_terms],
                 # required-term DAAT: rare driver scored against long
                 # optional terms through the fused bm25 epilogues
                 "topk_driver": [("topk_driver", [int(rng.choice(rare_ids))]
@@ -108,12 +140,21 @@ def _measure(quick: bool) -> dict:
             }
             for mode, queries in qs.items():
                 for plan, fused in (("fused", True), ("unfused", False)):
-                    qps, mis, skip = _bench_queries(
+                    row = _bench_queries(
                         engine, queries, plan=plan, use_skip=True)
                     rows.append({"group_K": k, "format": fmt, "mode": mode,
-                                 "plan": plan, "qps": qps,
-                                 "decoded_mis": mis,
-                                 "block_skip_rate": skip})
+                                 "plan": plan, **row})
+            # the tentpole headline: pruned top-k vs exhaustive TAAT on
+            # the same queries, same index, same (fused) plan
+            ms = next(r for r in rows
+                      if r["group_K"] == k and r["format"] == fmt
+                      and r["mode"] == "topk_maxscore"
+                      and r["plan"] == "fused")
+            taat = next(r for r in rows
+                        if r["group_K"] == k and r["format"] == fmt
+                        and r["mode"] == "topk" and r["plan"] == "fused")
+            ms["maxscore_speedup_vs_taat"] = (
+                round(ms["qps"] / taat["qps"], 2) if taat["qps"] else 0.0)
             # decode-then-intersect baseline for the AND workload: decode
             # every term's full list to host, intersect with numpy
             def _baseline(queries=qs["and"], index=index):
@@ -137,6 +178,13 @@ def _measure(quick: bool) -> dict:
                          "plan": "decode_then_intersect", "qps": base_qps,
                          "fused_speedup_vs_baseline":
                              round(fused_qps / base_qps, 2)})
+    if quick:
+        # CI smoke contract: the skewed synthetic workload must actually
+        # exercise block-max pruning, not just fall through to TAAT
+        assert any(r["mode"] == "topk_maxscore"
+                   and r.get("pruned_block_rate", 0) > 0 for r in rows), \
+            "maxscore quick benchmark pruned no blocks — threshold " \
+            "pruning is not engaging on the skewed workload"
     return {"devices": 1, "groups": rows}
 
 

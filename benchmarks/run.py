@@ -306,10 +306,17 @@ def main():
                           f"and_baseline qps={g['qps']:>8} "
                           f"(fused {g['fused_speedup_vs_baseline']}x)")
                 else:
+                    extra = ""
+                    if g.get("pruned_block_rate"):
+                        extra += (f" pruned={g['pruned_block_rate']}"
+                                  f" (impacts {g['pruned_impact_rate']})")
+                    if "maxscore_speedup_vs_taat" in g:
+                        extra += (f" vs_taat="
+                                  f"{g['maxscore_speedup_vs_taat']}x")
                     print(f"  K={g['group_K']:>2} {g['format']:>11} "
-                          f"{g['mode']:>5}/{g['plan']:<7} qps={g['qps']:>8} "
+                          f"{g['mode']:>13}/{g['plan']:<7} qps={g['qps']:>8} "
                           f"decoded={g['decoded_mis']:>7} Mis "
-                          f"skip={g['block_skip_rate']}")
+                          f"skip={g['block_skip_rate']}" + extra)
         assert not any("error" in r for r in rows), "index bench failed"
         results["index_query"] = rows
 

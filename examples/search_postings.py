@@ -10,15 +10,19 @@ intersect and score inside the decode kernel (docs/index.md).
 """
 import numpy as np
 
-from repro.data.synthetic import posting_list_group
+from repro.data.synthetic import posting_list, posting_list_group, posting_tfs
 from repro.index import QueryStats, build_index, conjunctive, disjunctive, topk
 
 rng = np.random.default_rng(0)
 universe = 1 << 20
 
-# 1. synthetic posting lists, lengths in [2^10, 2^11) — one list per "term"
-lists = posting_list_group(rng, 10, 8, universe=universe)
-index = build_index(lists, n_docs=universe)
+# 1. synthetic posting lists, lengths in [2^10, 2^11) — one list per "term",
+# plus a rare "title" term and per-posting term frequencies (the Zipf skew
+# that gives MaxScore's block-max threshold something to prune)
+lists = dict(enumerate(posting_list_group(rng, 10, 8, universe=universe)))
+lists[100] = posting_list(rng, 160, universe=universe)
+tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
+index = build_index(lists, tfs=tfs, n_docs=universe)
 print(f"index: {index.n_terms} terms, {index.n_postings} postings, "
       f"{index.bits_per_int:.2f} bits/int (d-gap VByte, blocked + skip tables)")
 
@@ -32,14 +36,26 @@ print(f"AND(0, 1): {len(hits)} docs, decoded {stats.blocks_decoded} blocks, "
 # 3. disjunctive (OR): the union is the answer, every live block decodes once
 print(f"OR(0, 1): {len(disjunctive(index, [0, 1]))} docs")
 
-# 4. top-k under quantized BM25-idf impacts (exact int32 accumulation via
-# the fused bm25_accum epilogue — ties break by docid, deterministically)
+# 4. top-k under per-posting quantized BM25 impacts (exact int32
+# accumulation via the fused bm25 epilogues — ties break by docid,
+# deterministically)
 ids, scores = topk(index, [0, 1, 2], k=5)
 print("top-5 of OR(0, 1, 2):")
 for d, s in zip(ids, scores):
     print(f"  doc {d:>8}  score {s}")
 
-# 5. same queries through the resident SearchEngine (microbatched probes;
+# 5. block-max pruned top-k (MaxScore DAAT): bit-identical to mode="or",
+# but blocks whose max impact can't beat the running k-th score are never
+# decoded — QueryStats.blocks_pruned is the evidence (docs/index.md)
+stats = QueryStats()
+mids, mscores = topk(index, [100, 1, 2], k=5, mode="maxscore", stats=stats)
+oids, oscores = topk(index, [100, 1, 2], k=5, mode="or")
+assert np.array_equal(mids, oids) and np.array_equal(mscores, oscores)
+print(f"maxscore top-5 of OR(100, 1, 2): identical results, "
+      f"decoded {stats.blocks_decoded} blocks, pruned {stats.blocks_pruned} "
+      f"({stats.postings_pruned} postings) without decoding")
+
+# 6. same queries through the resident SearchEngine (microbatched probes;
 # pass a mesh to shard every term's blocks across devices instead)
 from repro.launch.serve import SearchEngine, search_queries
 

@@ -45,6 +45,21 @@ def posting_list_group(rng: np.random.Generator, k: int, n_lists: int,
     return [posting_list(rng, int(l), universe) for l in lengths]
 
 
+def posting_tfs(rng: np.random.Generator, length: int, *,
+                zipf_a: float = 1.35, max_tf: int = 64) -> np.ndarray:
+    """Per-posting term frequencies for one list: Zipf-skewed ints ≥ 1.
+
+    Real within-document term counts are heavy-tailed — most postings have
+    tf 1–3, a few documents repeat a term many times. That skew is what
+    gives MaxScore something to prune: per-block ``max_impact`` varies, so
+    whole blocks fall under the top-k threshold (``repro.index.query``).
+    Clipped to ``max_tf`` (BM25 saturation makes larger tfs
+    indistinguishable after quantization anyway).
+    """
+    z = rng.zipf(zipf_a, size=length)
+    return np.minimum(z, max_tf).astype(np.int64)
+
+
 def token_stream(rng: np.random.Generator, n_tokens: int, vocab: int,
                  zipf_a: float = 1.2) -> np.ndarray:
     """Zipf-distributed token ids (LM data-pipeline input)."""

@@ -5,10 +5,17 @@ posting lists. ``builder`` turns per-term sorted docid lists into a
 block-compressed index (VByte or Stream VByte, skip tables per block);
 ``query`` runs conjunctive (AND), disjunctive (OR) and top-k scored
 queries as decode→intersect→score pipelines over the existing kernel
-stack — block-level pruning via the skip tables, intersection and scoring
-fused into the decode kernel's ``membership`` / ``bm25_accum`` epilogues.
+stack — block-level pruning via the skip tables, block-max dynamic
+pruning (``topk(mode="maxscore")`` over per-posting quantized impacts),
+intersection and scoring fused into the decode kernel's ``membership`` /
+``bm25_accum`` / ``bm25_weighted`` epilogues.
 """
-from .builder import InvertedIndex, TermPostings, build_index  # noqa: F401
+from .builder import (  # noqa: F401
+    InvertedIndex,
+    TermPostings,
+    build_index,
+    quantize_impacts,
+)
 from .query import (  # noqa: F401
     QueryStats,
     conjunctive,

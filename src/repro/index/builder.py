@@ -8,22 +8,33 @@ classic skip-block layout), plus a **skip table** (``first_doc`` /
 before anything is decoded, and the document frequency for term ordering
 and impact scoring.
 
-Scoring uses **quantized impacts**: the BM25 idf of each term (the tf-free
-BM25 score of a match — synthetic posting lists carry no term frequencies)
-is quantized to an integer in ``[1, 2^impact_bits)``. Integer impacts make
-score accumulation exact, so fused / unfused / sharded / dense / banded
-query paths are bit-identical by construction (repro.index.query).
+Scoring uses **quantized impacts**: each term's BM25 idf is quantized to
+an integer in ``[1, 2^impact_bits)``. When per-posting term frequencies
+are supplied (``build_index(..., tfs=...)``) the idf impact is scaled by
+the BM25 tf-saturation ``tf·(k1+1)/(tf+k1)`` per posting; the resulting
+per-posting impacts are encoded into a **second blocked
+CompressedIntArray** (``differential=False``) whose blocks align 1:1 with
+the docid-gap blocks, plus a per-block ``max_impact`` column next to the
+skip table — the block-max bound that drives MaxScore pruning
+(repro.index.query, ``topk(mode="maxscore")``). With no tfs every posting
+gets tf=1, whose saturation is exactly 1, so impacts degenerate to the
+tf-free constant and all scoring paths stay bit-identical to the
+constant-impact behaviour. Integer impacts make score accumulation exact,
+so fused / unfused / sharded / dense / banded query paths are
+bit-identical by construction.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core import CompressedIntArray
 
 MAX_DOCID = (1 << 31) - 1  # the membership epilogue compares in int32
+BM25_K1 = 1.2  # tf-saturation shape; sat(1) == 1 exactly, keeping tf-free
+#                indexes bit-identical to the constant-impact scoring
 
 
 @dataclass(frozen=True)
@@ -35,11 +46,20 @@ class TermPostings:
     first_doc: np.ndarray  # uint32 [n_live_blocks] first docid per block
     last_doc: np.ndarray  # uint32 [n_live_blocks] last docid per block
     df: int  # document frequency (= arr.n)
+    impacts: CompressedIntArray | None = None  # per-posting quantized
+    #   impacts, differential=False, blocks aligned 1:1 with ``arr``
+    max_impact: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))  # int32 per block
 
     @property
     def n_blocks(self) -> int:
         """Live (non-padding) blocks — the skip table's length."""
         return len(self.first_doc)
+
+    @property
+    def ub(self) -> int:
+        """Term score upper bound: the largest block-max impact."""
+        return int(self.max_impact.max()) if self.max_impact.size else 0
 
 
 @dataclass
@@ -51,6 +71,7 @@ class InvertedIndex:
     block_size: int
     format: str
     impact_bits: int = 8
+    has_tf: bool = False  # were real per-posting tfs supplied at build?
 
     def __contains__(self, term: int) -> bool:
         return term in self.terms
@@ -65,11 +86,13 @@ class InvertedIndex:
         return math.log1p((self.n_docs - df + 0.5) / (df + 0.5))
 
     def impact(self, term: int) -> int:
-        """Quantized integer impact in ``[1, 2^impact_bits)``.
+        """Quantized tf-free integer impact in ``[1, 2^impact_bits)``.
 
         Scaled against the rarest possible term (df=1) so the full
         quantization range is used; every path that accumulates these
         (fused kernel, jnp grid, numpy oracle) works in exact int32.
+        Per-posting impacts scale this by the BM25 tf saturation
+        (:func:`quantize_impacts`).
         """
         if self.df(term) == 0:
             return 0
@@ -97,7 +120,25 @@ class InvertedIndex:
         return {"n_terms": self.n_terms, "n_postings": self.n_postings,
                 "n_blocks": blocks, "format": self.format,
                 "block_size": self.block_size,
-                "bits_per_int": round(self.bits_per_int, 2)}
+                "bits_per_int": round(self.bits_per_int, 2),
+                "has_tf": self.has_tf}
+
+
+def quantize_impacts(base_impact: int, tfs, impact_bits: int = 8,
+                     k1: float = BM25_K1) -> np.ndarray:
+    """Per-posting quantized impacts: ``base_impact`` (the term's tf-free
+    quantized idf impact) scaled by the BM25 tf saturation
+    ``tf·(k1+1)/(tf+k1)``, rounded and clipped to ``[1, 2^impact_bits)``.
+
+    ``sat(1) == 1`` exactly, so tf=1 postings keep ``base_impact``
+    unchanged — a tf-free index scores bit-identically whether the
+    constant or the per-posting stream is used. Shared by the builder and
+    the test oracles so quantization can never drift between them.
+    """
+    tf = np.asarray(tfs, dtype=np.float64)
+    sat = tf * (k1 + 1.0) / (tf + k1)
+    q = np.rint(base_impact * sat)
+    return np.clip(q, 1, (1 << impact_bits) - 1).astype(np.int32)
 
 
 def _skip_table(docids: np.ndarray, block_size: int):
@@ -111,9 +152,42 @@ def _skip_table(docids: np.ndarray, block_size: int):
     return first.astype(np.uint32), last.astype(np.uint32)
 
 
+def _block_max(vals: np.ndarray, block_size: int) -> np.ndarray:
+    """Per-block max of ``vals`` (int32) — the ``max_impact`` column."""
+    n = len(vals)
+    if n == 0:
+        return np.zeros(0, np.int32)
+    nb = -(-n // block_size)
+    pad = np.zeros(nb * block_size, np.int32)
+    pad[:n] = vals
+    return pad.reshape(nb, block_size).max(axis=1)
+
+
+def _check_docids(term, docs) -> np.ndarray:
+    """Validate one docid list: integer dtype, in-range, increasing."""
+    d = np.asarray(docs).ravel()
+    if d.size == 0:
+        return np.zeros(0, np.uint64)
+    if d.dtype.kind not in "iu":
+        raise ValueError(
+            f"term {term}: docids must have an integer dtype, got "
+            f"{d.dtype} — refusing to silently truncate")
+    if d.dtype.kind == "i" and int(d.min()) < 0:
+        raise ValueError(f"term {term}: docids must be non-negative")
+    d = d.astype(np.uint64)
+    if int(d.max()) > MAX_DOCID:
+        raise ValueError(
+            f"term {term}: docids must be < 2^31 (got {d.max()}) — "
+            "the membership epilogue compares in int32")
+    if np.any(np.diff(d.astype(np.int64)) <= 0):
+        raise ValueError(f"term {term}: docids must be strictly increasing")
+    return d
+
+
 def build_index(
     lists,
     *,
+    tfs=None,
     format: str = "vbyte",
     block_size: int = 128,
     n_docs: int | None = None,
@@ -128,32 +202,63 @@ def build_index(
     coded into a blocked ``CompressedIntArray`` (``differential=True``)
     with a per-block first/last-docid skip table. ``n_docs`` defaults to
     ``max docid + 1``.
+
+    ``tfs`` optionally supplies per-posting term frequencies — a mapping
+    (or parallel sequence) of integer arrays ≥ 1, one per term, aligned
+    with the docid lists. Impacts are quantized per posting
+    (:func:`quantize_impacts`) and encoded into a second blocked
+    ``CompressedIntArray`` plus a per-block ``max_impact`` column; terms
+    without a tfs entry default to tf=1 everywhere (bit-identical to the
+    tf-free constant-impact index).
     """
     if not isinstance(lists, dict):
         lists = dict(enumerate(lists))
-    terms: dict[int, TermPostings] = {}
+    if tfs is not None and not isinstance(tfs, dict):
+        tfs = dict(enumerate(tfs))
+    docids: dict[int, np.ndarray] = {}
+    tf_arrs: dict[int, np.ndarray] = {}
     max_doc = -1
     for term, docs in lists.items():
-        d = np.asarray(docs, dtype=np.uint64).ravel()
+        d = _check_docids(term, docs)
         if d.size:
-            if int(d.max()) > MAX_DOCID:
-                raise ValueError(
-                    f"term {term}: docids must be < 2^31 (got {d.max()}) — "
-                    "the membership epilogue compares in int32")
-            if np.any(np.diff(d.astype(np.int64)) <= 0):
-                raise ValueError(
-                    f"term {term}: docids must be strictly increasing")
             max_doc = max(max_doc, int(d.max()))
-        arr = CompressedIntArray.encode(
-            d, format=format, block_size=block_size, differential=True,
-            stride_multiple=stride_multiple)
-        first, last = _skip_table(d, block_size)
-        terms[term] = TermPostings(term=term, arr=arr, first_doc=first,
-                                   last_doc=last, df=int(d.size))
+        docids[term] = d
+        tf = None if tfs is None else tfs.get(term)
+        if tf is not None:
+            t = np.asarray(tf).ravel()
+            if t.dtype.kind not in "iu":
+                raise ValueError(
+                    f"term {term}: tfs must have an integer dtype, got "
+                    f"{t.dtype}")
+            if t.size != d.size:
+                raise ValueError(
+                    f"term {term}: tfs length {t.size} != docids "
+                    f"length {d.size}")
+            if t.size and int(t.min()) < 1:
+                raise ValueError(f"term {term}: tfs must be ≥ 1")
+            tf_arrs[term] = t.astype(np.int64)
     if n_docs is None:
         n_docs = max_doc + 1 if max_doc >= 0 else 1
     if n_docs > MAX_DOCID + 1:
         raise ValueError("n_docs must be ≤ 2^31")
-    return InvertedIndex(terms=terms, n_docs=int(n_docs),
-                         block_size=block_size, format=format,
-                         impact_bits=impact_bits)
+    index = InvertedIndex(terms={}, n_docs=int(n_docs),
+                          block_size=block_size, format=format,
+                          impact_bits=impact_bits, has_tf=bool(tf_arrs))
+    for term, d in docids.items():
+        arr = CompressedIntArray.encode(
+            d, format=format, block_size=block_size, differential=True,
+            stride_multiple=stride_multiple)
+        first, last = _skip_table(d, block_size)
+        tp = TermPostings(term=term, arr=arr, first_doc=first,
+                          last_doc=last, df=int(d.size))
+        index.terms[term] = tp  # impact() below needs df registered
+        tf = tf_arrs.get(term, np.ones(d.size, np.int64))
+        q = quantize_impacts(index.impact(term), tf, impact_bits)
+        imp = CompressedIntArray.encode(
+            q.astype(np.uint64), format=format, block_size=block_size,
+            differential=False, stride_multiple=stride_multiple)
+        index.terms[term] = TermPostings(
+            term=term, arr=arr, first_doc=first, last_doc=last,
+            df=int(d.size), impacts=imp,
+            max_impact=_block_max(q, block_size))
+    return index

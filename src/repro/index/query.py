@@ -20,23 +20,40 @@ the answer (a union's output):
   blocks are decoded once (no probes to prune against) and merged.
 * **Top-k** — disjunctive top-k (the default) scores term-at-a-time: the
   union pass already decodes every term's docids, so each term's
-  quantized impact scatters straight onto them (TAAT — no re-decode).
-  Conjunctive top-k (``mode="and"``) is degenerate under tf-free impacts
-  (every candidate is in every term → one constant score, computed
-  directly). Required-term top-k (``mode="driver"``) is the scored DAAT
-  shape: candidates are ``terms[0]``'s postings, and each optional
-  term's impact accumulates per candidate chunk through the fused
-  ``bm25_accum``/``bm25_accum_rows`` epilogues with the same skip-table
-  pruning as AND. Impacts are exact int32, so fused / unfused / sharded /
-  dense / banded runs are bit-identical; ties break by ascending docid.
+  quantized impact scatters straight onto them (TAAT — no re-decode;
+  per-posting impact streams decode alongside when the index carries
+  tfs). Conjunctive top-k (``mode="and"``) probes each term's impact
+  per candidate (constant-score shortcut when tf-free). Required-term
+  top-k (``mode="driver"``) is the scored DAAT shape: candidates are
+  ``terms[0]``'s postings, and each optional term's impact accumulates
+  per candidate chunk through the fused ``bm25_accum``/``bm25_accum_rows``
+  (or per-posting ``bm25_weighted``/``bm25_weighted_rows``) epilogues with
+  the same skip-table pruning as AND.
+* **MaxScore (``mode="maxscore"``)** — block-max dynamic-pruned
+  disjunctive top-k, same results as ``mode="or"`` bit-exactly. Terms
+  sort ascending by their score upper bound (``TermPostings.ub``, the
+  largest per-block ``max_impact``); once the running top-k holds k
+  results its k-th score is the threshold θ, and the maximal prefix of
+  terms whose cumulative upper bound ≤ θ becomes **non-essential**: those
+  lists are never strip-decoded, only probed for candidates that can
+  still pass. The remaining **essential** terms advance DAAT in docid
+  strips of ≤ ``probe_width`` postings per term; inside a strip, any
+  block whose ``max_impact`` plus the other terms' upper bounds ≤ θ is
+  **pruned — never decoded** (its docs can't displace an incumbent: ties
+  break toward the smaller docid already held). Candidates surviving the
+  partial-score bound are probed against non-essential terms in
+  descending-bound order, re-checking the bound after each term
+  (``QueryStats.probes_pruned`` counts settlements without decode).
 
-``plan=`` is forwarded to the dispatch layer, so queries inherit the
-autotuned plan cache, both Pallas/jnp paths, dense and banded cores —
-and, when a term's ``CompressedIntArray`` is block-sharded over a mesh
-(``use_skip=False`` resident-index mode, see ``launch.serve.SearchEngine``),
-the ``shard_map`` block-parallel path. :class:`QueryStats` counts decoded
-vs skipped blocks, which is how tests prove pruning never decodes
-non-overlapping blocks.
+Impacts are exact int32, so fused / unfused / sharded / dense / banded
+runs are bit-identical; ties break by ascending docid. ``plan=`` is
+forwarded to the dispatch layer, so queries inherit the autotuned plan
+cache, both Pallas/jnp paths, dense and banded cores — and, when a term's
+``CompressedIntArray`` is block-sharded over a mesh (``use_skip=False``
+resident-index mode, see ``launch.serve.SearchEngine``), the ``shard_map``
+block-parallel path. :class:`QueryStats` counts decoded vs skipped vs
+threshold-pruned blocks, which is how tests prove pruning never decodes
+non-overlapping — or beaten — blocks.
 """
 from __future__ import annotations
 
@@ -56,15 +73,45 @@ from .builder import InvertedIndex, TermPostings
 # dispatch; the cap bounds the [tile, B, P] comparison footprint (and the
 # jitted shape count — pow2 widths only).
 DEFAULT_PROBE_WIDTH = 512
+# MaxScore strip ramp: ×8 per round, capped. One small first strip forms
+# θ cheaply; after that per-dispatch overhead dwarfs per-block decode
+# cost, so the horizon grows fast — a 4096-block list takes ~4 strips,
+# not ~1000. The cap bounds one pull's decode shape (2048 blocks × 128
+# ints = 256Ki ints).
+STRIP_RAMP = 8
+MAX_STRIP_BLOCKS = 2048
+# MaxScore candidate-scoring crossover: at or below this many candidates
+# a term is probed through the row-gathered weighted epilogues (O(B) per
+# probe, probe set in VMEM); above it, bulk decode-and-merge — the probe
+# epilogues pay per gathered row, so strip-sized candidate sets would
+# cost more than decoding every hit block exactly once.
+MERGE_MIN_PROBES = 32
 
 
 @dataclass
 class QueryStats:
-    """Decode accounting for one query (skip-table pruning evidence)."""
+    """Decode accounting for one query (pruning evidence).
+
+    ``blocks_decoded + blocks_skipped`` equals the blocks *considered* by
+    skip-table routing (per decode/probe pass); ``rows_gathered`` counts
+    per-probe row gathers on top (a block gathered once per probe in it —
+    the real decode work of the row-aligned probe path, which is why
+    ``ints_decoded`` follows rows, not unique blocks). ``blocks_pruned`` /
+    ``postings_pruned`` count whole blocks (and the postings inside them)
+    eliminated by the MaxScore threshold — never decoded at all — and
+    ``probes_pruned`` counts (candidate × term) probes settled by the
+    score bound alone. ``impact_ints_decoded`` counts per-posting impact
+    integers decoded from the weight streams (MaxScore / tf-scored paths).
+    """
 
     blocks_decoded: int = 0
     blocks_skipped: int = 0
-    ints_decoded: int = 0  # valid integers in decoded blocks
+    blocks_pruned: int = 0  # MaxScore threshold-pruned, never decoded
+    rows_gathered: int = 0  # per-probe row gathers (duplicates included)
+    ints_decoded: int = 0  # valid integers in decoded blocks/rows
+    impact_ints_decoded: int = 0  # per-posting impacts decoded alongside
+    postings_pruned: int = 0  # postings inside threshold-pruned blocks
+    probes_pruned: int = 0  # candidate×term probes settled by bound alone
     decode_calls: int = 0
     per_term_decoded: dict = field(default_factory=dict)
 
@@ -75,6 +122,10 @@ class QueryStats:
         self.decode_calls += 1
         self.per_term_decoded[term] = (
             self.per_term_decoded.get(term, 0) + decoded)
+
+    def count_pruned(self, blocks: int, postings: int):
+        self.blocks_pruned += blocks
+        self.postings_pruned += postings
 
 
 def _pow2(x: int) -> int:
@@ -110,6 +161,25 @@ def _decode_blocks(tp: TermPostings, i0: int, i1: int, *, plan, stats,
     return sub.decode(plan=plan)
 
 
+def _decode_impact_stream(tp: TermPostings, *, plan, stats) -> np.ndarray:
+    """Decode the whole per-posting impact stream, aligned with the docid
+    list (identical block layout — see builder)."""
+    if stats is not None:
+        stats.impact_ints_decoded += tp.impacts.n
+        stats.decode_calls += 1
+    return tp.impacts.decode(plan=plan).astype(np.int64)
+
+
+def _weight_extras(weights, rows=None, *, pad=None):
+    """Format-tagged weight operands for the ``bm25_weighted*`` epilogues,
+    optionally row-gathered to align with a gathered main stream."""
+    sub = weights if rows is None else weights.take_blocks(rows, pad_to=pad)
+    ops = sub.device_operands()
+    extras = {f"w_{k}": v for k, v in ops.items()
+              if k in ("payload", "control", "data")}
+    return extras, sub.n
+
+
 def _route_probes(tp: TermPostings, chunk: np.ndarray):
     """Per-probe skip-table gallop: ``(ok mask, block id per hit probe)``.
 
@@ -125,10 +195,13 @@ def _route_probes(tp: TermPostings, chunk: np.ndarray):
 
 
 def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
-                probe_width: int, plan, stats, use_skip: bool) -> np.ndarray:
+                probe_width: int, plan, stats, use_skip: bool,
+                weights=None) -> np.ndarray:
     """One (term, candidate-chunk) pass: int32 [len(chunk)] per-candidate
-    result — the membership bitmap (``impact=0``), or the bm25 impact
-    contribution (``impact>0`` selects the scoring epilogues).
+    result — the membership bitmap (``impact=0``), the constant bm25
+    impact contribution (``impact>0``), or the exact per-posting impact
+    contribution (``weights=`` the term's impact ``CompressedIntArray``,
+    decoded in the same tile pass by the ``bm25_weighted*`` epilogues).
 
     With skip pruning, each hit probe gathers its one candidate block and
     the block-aligned ``*_rows`` epilogue compares probe t against tile t
@@ -145,23 +218,32 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
         res = np.zeros(len(chunk), np.int32)
         if uniq.size * 2 > rows.size:
             # mostly-distinct blocks: one gathered row per probe, O(B)
-            # compare against its own tile. Accounting reflects the real
-            # gathered-row work (a block decoded once per probe in it).
+            # compare against its own tile. decoded+skipped covers the
+            # blocks considered exactly once; the per-probe duplicates are
+            # rows_gathered (ints follow rows — the real decode work).
+            row_ints = int(np.asarray(tp.arr.counts)[rows].sum())
             if stats is not None:
-                stats.count(tp.term, int(rows.size),
-                            tp.n_blocks - int(uniq.size),
-                            int(np.asarray(tp.arr.counts)[rows].sum()))
+                stats.count(tp.term, int(uniq.size),
+                            tp.n_blocks - int(uniq.size), row_ints)
+                stats.rows_gathered += int(rows.size)
             pad = _pow2(rows.size)
             sub = tp.arr.take_blocks(rows, pad_to=pad)
             probe = np.full((pad, 1), -1, np.int32)
             probe[: rows.size, 0] = chunk[ok].astype(np.int32)
             extras = {"probe": jnp.asarray(probe)}
-            if impact:
+            if weights is not None:
+                w_extras, w_ints = _weight_extras(weights, rows, pad=pad)
+                extras.update(w_extras)
+                if stats is not None:
+                    stats.impact_ints_decoded += w_ints
+                ep_name = "bm25_weighted_rows"
+            elif impact:
                 extras["impact"] = jnp.asarray([[impact]], jnp.int32)
-            out = dispatch.decode(
-                sub, epilogue=("bm25_accum_rows" if impact
-                               else "membership_rows"),
-                epilogue_operands=extras, plan=plan)
+                ep_name = "bm25_accum_rows"
+            else:
+                ep_name = "membership_rows"
+            out = dispatch.decode(sub, epilogue=ep_name,
+                                  epilogue_operands=extras, plan=plan)
             res[ok] = np.asarray(out)[: rows.size, 0]
             return res
         # probes pile into few blocks (short lists): duplicating rows
@@ -171,27 +253,114 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
             stats.count(tp.term, int(uniq.size),
                         tp.n_blocks - int(uniq.size),
                         int(np.asarray(tp.arr.counts)[uniq].sum()))
-        sub = tp.arr.take_blocks(uniq, pad_to=_pow2(uniq.size))
+        pad = _pow2(uniq.size)
+        sub = tp.arr.take_blocks(uniq, pad_to=pad)
         w = _pow2(len(chunk))
         extras = {"probe": jnp.asarray(normalize_probe(chunk, w))}
-        if impact:
+        if weights is not None:
+            w_extras, w_ints = _weight_extras(weights, uniq, pad=pad)
+            extras.update(w_extras)
+            if stats is not None:
+                stats.impact_ints_decoded += w_ints
+            ep_name = "bm25_weighted"
+        elif impact:
             extras["impact"] = jnp.asarray([[impact]], jnp.int32)
-        out = dispatch.decode(
-            sub, epilogue=("bm25_accum" if impact else "membership"),
-            epilogue_operands=extras, plan=plan)
+            ep_name = "bm25_accum"
+        else:
+            ep_name = "membership"
+        out = dispatch.decode(sub, epilogue=ep_name,
+                              epilogue_operands=extras, plan=plan)
         res[:] = np.asarray(out).sum(axis=0, dtype=np.int32)[: len(chunk)]
         return res
     sub = tp.arr
     if stats is not None:
         stats.count(tp.term, tp.n_blocks, 0, sub.n)
     extras = {"probe": jnp.asarray(normalize_probe(chunk, probe_width))}
-    if impact:
+    if weights is not None:
+        w_extras, w_ints = _weight_extras(weights)
+        extras.update(w_extras)
+        if stats is not None:
+            stats.impact_ints_decoded += w_ints
+        ep_name = "bm25_weighted"
+    elif impact:
         extras["impact"] = jnp.asarray([[impact]], jnp.int32)
-    out = dispatch.decode(
-        sub, epilogue=("bm25_accum" if impact else "membership"),
-        epilogue_operands=extras, plan=plan)
+        ep_name = "bm25_accum"
+    else:
+        ep_name = "membership"
+    out = dispatch.decode(sub, epilogue=ep_name,
+                          epilogue_operands=extras, plan=plan)
     # a docid lives in exactly one block → summing blocks is exact int32
     return np.asarray(out).sum(axis=0, dtype=np.int32)[: len(chunk)]
+
+
+def _merge_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
+                plan, stats, weights=None) -> np.ndarray:
+    """Bulk variant of :func:`_probe_pass` for candidate sets too large to
+    probe: int64 [len(chunk)] per-candidate contribution.
+
+    The probe epilogues pay per probe — a strip's worth of MaxScore
+    candidates against a long non-essential list would gather (and decode)
+    one row per candidate, re-decoding hot blocks hundreds of times across
+    dozens of chunked dispatches. Here each block that contains any
+    candidate decodes exactly once (a single gathered dispatch per stream)
+    and the membership test is a host-side ``searchsorted`` merge —
+    gathered blocks ascend, so their concatenated postings stay sorted.
+    """
+    res = np.zeros(len(chunk), np.int64)
+    ok, rows = _route_probes(tp, chunk)
+    if rows.size == 0:
+        if stats is not None:
+            stats.count(tp.term, 0, tp.n_blocks, 0)
+        return res
+    uniq = np.unique(rows)
+    pad = _pow2(uniq.size)
+    if uniq.size == uniq[-1] - uniq[0] + 1:
+        sub = tp.arr.slice_blocks(uniq[0], uniq[-1] + 1, pad_to=pad)
+        wsub = (weights.slice_blocks(uniq[0], uniq[-1] + 1, pad_to=pad)
+                if weights is not None else None)
+    else:
+        sub = tp.arr.take_blocks(uniq, pad_to=pad)
+        wsub = (weights.take_blocks(uniq, pad_to=pad)
+                if weights is not None else None)
+    if stats is not None:
+        stats.count(tp.term, int(uniq.size),
+                    tp.n_blocks - int(uniq.size), sub.n)
+    docs = sub.decode(plan=plan)
+    if wsub is not None:
+        if stats is not None:
+            stats.impact_ints_decoded += wsub.n
+            stats.decode_calls += 1
+        imps = wsub.decode(plan=plan).astype(np.int64)
+    else:
+        imps = np.full(docs.size, impact, np.int64)
+    pos = np.searchsorted(docs, chunk[ok])
+    pos = np.minimum(pos, docs.size - 1)
+    hit = docs[pos] == chunk[ok]
+    vals = np.where(hit, imps[pos], 0)
+    res[np.flatnonzero(ok)] = vals
+    return res
+
+
+def _score_term(tp: TermPostings, base_impact: int, cand: np.ndarray,
+                sel: np.ndarray, scores: np.ndarray, *, has_tf: bool,
+                probe_width: int, plan, stats):
+    """Add term ``tp``'s exact contribution to ``scores[sel]``: bulk
+    decode-and-merge for strip-sized candidate sets, chunked probe
+    epilogues for small ones (one dispatch per chunk, rows in VMEM)."""
+    wts = tp.impacts if has_tf else None
+    if sel.size > MERGE_MIN_PROBES:
+        scores[sel] += _merge_pass(
+            tp, cand[sel].astype(np.uint32), impact=base_impact,
+            plan=plan, stats=stats, weights=wts)
+        return
+    w = min(_pow2(sel.size), probe_width)
+    for s in range(0, sel.size, w):
+        ch = sel[s:s + w]
+        contrib = _probe_pass(
+            tp, cand[ch].astype(np.uint32), impact=base_impact,
+            probe_width=w, plan=plan, stats=stats, use_skip=True,
+            weights=wts)
+        scores[ch] += contrib.astype(np.int64)
 
 
 def _term_postings(index: InvertedIndex, terms) -> list[TermPostings]:
@@ -268,6 +437,275 @@ def disjunctive(
     return np.unique(np.concatenate(parts)).astype(np.uint32)
 
 
+def _taat_scores(index: InvertedIndex, terms, *, plan, stats, use_skip):
+    """Exhaustive TAAT scoring: every term decodes once (the union pass),
+    its impacts scatter onto its own docids. ``(cand int64, scores int64)``,
+    exact — the reference every pruned path must match bit-for-bit."""
+    parts = {}
+    for t in dict.fromkeys(terms):
+        tp = index.terms.get(t)
+        if tp is None or tp.df == 0:
+            continue
+        parts[t] = _decode_blocks(tp, 0, tp.n_blocks, plan=plan,
+                                  stats=stats, use_skip=use_skip)
+    if not parts:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    cand = np.unique(np.concatenate(list(parts.values()))).astype(np.int64)
+    scores = np.zeros(cand.size, np.int64)
+    for t, docs in parts.items():
+        tp = index.terms[t]
+        if index.has_tf:
+            # per-posting impacts: decode the aligned weight stream
+            imps = _decode_impact_stream(tp, plan=plan, stats=stats)
+            scores[np.searchsorted(cand, docs.astype(np.int64))] += imps
+        else:
+            scores[np.searchsorted(cand, docs.astype(np.int64))] \
+                += index.impact(t)
+    return cand, scores
+
+
+class _StripCursor:
+    """Per-term DAAT cursor for MaxScore: advances block-aligned strips,
+    buffering decoded postings beyond the strip boundary."""
+
+    def __init__(self, tp: TermPostings, has_tf: bool, base_impact: int):
+        self.tp = tp
+        self.has_tf = has_tf
+        self.base_impact = base_impact
+        self.i = 0  # next undecoded block
+        self.buf_docs = np.zeros(0, np.int64)
+        self.buf_imps = np.zeros(0, np.int64)
+
+    @property
+    def exhausted(self) -> bool:
+        return self.i >= self.tp.n_blocks and self.buf_docs.size == 0
+
+    def pull(self, hi: int, theta: int | None, other_ub, *,
+             plan, stats: QueryStats):
+        """Decode this term's postings ≤ ``hi`` (buffer the overshoot).
+
+        Advances over every block starting ≤ hi; with a threshold, any
+        block whose ``max_impact + other_ub ≤ θ`` is pruned — its postings
+        can't displace an incumbent — and never decoded. ``other_ub`` is
+        the other terms' score bound: a scalar, or a callable mapping the
+        block rows under consideration to a per-row bound (MaxScore
+        tightens it per block once seeded terms' docids are known).
+        """
+        tp = self.tp
+        j = int(np.searchsorted(tp.first_doc, hi, side="right"))
+        rows = np.arange(self.i, max(j, self.i))
+        self.i = max(j, self.i)
+        if theta is not None and rows.size:
+            ou = other_ub(rows) if callable(other_ub) else other_ub
+            beaten = (tp.max_impact[rows].astype(np.int64)
+                      + ou <= theta)
+            if beaten.any():
+                stats.count_pruned(
+                    int(beaten.sum()),
+                    int(np.asarray(tp.arr.counts)[rows[beaten]].sum()))
+                rows = rows[~beaten]
+        if rows.size:
+            pad = _pow2(rows.size)
+            contiguous = rows.size == rows[-1] - rows[0] + 1
+            if contiguous:
+                sub = tp.arr.slice_blocks(rows[0], rows[-1] + 1, pad_to=pad)
+                wsub = tp.impacts.slice_blocks(rows[0], rows[-1] + 1,
+                                               pad_to=pad)
+            else:
+                sub = tp.arr.take_blocks(rows, pad_to=pad)
+                wsub = tp.impacts.take_blocks(rows, pad_to=pad)
+            stats.count(tp.term, int(rows.size), 0, sub.n)
+            docs = sub.decode(plan=plan).astype(np.int64)
+            if self.has_tf:
+                stats.impact_ints_decoded += wsub.n
+                stats.decode_calls += 1
+                imps = wsub.decode(plan=plan).astype(np.int64)
+            else:  # tf-free: the stream would decode to this constant
+                imps = np.full(docs.size, self.base_impact, np.int64)
+            docs = np.concatenate([self.buf_docs, docs])
+            imps = np.concatenate([self.buf_imps, imps])
+        else:
+            docs, imps = self.buf_docs, self.buf_imps
+        cut = int(np.searchsorted(docs, hi, side="right"))
+        self.buf_docs, self.buf_imps = docs[cut:], imps[cut:]
+        return docs[:cut], imps[:cut]
+
+
+def _seeded_bound(c, total_ub: int, seed_docs):
+    """Per-row bound on the OTHER terms' contribution to cursor ``c``'s
+    blocks. Seeded terms are fully decoded, so a block containing none of
+    a seeded term's docids provably gets zero from it — subtracting those
+    ubs is what lets θ prune essential blocks even when the global
+    ``Σ other ubs`` (dominated by a rare term's saturated impact) never
+    drops below θ."""
+    loose = total_ub - c.tp.ub
+
+    def bound(rows: np.ndarray) -> np.ndarray:
+        ou = np.full(rows.size, loose, np.int64)
+        f = c.tp.first_doc[rows]
+        l = c.tp.last_doc[rows]
+        for s, ds in seed_docs:
+            if s is c:
+                continue
+            absent = (np.searchsorted(ds, l, side="right")
+                      == np.searchsorted(ds, f, side="left"))
+            ou -= s.tp.ub * absent
+        return ou
+
+    return bound
+
+
+def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
+              stats: QueryStats | None):
+    """Block-max pruned disjunctive top-k (see module docstring).
+
+    Bit-exact with :func:`_taat_scores` + lexsort by construction: every
+    pruning decision only ever discards work whose best case cannot beat
+    the current k-th score (ties lose to the incumbent's smaller docid,
+    and candidates arrive in ascending docid strips)."""
+    st = stats if stats is not None else QueryStats()
+    tps = [tp for tp in _term_postings(index, dict.fromkeys(terms))
+           if tp.df > 0]
+    if not tps:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    for tp in tps:
+        if tp.impacts is None or tp.max_impact.size != tp.n_blocks:
+            raise ValueError(
+                "mode='maxscore' needs per-posting impact streams and the "
+                "max_impact skip column — rebuild the index with "
+                "build_index (optionally passing tfs=)")
+    tps.sort(key=lambda tp: (tp.ub, tp.term))  # ascending upper bound
+    ubs = np.array([tp.ub for tp in tps], np.int64)
+    cum_ub = np.cumsum(ubs)
+    total_ub = int(cum_ub[-1])
+    strip_blocks = max(1, probe_width // index.block_size)
+    cursors = [_StripCursor(tp, index.has_tf, index.impact(tp.term))
+               for tp in tps]
+    top_d = np.zeros(0, np.int64)
+    top_s = np.zeros(0, np.int64)
+    # geometric strip ramp: the first strips stay small so θ forms after
+    # little decode work, then the horizon doubles so long lists take
+    # O(log n_blocks) dispatches instead of O(n_blocks). Block-level
+    # pruning is unaffected — pull() drops beaten blocks row-by-row
+    # against the θ current at pull time, whatever the strip width.
+    strip = strip_blocks
+
+    # seed θ from the tiny lists: a term whose whole list fits in one
+    # strip (a rare title term — highest impacts, handful of blocks) is
+    # decoded and scored exactly up front, probing every other term only
+    # at its few docids. That matures θ before ANY long block streams —
+    # DAAT alone would grow θ in docid order, decoding most of the long
+    # lists before the high-score docs surface. Skipped when no long list
+    # exists: seeding everything would just re-derive TAAT.
+    seeded = np.zeros(0, np.int64)
+    seed_docs = []
+    if max(tp.n_blocks for tp in tps) > 4 * strip_blocks:
+        seeds = [c for c in cursors if c.tp.n_blocks <= strip_blocks]
+        parts = []
+        for c in seeds:
+            docs, imps = c.pull(int(c.tp.last_doc[-1]), None, 0,
+                                plan=plan, stats=st)
+            if docs.size:
+                parts.append((docs, imps))
+                seed_docs.append((c, docs))
+        if parts:
+            cand = np.unique(np.concatenate([p[0] for p in parts]))
+            scores = np.zeros(cand.size, np.int64)
+            for docs, imps in parts:
+                scores[np.searchsorted(cand, docs)] += imps
+            for c in cursors:
+                if c not in seeds:
+                    _score_term(c.tp, c.base_impact, cand,
+                                np.arange(cand.size), scores,
+                                has_tf=index.has_tf,
+                                probe_width=probe_width, plan=plan,
+                                stats=st)
+            order = np.lexsort((cand, -scores))[:k]
+            top_d, top_s = cand[order], scores[order]
+            seeded = cand
+
+    while True:
+        full = top_d.size >= k
+        theta = int(top_s[k - 1]) if full else -1
+        # non-essential prefix: cumulative upper bound can't beat θ alone
+        n_ness = (int(np.searchsorted(cum_ub, theta, side="right"))
+                  if full else 0)
+        if n_ness >= len(tps):
+            break  # Σ all ubs ≤ θ: nothing unseen can enter the top-k
+        ess = cursors[n_ness:]
+        # strip horizon: each essential term advances ≤ strip blocks
+        his = [int(c.tp.last_doc[min(c.i + strip, c.tp.n_blocks) - 1])
+               for c in ess if c.i < c.tp.n_blocks]
+        if his:
+            hi = min(his)
+        else:  # all essential cursors block-exhausted: drain the buffers
+            bufs = [int(c.buf_docs[-1]) for c in ess if c.buf_docs.size]
+            if not bufs:
+                break
+            hi = max(bufs)
+        parts = []
+        for c in ess:
+            docs, imps = c.pull(hi, theta if full else None,
+                                _seeded_bound(c, total_ub, seed_docs)
+                                if seed_docs else total_ub - c.tp.ub,
+                                plan=plan, stats=st)
+            if docs.size:
+                parts.append((docs, imps))
+        if parts:
+            cand = np.unique(np.concatenate([p[0] for p in parts]))
+            if seeded.size:
+                # seeded docs are already exactly scored in the heap —
+                # rescoring them here would duplicate their heap entry
+                pos = np.minimum(np.searchsorted(seeded, cand),
+                                 seeded.size - 1)
+                cand = cand[seeded[pos] != cand]
+            partial = np.zeros(cand.size, np.int64)
+            for docs, imps in parts:
+                pos = np.searchsorted(cand, docs)
+                pos = np.minimum(pos, max(cand.size - 1, 0))
+                ok = (cand[pos] == docs) if cand.size else np.zeros(
+                    docs.size, bool)
+                partial[pos[ok]] += imps[ok]
+            scores = partial
+            # probe non-essential terms in descending-bound order; drop
+            # candidates as soon as even a full remaining bound can't pass
+            ness = sorted((cursors[i] for i in range(n_ness)),
+                          key=lambda c: -c.tp.ub)
+            rem_ub = np.concatenate(
+                [np.cumsum([c.tp.ub for c in reversed(ness)])[::-1],
+                 [0]]) if ness else np.zeros(1, np.int64)
+            alive = np.ones(cand.size, bool)
+            if full:
+                dead = scores + int(rem_ub[0]) <= theta
+                st.probes_pruned += int(dead.sum()) * len(ness)
+                alive &= ~dead
+            for idx, c in enumerate(ness):
+                sel = np.flatnonzero(alive)
+                if sel.size == 0:
+                    break
+                _score_term(c.tp, c.base_impact, cand, sel, scores,
+                            has_tf=index.has_tf, probe_width=probe_width,
+                            plan=plan, stats=st)
+                if full:
+                    dead = alive & (scores + int(rem_ub[idx + 1]) <= theta)
+                    st.probes_pruned += (int(dead.sum())
+                                         * (len(ness) - idx - 1))
+                    alive &= ~dead
+            md = np.concatenate([top_d, cand[alive]])
+            ms = np.concatenate([top_s, scores[alive]])
+            order = np.lexsort((md, -ms))[:k]
+            top_d, top_s = md[order], ms[order]
+        strip = min(strip * STRIP_RAMP, MAX_STRIP_BLOCKS)
+    # everything not yet decoded at exit was eliminated by the threshold
+    for c in cursors:
+        rem = c.tp.n_blocks - c.i
+        if rem > 0:
+            st.count_pruned(
+                rem, int(np.asarray(c.tp.arr.counts)[c.i:].sum()))
+            c.i = c.tp.n_blocks
+    return top_d, top_s
+
+
 def topk(
     index: InvertedIndex,
     terms,
@@ -282,55 +720,67 @@ def topk(
     """Top-k scored query: ``(docids uint32 [≤k], scores int32 [≤k])``.
 
     Score(d) = Σ over query terms containing d of the term's quantized
-    impact (``InvertedIndex.impact``). ``mode="or"`` (default) is
-    term-at-a-time over the union decode. ``mode="and"`` restricts to the
-    conjunctive candidates — whose scores are then the same constant by
-    definition (every candidate is in every term), computed directly.
-    ``mode="driver"`` is required-term top-k, the genuinely scored DAAT
-    shape: docs containing ``terms[0]``, ranked by total impact over all
-    query terms via the fused ``bm25_accum``/``bm25_accum_rows``
-    epilogues (see module docstring). Results are ordered by (score desc,
-    docid asc) — exact integer ties are deterministic.
+    impact at d — per-posting when the index was built with tfs
+    (``InvertedIndex.has_tf``), the tf-free constant otherwise.
+    ``mode="or"`` (default) is term-at-a-time over the union decode.
+    ``mode="maxscore"`` returns bit-identical results via block-max
+    dynamic pruning — whole blocks and candidate probes that cannot beat
+    the running k-th score are never decoded (see module docstring; falls
+    back to exact TAAT for resident/sharded indexes, ``use_skip=False``,
+    whose arrays cannot be block-gathered on the host). ``mode="and"``
+    restricts to the conjunctive candidates. ``mode="driver"`` is
+    required-term top-k, the scored DAAT shape: docs containing
+    ``terms[0]``, ranked by total impact over all query terms via the
+    fused scoring epilogues. Results are ordered by (score desc, docid
+    asc) — exact integer ties are deterministic.
     """
-    if mode == "or":
-        # TAAT: a disjunctive candidate set *contains* every term's
-        # postings, so probing it against each term would re-decode what
-        # the union pass already decoded. Instead each term decodes once
-        # (that decode builds the union) and scatters its impact onto its
-        # own — already decoded — docids. Exact int32, same result.
-        parts = {}
-        for t in dict.fromkeys(terms):
-            tp = index.terms.get(t)
-            if tp is None or tp.df == 0:
-                continue
-            parts[t] = _decode_blocks(tp, 0, tp.n_blocks, plan=plan,
-                                      stats=stats, use_skip=use_skip)
-        if not parts:
-            return np.zeros(0, np.uint32), np.zeros(0, np.int32)
-        cand = np.unique(np.concatenate(list(parts.values())))
-        scores = np.zeros(cand.size, np.int32)
-        for t, docs in parts.items():
-            scores[np.searchsorted(cand, docs)] += index.impact(t)
+    if isinstance(k, bool) or not isinstance(k, (int, np.integer)) or k < 1:
+        raise ValueError(f"k must be a positive integer, got {k!r}")
+    k = int(k)
+    if mode == "or" or (mode == "maxscore" and not use_skip):
+        cand, scores = _taat_scores(index, terms, plan=plan, stats=stats,
+                                    use_skip=use_skip)
+    elif mode == "maxscore":
+        cand, scores = _maxscore(index, terms, k, plan=plan,
+                                 probe_width=probe_width, stats=stats)
     elif mode == "and":
-        # every conjunctive candidate is by definition in every query
-        # term, so the score is the same known constant for all of them —
-        # no scoring decode needed (tf-free impacts; ties → first k docids)
         cand = conjunctive(index, terms, plan=plan, probe_width=probe_width,
-                           stats=stats, use_skip=use_skip)
-        total = sum(index.impact(t) for t in dict.fromkeys(terms))
-        scores = np.full(cand.size, total, np.int32)
+                           stats=stats, use_skip=use_skip).astype(np.int64)
+        if index.has_tf:
+            # per-posting impacts vary per candidate: probe each term's
+            # weight stream over the conjunctive candidates
+            scores = np.zeros(cand.size, np.int64)
+            for t in dict.fromkeys(terms):
+                tp = index.terms.get(t)
+                if tp is None or tp.df == 0 or cand.size == 0:
+                    continue
+                w = min(_pow2(cand.size), probe_width)
+                for s in range(0, cand.size, w):
+                    chunk = cand[s:s + w].astype(np.uint32)
+                    scores[s:s + len(chunk)] += _probe_pass(
+                        tp, chunk, impact=index.impact(t), probe_width=w,
+                        plan=plan, stats=stats, use_skip=use_skip,
+                        weights=tp.impacts).astype(np.int64)
+        else:
+            # every conjunctive candidate is in every query term, so the
+            # tf-free score is one known constant — no scoring decode
+            total = sum(index.impact(t) for t in dict.fromkeys(terms))
+            scores = np.full(cand.size, total, np.int64)
     elif mode == "driver":
         # required-term top-k, the real DAAT shape: candidates are the
         # docs containing terms[0], ranked by total impact over ALL query
-        # terms — per chunk the fused bm25_accum(_rows) epilogue decodes
-        # only skip-gathered blocks of each optional term and emits its
+        # terms — per chunk the fused scoring epilogue decodes only
+        # skip-gathered blocks of each optional term and emits its
         # impact contribution in-kernel
         tp0 = index.terms.get(terms[0])
         if tp0 is None or tp0.df == 0:
             return np.zeros(0, np.uint32), np.zeros(0, np.int32)
         cand = _decode_blocks(tp0, 0, tp0.n_blocks, plan=plan, stats=stats,
-                              use_skip=use_skip)
-        scores = np.full(cand.size, index.impact(terms[0]), np.int32)
+                              use_skip=use_skip).astype(np.int64)
+        if index.has_tf:
+            scores = _decode_impact_stream(tp0, plan=plan, stats=stats)
+        else:
+            scores = np.full(cand.size, index.impact(terms[0]), np.int64)
         for t in dict.fromkeys(terms[1:]):
             tp = index.terms.get(t)
             if t == terms[0] or tp is None or tp.df == 0:
@@ -338,12 +788,15 @@ def topk(
             imp = index.impact(t)
             w = min(_pow2(cand.size), probe_width)
             for s in range(0, cand.size, w):
-                chunk = cand[s:s + w]
+                chunk = cand[s:s + w].astype(np.uint32)
                 scores[s:s + len(chunk)] += _probe_pass(
                     tp, chunk, impact=imp, probe_width=w, plan=plan,
-                    stats=stats, use_skip=use_skip)
+                    stats=stats, use_skip=use_skip,
+                    weights=tp.impacts if index.has_tf else None
+                ).astype(np.int64)
     else:
         raise ValueError(
-            f"unknown topk mode {mode!r}; expected 'or'/'and'/'driver'")
+            f"unknown topk mode {mode!r}; expected "
+            "'or'/'maxscore'/'and'/'driver'")
     order = np.lexsort((cand, -scores))[:k]
-    return cand[order].astype(np.uint32), scores[order]
+    return cand[order].astype(np.uint32), scores[order].astype(np.int32)

@@ -339,16 +339,19 @@ def operand_mesh_axes(operands: dict):
 @functools.lru_cache(maxsize=128)
 def _build_sharded_fn(mesh, axes: tuple, format: str, epilogue: str,
                       block_size: int, differential: bool, plan: DecodePlan,
-                      interpret: bool | None, multi_query: bool):
+                      interpret: bool | None, multi_query: bool,
+                      extra_keys: tuple = ()):
     """jit(shard_map(execute-body)) for one (mesh, workload) — cached so
     repeated serving calls reuse one trace. Exposed for tests (the compiled
-    HLO must contain no cross-device collectives)."""
+    HLO must contain no cross-device collectives). ``extra_keys`` is the
+    actual epilogue-operand key set for this call (epilogues with optional
+    operands, e.g. the format-tagged weight streams, vary it)."""
     ep = eplib.get_epilogue(epilogue)
     spec_block = P(axes, None)
     in_operands = {k: spec_block for k in eplib.FORMAT_OPERANDS[format]}
     in_operands.update(counts=P(axes), bases=P(axes))
     in_extras = {k: (spec_block if k in ep.tiled_extras else P())
-                 for k in ep.extras}
+                 for k in extra_keys}
     if epilogue == "dot_score":
         out_specs = (spec_block,
                      P(axes, None, None) if multi_query else spec_block)
@@ -438,7 +441,8 @@ def decode(
         q = extras["query"] if epilogue == "dot_score" else None
         multi_query = bool(q is not None and q.size // q.shape[-1] > 1)
         fn = _build_sharded_fn(mesh, axes, format, epilogue, block_size,
-                               differential, p, interpret, multi_query)
+                               differential, p, interpret, multi_query,
+                               tuple(sorted(extras)))
         return fn(operands, extras)
     return _execute(operands, extras, format=format, epilogue=epilogue,
                     block_size=block_size, differential=differential,
@@ -472,6 +476,14 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
     probe = jnp.asarray(np.sort(rng.choice(vocab, size=min(128, vocab),
                                            replace=False))
                         .astype(np.int32)[None, :])
+    # aligned per-posting weight stream (quantized impacts): same block
+    # layout as the main array, non-differential, values < 2^8
+    impacts = rng.integers(1, 256, size=n).astype(np.uint64)
+    imp_arr = CompressedIntArray.encode(impacts, format=format,
+                                        block_size=block_size,
+                                        differential=False)
+    w_ops = {f"w_{k}": v for k, v in imp_arr.device_operands().items()
+             if k in ("payload", "control", "data")}
     extras = {
         "bag_sum": {"table": jnp.asarray(
             rng.standard_normal((vocab, d)).astype(np.float32))},
@@ -489,6 +501,9 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
         "bm25_accum_rows": {"probe": jnp.asarray(
             rng.integers(0, vocab, (nb, 1)).astype(np.int32)),
             "impact": jnp.asarray([[7]], jnp.int32)},
+        "bm25_weighted": {"probe": probe, **w_ops},
+        "bm25_weighted_rows": {"probe": jnp.asarray(
+            rng.integers(0, vocab, (nb, 1)).astype(np.int32)), **w_ops},
         "stream": {},
     }
     return operands, extras, arr.bits_per_int
@@ -499,7 +514,8 @@ def autotune(
     formats=("vbyte", "streamvbyte"),
     epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase",
                     "membership", "bm25_accum", "membership_rows",
-                    "bm25_accum_rows"),
+                    "bm25_accum_rows", "bm25_weighted",
+                    "bm25_weighted_rows"),
     block_size: int = 128,
     n_blocks: int = 64,
     vocab: int = 4096,

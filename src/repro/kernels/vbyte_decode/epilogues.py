@@ -41,7 +41,18 @@ Registered epilogues:
                          each probe candidate's quantized impact
                          contribution; summing the per-block outputs
                          accumulates the term's score exactly (int32).
-* ``membership_rows`` / ``bm25_accum_rows`` — the block-aligned variants:
+* ``bm25_weighted``    — per-posting-impact scoring: decode the docid-gap
+                         tile AND its aligned quantized-impact tile in the
+                         same kernel pass (the impact stream is a second
+                         blocked compressed array with identical per-block
+                         counts), and emit each probe candidate's exact
+                         int32 impact contribution. The weight operands are
+                         format-tagged tiled extras — ``w_payload`` (vbyte)
+                         or ``w_control``/``w_data`` (streamvbyte) — so the
+                         weighted epilogue works for both formats under one
+                         name. Drives MaxScore top-k (repro.index.query).
+* ``membership_rows`` / ``bm25_accum_rows`` / ``bm25_weighted_rows`` —
+                         the block-aligned variants:
                          ``probe`` is a **tiled** ``[n_blocks, 1]`` extra
                          (one candidate per gathered block — the skip
                          table already knows the only block that can
@@ -137,6 +148,51 @@ def _bm25_accum_rows_apply(vals, valid, *, probe, impact):
             * impact.reshape(()))
 
 
+def _decode_weight_tile(valid, w_payload=None, w_control=None, w_data=None):
+    """Decode the aligned per-posting weight tile in the same kernel pass.
+
+    The weight stream is a second blocked compressed array whose blocks
+    align 1:1 with the main stream, so the main tile's ``valid`` mask IS
+    the weight tile's count vector — no extra metadata operands. Always
+    decodes dense (``chunk_width=None``): the weight stride is short
+    (impacts are < 2^impact_bits) and ``decode_tile`` is bit-exact for
+    any routing geometry.
+    """
+    if w_payload is None and (w_control is None or w_data is None):
+        raise ValueError(
+            "weighted epilogue needs w_payload (vbyte) or "
+            "w_control + w_data (streamvbyte) extras")
+    counts = valid.astype(jnp.int32).sum(axis=1, keepdims=True)
+    B = valid.shape[-1]
+    if w_payload is not None:
+        w, _ = decode_tile(w_payload, counts, block_size=B, chunk_width=None)
+    else:
+        w, _ = stream_decode_tile(w_control, w_data, counts,
+                                  block_size=B, chunk_width=None)
+    return jnp.where(valid, w, 0)
+
+
+def _bm25_weighted_apply(vals, valid, *, probe,
+                         w_payload=None, w_control=None, w_data=None):
+    # out[t, i] = Σ_j (vals[t,j] == probe[i]) · weight[t,j] — a docid lives
+    # in at most one block, so summing over blocks gives each candidate's
+    # exact int32 per-posting-impact contribution.
+    w = _decode_weight_tile(valid, w_payload, w_control, w_data)
+    p = probe.reshape(-1)
+    v = jnp.where(valid, vals, -1)
+    hit = (v[:, :, None] == p[None, None, :]) & (p[None, None, :] >= 0)
+    return (hit.astype(jnp.int32) * w[:, :, None]).sum(axis=1)  # [T, P]
+
+
+def _bm25_weighted_rows_apply(vals, valid, *, probe,
+                              w_payload=None, w_control=None, w_data=None):
+    # probe: int32 [T, 1] — block t's single candidate (see *_rows above).
+    w = _decode_weight_tile(valid, w_payload, w_control, w_data)
+    v = jnp.where(valid, vals, -1)
+    hit = (v == probe) & (probe >= 0)  # [T, B]
+    return (hit.astype(jnp.int32) * w).sum(axis=1, keepdims=True)  # [T, 1]
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -157,18 +213,26 @@ class Epilogue:
     name: str
     apply: Callable[..., Any]
     extras: tuple[str, ...] = ()
+    optional_extras: tuple[str, ...] = ()  # e.g. format-tagged weight operands
     tiled_extras: tuple[str, ...] = ()  # extras sliced per tile like the grid
     requires_differential: bool | None = None  # None = either
     # (n_blocks, block_size, block_tile, extras dict) -> (out_shape, out_spec)
     # — single structs or tuples of structs for multi-output epilogues
     out_info: Callable[..., tuple] = None
 
+    def extra_names(self, extras: dict) -> tuple[str, ...]:
+        """Operand order for this call: required, then present optionals."""
+        return self.extras + tuple(k for k in self.optional_extras
+                                   if k in extras)
+
     def check_extras(self, extras: dict) -> None:
         missing = [k for k in self.extras if k not in extras]
-        extra = [k for k in extras if k not in self.extras]
+        allowed = set(self.extras) | set(self.optional_extras)
+        extra = [k for k in extras if k not in allowed]
         if missing or extra:
             raise ValueError(
-                f"epilogue {self.name!r} takes operands {self.extras}; "
+                f"epilogue {self.name!r} takes operands {self.extras} "
+                f"(+ optional {self.optional_extras}); "
                 f"missing {missing}, unexpected {extra}")
 
     def check(self, differential: bool, extras: dict) -> None:
@@ -233,6 +297,16 @@ EPILOGUES = {
         "bm25_accum_rows", _bm25_accum_rows_apply,
         extras=("probe", "impact"), tiled_extras=("probe",),
         out_info=_rows_out),
+    "bm25_weighted": Epilogue(
+        "bm25_weighted", _bm25_weighted_apply, extras=("probe",),
+        optional_extras=("w_payload", "w_control", "w_data"),
+        tiled_extras=("w_payload", "w_control", "w_data"),
+        out_info=_probe_out),
+    "bm25_weighted_rows": Epilogue(
+        "bm25_weighted_rows", _bm25_weighted_rows_apply, extras=("probe",),
+        optional_extras=("w_payload", "w_control", "w_data"),
+        tiled_extras=("probe", "w_payload", "w_control", "w_data"),
+        out_info=_rows_out),
 }
 
 
@@ -288,7 +362,7 @@ def fused_decode_pallas(
                          f"block_tile={block_tile}")
     grid = (nb // block_tile,)
     n_fmt = len(fmt_arrays)
-    extra_names = ep.extras
+    extra_names = ep.extra_names(extras)
 
     fmt_specs = [pl.BlockSpec((block_tile, a.shape[1]), lambda g: (g, 0))
                  for a in fmt_arrays]

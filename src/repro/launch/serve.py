@@ -331,17 +331,25 @@ class SearchEngine:
         self.probe_width = probe_width
         self.use_skip = mesh is None
         if mesh is not None:
-            # shard every term's blocks across the mesh, once, up front
+            # shard every term's blocks across the mesh, once, up front —
+            # the per-posting impact stream too (same block layout, so the
+            # weighted scoring epilogues see aligned shards)
             sharded = {}
             for t, tp in index.terms.items():
-                arr = tp.arr.shard(mesh, axis=axis) if tp.df else tp.arr
-                sharded[t] = _dc_replace(tp, arr=arr)
+                if tp.df:
+                    arr = tp.arr.shard(mesh, axis=axis)
+                    imp = (tp.impacts.shard(mesh, axis=axis)
+                           if tp.impacts is not None else None)
+                else:
+                    arr, imp = tp.arr, tp.impacts
+                sharded[t] = _dc_replace(tp, arr=arr, impacts=imp)
             self.index = _dc_replace(index, terms=sharded)
         self._stats = []
 
     def search(self, terms, mode: str = "and", *, stats=None):
         """One query. ``mode``: 'and' | 'or' → sorted uint32 docids;
-        'topk' (disjunctive TAAT) | 'topk_driver' (required-term DAAT) →
+        'topk' (disjunctive TAAT) | 'topk_maxscore' (block-max pruned,
+        bit-identical results) | 'topk_driver' (required-term DAAT) →
         (docids, int32 scores), ordered (score desc, docid asc)."""
         from repro.index import conjunctive, disjunctive, topk
 
@@ -351,9 +359,10 @@ class SearchEngine:
                                probe_width=self.probe_width, **kw)
         if mode == "or":
             return disjunctive(self.index, terms, **kw)
-        if mode in ("topk", "topk_driver"):
-            return topk(self.index, terms, self.top_k,
-                        mode=("driver" if mode == "topk_driver" else "or"),
+        if mode in ("topk", "topk_driver", "topk_maxscore"):
+            sub = {"topk": "or", "topk_driver": "driver",
+                   "topk_maxscore": "maxscore"}[mode]
+            return topk(self.index, terms, self.top_k, mode=sub,
                         probe_width=self.probe_width, **kw)
         raise ValueError(f"unknown query mode {mode!r}")
 
@@ -377,7 +386,11 @@ class SearchEngine:
             lat.append(time.perf_counter() - t0)
             n_results += len(out[0] if isinstance(out, tuple) else out)
         wall = time.perf_counter() - t_start
-        total_blocks = st.blocks_decoded + st.blocks_skipped
+        # blocks considered = decoded + skip-table-skipped + threshold-
+        # pruned (the QueryStats invariant the accounting tests prove)
+        total_blocks = (st.blocks_decoded + st.blocks_skipped
+                        + st.blocks_pruned)
+        total_postings = st.ints_decoded + st.postings_pruned
         stats = {
             "n_queries": len(queries),
             "n_devices": (int(self.mesh.devices.size)
@@ -387,7 +400,14 @@ class SearchEngine:
             "blocks_decoded": st.blocks_decoded,
             "block_skip_rate": round(st.blocks_skipped / total_blocks, 3)
                                if total_blocks else 0.0,
+            "pruned_block_rate": round(st.blocks_pruned / total_blocks, 3)
+                                 if total_blocks else 0.0,
+            "pruned_impact_rate": round(st.postings_pruned / total_postings,
+                                        3) if total_postings else 0.0,
+            "probes_pruned": st.probes_pruned,
+            "rows_gathered": st.rows_gathered,
             "ints_decoded": st.ints_decoded,
+            "impact_ints_decoded": st.impact_ints_decoded,
             "decoded_ints_per_s": round(st.ints_decoded / wall, 1),
             "index": self.index.stats(),
         }
@@ -397,7 +417,8 @@ class SearchEngine:
 
 def search_queries(rng, index, n_queries: int, *,
                    terms_per_query=(1, 2, 3, 5),
-                   modes=("and", "or", "topk", "topk_driver")) -> list:
+                   modes=("and", "or", "topk", "topk_driver",
+                          "topk_maxscore")) -> list:
     """Synthetic query mix over an index's terms: (mode, terms) pairs."""
     term_ids = sorted(index.terms)
     out = []
@@ -417,13 +438,14 @@ def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
 
     import jax
 
-    from repro.data.synthetic import posting_list_group
+    from repro.data.synthetic import posting_list_group, posting_tfs
     from repro.index import build_index
 
     rng = np.random.default_rng(seed)
     universe = 1 << 22
     lists = posting_list_group(rng, group_k, n_lists, universe=universe)
-    index = build_index(lists, n_docs=universe)
+    tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
+    index = build_index(lists, tfs=tfs, n_docs=universe)
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
     print(f"index: {index.n_terms} terms, {index.n_postings} postings, "
@@ -436,7 +458,8 @@ def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
     print(f"served {stats['n_queries']} queries on {stats['n_devices']} "
           f"device(s): {stats['qps']} QPS, p50 {stats['p50_ms']} ms, "
           f"p99 {stats['p99_ms']} ms, block skip rate "
-          f"{stats['block_skip_rate']}")
+          f"{stats['block_skip_rate']}, pruned block rate "
+          f"{stats['pruned_block_rate']}")
     if record:
         path = record_benchmark("search_engine", stats)
         print(f"recorded -> {path}")

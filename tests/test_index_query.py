@@ -14,9 +14,9 @@ import pytest
 import jax
 
 from repro.core import CompressedIntArray
-from repro.data.synthetic import posting_list
+from repro.data.synthetic import posting_list, posting_tfs
 from repro.index import (QueryStats, build_index, conjunctive, disjunctive,
-                         topk)
+                         quantize_impacts, topk)
 from repro.kernels.vbyte_decode import dispatch, normalize_probe
 from repro.kernels.vbyte_decode.dispatch import DecodePlan
 
@@ -346,6 +346,210 @@ def test_posting_list_long_sorted_gap_path(rng):
     # degenerate: length == universe
     full = posting_list(rng, 16, universe=16)
     np.testing.assert_array_equal(full, np.arange(16, dtype=np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# per-posting impacts + block-max pruned top-k (mode="maxscore")
+# ---------------------------------------------------------------------------
+def make_tfs(rng, lists):
+    return {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
+
+
+def oracle_topk_weighted(index, lists, tfs, terms, k):
+    """Weighted TAAT oracle: per-posting quantized impacts, numpy only."""
+    c = Counter()
+    for t in dict.fromkeys(terms):
+        docs = lists.get(t)
+        if docs is None or len(docs) == 0 or t not in index:
+            continue
+        tf = tfs.get(t, np.ones(len(docs), np.int64))
+        q = quantize_impacts(index.impact(t), tf, index.impact_bits)
+        for d, s in zip(docs, q):
+            c[int(d)] += int(s)
+    order = sorted(c.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return (np.array([d for d, _ in order], np.uint32),
+            np.array([s for _, s in order], np.int32))
+
+
+def test_impacts_stream_roundtrip_and_block_max(rng):
+    lists = make_lists(rng, (40, 500))
+    tfs = make_tfs(rng, lists)
+    idx = build_index(lists, tfs=tfs, block_size=B, n_docs=U)
+    assert idx.has_tf and idx.stats()["has_tf"]
+    for t, docs in lists.items():
+        tp = idx.terms[t]
+        q = quantize_impacts(idx.impact(t), tfs[t], idx.impact_bits)
+        np.testing.assert_array_equal(
+            tp.impacts.decode(plan="jnp").astype(np.int32), q)
+        # impacts blocks align 1:1 with the docid blocks
+        assert tp.impacts.n_blocks == tp.n_blocks
+        assert tp.impacts.block_size == tp.arr.block_size
+        nb = tp.n_blocks
+        want = [int(q[b * B:(b + 1) * B].max()) for b in range(nb)]
+        np.testing.assert_array_equal(tp.max_impact, want)
+        assert tp.ub == max(want)
+    # tf-free build degenerates to the constant impact (sat(1) == 1)
+    plain = build_index(lists, block_size=B, n_docs=U)
+    assert not plain.has_tf
+    for t in lists:
+        tp = plain.terms[t]
+        assert (tp.impacts.decode(plan="jnp") == plain.impact(t)).all()
+        assert tp.ub == plain.impact(t)
+
+
+def test_topk_k_validation(rng):
+    lists = make_lists(rng, (30, 60))
+    idx = build_index(lists, block_size=B, n_docs=U)
+    for bad in (0, -1, -7, 1.5, 2.0, True, False, "3", None):
+        with pytest.raises(ValueError, match="positive integer"):
+            topk(idx, [0, 1], bad)
+    # numpy integers are fine (np.argmax etc. produce them)
+    ids, _ = topk(idx, [0, 1], np.int64(3), plan="jnp")
+    assert ids.size == 3
+
+
+def test_builder_rejects_non_integer_inputs(rng):
+    with pytest.raises(ValueError, match="integer dtype"):
+        build_index({0: np.array([1.0, 2.0, 4.0])})
+    with pytest.raises(ValueError, match="integer dtype"):
+        build_index({0: np.array([1, 2], np.uint32)},
+                    tfs={0: np.array([1.0, 2.0])})
+    with pytest.raises(ValueError, match="non-negative"):
+        build_index({0: np.array([-3, 5], np.int64)})
+    with pytest.raises(ValueError, match="≥ 1"):
+        build_index({0: np.array([1, 2], np.uint32)},
+                    tfs={0: np.array([0, 2])})
+    with pytest.raises(ValueError, match="length"):
+        build_index({0: np.array([1, 2], np.uint32)},
+                    tfs={0: np.array([1, 2, 3])})
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("plan", ["fused", "unfused"])
+def test_maxscore_vs_oracle(rng, fmt, plan):
+    lists = make_lists(rng, (45, 300, 701, 1150, 37))
+    tfs = make_tfs(rng, lists)
+    idx = build_index(lists, tfs=tfs, format=fmt, block_size=B, n_docs=U)
+    for terms in ([1], [0, 3], [4, 1], [0, 1, 2], [0, 1, 2, 3, 4]):
+        for k in (1, 3, 10, 100):
+            ids, scores = topk(idx, terms, k, mode="maxscore", plan=plan)
+            eids, escores = oracle_topk_weighted(idx, lists, tfs, terms, k)
+            msg = f"terms={terms} k={k}"
+            np.testing.assert_array_equal(ids, eids, err_msg=msg)
+            np.testing.assert_array_equal(scores, escores, err_msg=msg)
+            # and bit-identical to the exhaustive TAAT mode
+            oids, oscores = topk(idx, terms, k, mode="or", plan=plan)
+            np.testing.assert_array_equal(ids, oids, err_msg=msg)
+            np.testing.assert_array_equal(scores, oscores, err_msg=msg)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_maxscore_ties_and_k_beyond_candidates(rng, fmt):
+    """tf-free index (all impacts equal per term): exact ties break by
+    docid ascending under maxscore exactly as under TAAT."""
+    a = np.sort(rng.choice(U, size=64, replace=False)).astype(np.uint32)
+    b = np.sort(rng.choice(U, size=64, replace=False)).astype(np.uint32)
+    lists = {0: a, 1: b}
+    idx = build_index(lists, format=fmt, block_size=B, n_docs=U)
+    for k in (3, 10, 500):  # k < #ties, k within, k > all candidates
+        ids, scores = topk(idx, [0, 1], k, mode="maxscore", plan="fused")
+        eids, escores = oracle_topk(idx, lists, [0, 1], k)
+        np.testing.assert_array_equal(ids, eids)
+        np.testing.assert_array_equal(scores, escores)
+    # repeated query terms must not double-count impacts
+    ids, scores = topk(idx, [0, 0, 1], 10, mode="maxscore", plan="fused")
+    eids, escores = oracle_topk(idx, lists, [0, 0, 1], 10)
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_maxscore_seed_path_parity_and_pruning(rng, fmt):
+    """Selective shape (tiny high-impact term + long lists) exercises the
+    seed phase: tiny lists are decoded up front, θ matures before the
+    long lists stream, and whole blocks get threshold-pruned."""
+    lists = {0: np.sort(rng.choice(U, 40, replace=False)).astype(np.uint32),
+             1: np.sort(rng.choice(U, 1500, replace=False)).astype(np.uint32),
+             2: np.sort(rng.choice(U, 2000, replace=False)).astype(np.uint32)}
+    tfs = {0: np.full(40, 50, np.int64),  # saturated: rare term dominates
+           1: posting_tfs(rng, 1500), 2: posting_tfs(rng, 2000)}
+    idx = build_index(lists, tfs=tfs, format=fmt, block_size=B, n_docs=U)
+    # seed phase requires a strip-sized term next to a much longer one
+    strip_blocks = 64 // B
+    assert idx.terms[0].n_blocks <= strip_blocks
+    assert idx.terms[2].n_blocks > 4 * strip_blocks
+    st = QueryStats()
+    ids, scores = topk(idx, [0, 1, 2], 10, mode="maxscore", plan="fused",
+                       probe_width=64, stats=st)
+    eids, escores = oracle_topk_weighted(idx, lists, tfs, [0, 1, 2], 10)
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+    # the seed term was fully decoded; the long lists were partly pruned
+    assert st.per_term_decoded[0] >= idx.terms[0].n_blocks
+    assert st.blocks_pruned > 0 and st.postings_pruned > 0
+    assert st.impact_ints_decoded > 0  # weighted epilogues actually ran
+
+
+def test_maxscore_all_blocks_pruned_zero_decode(rng):
+    """Docid-disjoint long term whose upper bound is under θ: every one of
+    its blocks is threshold-pruned and none is ever decoded."""
+    rare = np.sort(rng.choice(3000, 30, replace=False)).astype(np.uint32)
+    heavy = np.sort(50_000 + rng.choice(50_000, 2000, replace=False)
+                    ).astype(np.uint32)
+    lists = {0: rare, 1: heavy}
+    tfs = {0: np.full(30, 50, np.int64), 1: np.ones(2000, np.int64)}
+    idx = build_index(lists, tfs=tfs, block_size=B, n_docs=U)
+    st = QueryStats()
+    ids, scores = topk(idx, [0, 1], 3, mode="maxscore", plan="fused",
+                       probe_width=64, stats=st)
+    eids, escores = oracle_topk_weighted(idx, lists, tfs, [0, 1], 3)
+    np.testing.assert_array_equal(ids, eids)
+    np.testing.assert_array_equal(scores, escores)
+    # scenario precondition: the heavy term alone cannot reach the top-3
+    assert idx.terms[1].ub <= int(escores[-1])
+    tp1 = idx.terms[1]
+    assert st.per_term_decoded.get(1, 0) == 0
+    assert st.blocks_pruned == tp1.n_blocks
+    assert st.postings_pruned == len(heavy)
+    # only the rare seed term's postings (and impacts) were ever decoded
+    assert st.ints_decoded == len(rare)
+
+
+def test_probe_rows_accounting(rng):
+    """Row-gathered probe passes count per-probe row gathers separately
+    from the unique decoded/skipped block partition, and ints follow
+    rows (the real decode work), not unique blocks."""
+    lists = make_lists(rng, (40, 1200))
+    idx = build_index(lists, block_size=B, n_docs=U)
+    st = QueryStats()
+    got = conjunctive(idx, [0, 1], plan="jnp", stats=st)
+    np.testing.assert_array_equal(got, oracle_and(lists, [0, 1]))
+    tp1 = idx.terms[1]
+    # driver decode pass + probe pass both account term 1's blocks once
+    assert st.rows_gathered > 0
+    # every gathered row decodes a nonempty block
+    assert st.ints_decoded >= st.rows_gathered
+    # unique blocks considered per pass never exceed the term's total
+    assert st.per_term_decoded[1] <= tp1.n_blocks
+
+
+def test_search_engine_maxscore_mode(rng):
+    from repro.launch.serve import SearchEngine
+
+    lists = make_lists(rng, (50, 600, 900))
+    tfs = make_tfs(rng, lists)
+    idx = build_index(lists, tfs=tfs, block_size=B, n_docs=U)
+    engine = SearchEngine(idx, top_k=5)
+    for terms in ([0, 1], [0, 1, 2]):
+        ids_m, sc_m = engine.search(terms, "topk_maxscore")
+        ids_t, sc_t = engine.search(terms, "topk")
+        np.testing.assert_array_equal(ids_m, ids_t)
+        np.testing.assert_array_equal(sc_m, sc_t)
+    stats = engine.run_workload([("topk_maxscore", [0, 1, 2]),
+                                 ("topk", [0, 2])])
+    assert {"pruned_block_rate", "pruned_impact_rate"} <= stats.keys()
+    assert 0 <= stats["pruned_block_rate"] <= 1
+    assert 0 <= stats["pruned_impact_rate"] <= 1
 
 
 # ---------------------------------------------------------------------------
