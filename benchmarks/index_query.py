@@ -79,13 +79,17 @@ def _measure(quick: bool) -> dict:
     # needs lists much longer than the probe set before it can pay off —
     # at K ≤ 8 a whole list is 1..4 blocks and the baseline's single tiny
     # decode is unbeatable
-    groups = (6, 8) if quick else (10, 12, 14, 16, 18)
+    groups = (6, 14) if quick else (10, 12, 14, 16, 18)
     n_lists = 4 if quick else 6
     n_queries = 6 if quick else 12
-    # quick's short lists are only 1..4 blocks at bs=128 — too few for
-    # block-max pruning to have anything to skip; shrink the block size
-    # (and the probe/strip width below) so quick lists span several DAAT
-    # strips and the maxscore smoke still proves a nonzero pruned rate
+    # quick needs K=14 for the maxscore pruning smoke: pruning is strict
+    # (a block tying θ must be decoded — its docs can tie-and-win on
+    # docid), and the 8-bit quantizer ceilings any list shorter than
+    # K≈13 at the same 255 the rare saturated terms push θ to, erasing
+    # the selective gap. At K=14 the group lists' saturated block maxima
+    # sit strictly under θ, so the long list is genuinely probed-or-
+    # pruned. Shrink the block size (and probe/strip width below) so
+    # quick lists still span many DAAT strips
     block_size = 32 if quick else 128
     probe_width = 128 if quick else 512
     rows = []

@@ -17,10 +17,17 @@ rng = np.random.default_rng(0)
 universe = 1 << 20
 
 # 1. synthetic posting lists, lengths in [2^10, 2^11) — one list per "term",
-# plus a rare "title" term and per-posting term frequencies (the Zipf skew
-# that gives MaxScore's block-max threshold something to prune)
+# plus a rare "title" term, two long "body" terms, and per-posting term
+# frequencies (the Zipf skew that gives MaxScore's block-max threshold
+# something to prune). The body terms are long on purpose: the 8-bit
+# quantizer ceilings any list whose idf is within ~1/2.2 of the rare
+# term's at the same 255 that drives θ, and strict pruning (correctly)
+# refuses bound ties — only lists long enough that their saturated
+# impacts sit *under* θ can be pruned (docs/index.md §Block-max pruning)
 lists = dict(enumerate(posting_list_group(rng, 10, 8, universe=universe)))
-lists[100] = posting_list(rng, 160, universe=universe)
+lists[100] = posting_list(rng, 320, universe=universe)
+lists[200] = posting_list(rng, 1 << 15, universe=universe)
+lists[201] = posting_list(rng, 1 << 15, universe=universe)
 tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
 index = build_index(lists, tfs=tfs, n_docs=universe)
 print(f"index: {index.n_terms} terms, {index.n_postings} postings, "
@@ -44,14 +51,16 @@ print("top-5 of OR(0, 1, 2):")
 for d, s in zip(ids, scores):
     print(f"  doc {d:>8}  score {s}")
 
-# 5. block-max pruned top-k (MaxScore DAAT): bit-identical to mode="or",
-# but blocks whose max impact can't beat the running k-th score are never
-# decoded — QueryStats.blocks_pruned is the evidence (docs/index.md)
+# 5. block-max pruned top-k (MaxScore DAAT): bit-identical to mode="or"
+# (ties included — every bound test is strict), but blocks whose max
+# impact can't even tie the running k-th score are never decoded by any
+# pass — QueryStats.blocks_pruned is the evidence (docs/index.md)
 stats = QueryStats()
-mids, mscores = topk(index, [100, 1, 2], k=5, mode="maxscore", stats=stats)
-oids, oscores = topk(index, [100, 1, 2], k=5, mode="or")
+mids, mscores = topk(index, [100, 200, 201], k=5, mode="maxscore",
+                     stats=stats)
+oids, oscores = topk(index, [100, 200, 201], k=5, mode="or")
 assert np.array_equal(mids, oids) and np.array_equal(mscores, oscores)
-print(f"maxscore top-5 of OR(100, 1, 2): identical results, "
+print(f"maxscore top-5 of OR(100, 200, 201): identical results, "
       f"decoded {stats.blocks_decoded} blocks, pruned {stats.blocks_pruned} "
       f"({stats.postings_pruned} postings) without decoding")
 

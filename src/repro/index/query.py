@@ -38,9 +38,13 @@ the answer (a union's output):
   lists are never strip-decoded, only probed for candidates that can
   still pass. The remaining **essential** terms advance DAAT in docid
   strips of ≤ ``probe_width`` postings per term; inside a strip, any
-  block whose ``max_impact`` plus the other terms' upper bounds ≤ θ is
-  **pruned — never decoded** (its docs can't displace an incumbent: ties
-  break toward the smaller docid already held). Candidates surviving the
+  block whose ``max_impact`` plus the other terms' upper bounds < θ is
+  **pruned — never decoded** (its docs can't even tie an incumbent).
+  Every bound comparison is *strict*: a candidate whose best case ties θ
+  must still be scored, because the final (score desc, docid asc) order
+  ranks it ahead of any incumbent tied at θ with a larger docid — the
+  seed phase inserts incumbents at arbitrary docids, so tied candidates
+  with smaller docids do occur. Candidates surviving the
   partial-score bound are probed against non-essential terms in
   descending-bound order, re-checking the bound after each term
   (``QueryStats.probes_pruned`` counts settlements without decode).
@@ -98,10 +102,15 @@ class QueryStats:
     the real decode work of the row-aligned probe path, which is why
     ``ints_decoded`` follows rows, not unique blocks). ``blocks_pruned`` /
     ``postings_pruned`` count whole blocks (and the postings inside them)
-    eliminated by the MaxScore threshold — never decoded at all — and
-    ``probes_pruned`` counts (candidate × term) probes settled by the
-    score bound alone. ``impact_ints_decoded`` counts per-posting impact
-    integers decoded from the weight streams (MaxScore / tf-scored paths).
+    eliminated by the MaxScore threshold — **never decoded by any pass**:
+    a block gathered by a non-essential probe/merge pass is excluded even
+    if the strip cursor never reached it, so per term
+    ``per_term_pruned[t] + len(per_term_blocks[t]) == n_blocks(t)`` is an
+    exact disjoint partition (``per_term_blocks`` is the set of live block
+    rows decoded at least once). ``probes_pruned`` counts
+    (candidate × term) probes settled by the score bound alone.
+    ``impact_ints_decoded`` counts per-posting impact integers decoded
+    from the weight streams (MaxScore / tf-scored paths).
     """
 
     blocks_decoded: int = 0
@@ -114,6 +123,9 @@ class QueryStats:
     probes_pruned: int = 0  # candidate×term probes settled by bound alone
     decode_calls: int = 0
     per_term_decoded: dict = field(default_factory=dict)
+    per_term_pruned: dict = field(default_factory=dict)
+    per_term_blocks: dict = field(default_factory=dict)  # term -> set of
+    #   live block rows decoded at least once (strip-pulled or gathered)
 
     def count(self, term: int, decoded: int, skipped: int, ints: int):
         self.blocks_decoded += decoded
@@ -123,9 +135,17 @@ class QueryStats:
         self.per_term_decoded[term] = (
             self.per_term_decoded.get(term, 0) + decoded)
 
-    def count_pruned(self, blocks: int, postings: int):
+    def count_pruned(self, blocks: int, postings: int, term=None):
         self.blocks_pruned += blocks
         self.postings_pruned += postings
+        if term is not None:
+            self.per_term_pruned[term] = (
+                self.per_term_pruned.get(term, 0) + blocks)
+
+    def touch(self, term: int, rows):
+        """Record live block rows of ``term`` decoded at least once."""
+        self.per_term_blocks.setdefault(term, set()).update(
+            int(r) for r in rows)
 
 
 def _pow2(x: int) -> int:
@@ -158,6 +178,7 @@ def _decode_blocks(tp: TermPostings, i0: int, i1: int, *, plan, stats,
         sub = tp.arr
     if stats is not None:
         stats.count(tp.term, i1 - i0, tp.n_blocks - (i1 - i0), sub.n)
+        stats.touch(tp.term, range(i0, i1))
     return sub.decode(plan=plan)
 
 
@@ -196,7 +217,7 @@ def _route_probes(tp: TermPostings, chunk: np.ndarray):
 
 def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
                 probe_width: int, plan, stats, use_skip: bool,
-                weights=None) -> np.ndarray:
+                weights=None, touched=None) -> np.ndarray:
     """One (term, candidate-chunk) pass: int32 [len(chunk)] per-candidate
     result — the membership bitmap (``impact=0``), the constant bm25
     impact contribution (``impact>0``), or the exact per-posting impact
@@ -215,6 +236,10 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
                 stats.count(tp.term, 0, tp.n_blocks, 0)
             return np.zeros(len(chunk), np.int32)
         uniq = np.unique(rows)
+        if touched is not None:
+            touched.update(uniq.tolist())
+        if stats is not None:
+            stats.touch(tp.term, uniq)
         res = np.zeros(len(chunk), np.int32)
         if uniq.size * 2 > rows.size:
             # mostly-distinct blocks: one gathered row per probe, O(B)
@@ -273,8 +298,11 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
         res[:] = np.asarray(out).sum(axis=0, dtype=np.int32)[: len(chunk)]
         return res
     sub = tp.arr
+    if touched is not None:
+        touched.update(range(tp.n_blocks))
     if stats is not None:
         stats.count(tp.term, tp.n_blocks, 0, sub.n)
+        stats.touch(tp.term, range(tp.n_blocks))
     extras = {"probe": jnp.asarray(normalize_probe(chunk, probe_width))}
     if weights is not None:
         w_extras, w_ints = _weight_extras(weights)
@@ -294,7 +322,7 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
 
 
 def _merge_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
-                plan, stats, weights=None) -> np.ndarray:
+                plan, stats, weights=None, touched=None) -> np.ndarray:
     """Bulk variant of :func:`_probe_pass` for candidate sets too large to
     probe: int64 [len(chunk)] per-candidate contribution.
 
@@ -313,6 +341,10 @@ def _merge_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
             stats.count(tp.term, 0, tp.n_blocks, 0)
         return res
     uniq = np.unique(rows)
+    if touched is not None:
+        touched.update(uniq.tolist())
+    if stats is not None:
+        stats.touch(tp.term, uniq)
     pad = _pow2(uniq.size)
     if uniq.size == uniq[-1] - uniq[0] + 1:
         sub = tp.arr.slice_blocks(uniq[0], uniq[-1] + 1, pad_to=pad)
@@ -343,15 +375,18 @@ def _merge_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
 
 def _score_term(tp: TermPostings, base_impact: int, cand: np.ndarray,
                 sel: np.ndarray, scores: np.ndarray, *, has_tf: bool,
-                probe_width: int, plan, stats):
+                probe_width: int, plan, stats, touched=None):
     """Add term ``tp``'s exact contribution to ``scores[sel]``: bulk
     decode-and-merge for strip-sized candidate sets, chunked probe
-    epilogues for small ones (one dispatch per chunk, rows in VMEM)."""
+    epilogues for small ones (one dispatch per chunk, rows in VMEM).
+    ``touched`` (a set) collects the block rows actually gathered, so
+    MaxScore's exit accounting never books a probe-decoded block as
+    threshold-pruned."""
     wts = tp.impacts if has_tf else None
     if sel.size > MERGE_MIN_PROBES:
         scores[sel] += _merge_pass(
             tp, cand[sel].astype(np.uint32), impact=base_impact,
-            plan=plan, stats=stats, weights=wts)
+            plan=plan, stats=stats, weights=wts, touched=touched)
         return
     w = min(_pow2(sel.size), probe_width)
     for s in range(0, sel.size, w):
@@ -359,7 +394,7 @@ def _score_term(tp: TermPostings, base_impact: int, cand: np.ndarray,
         contrib = _probe_pass(
             tp, cand[ch].astype(np.uint32), impact=base_impact,
             probe_width=w, plan=plan, stats=stats, use_skip=True,
-            weights=wts)
+            weights=wts, touched=touched)
         scores[ch] += contrib.astype(np.int64)
 
 
@@ -475,6 +510,8 @@ class _StripCursor:
         self.i = 0  # next undecoded block
         self.buf_docs = np.zeros(0, np.int64)
         self.buf_imps = np.zeros(0, np.int64)
+        self.pruned_rows: list = []  # block rows dropped by θ at pull time
+        #   (booked at exit, minus any later gathered by a probe pass)
 
     @property
     def exhausted(self) -> bool:
@@ -485,11 +522,15 @@ class _StripCursor:
         """Decode this term's postings ≤ ``hi`` (buffer the overshoot).
 
         Advances over every block starting ≤ hi; with a threshold, any
-        block whose ``max_impact + other_ub ≤ θ`` is pruned — its postings
-        can't displace an incumbent — and never decoded. ``other_ub`` is
-        the other terms' score bound: a scalar, or a callable mapping the
-        block rows under consideration to a per-row bound (MaxScore
-        tightens it per block once seeded terms' docids are known).
+        block whose ``max_impact + other_ub < θ`` is pruned — its postings
+        can't even tie an incumbent — and never strip-decoded (the strict
+        ``<`` keeps θ-tying blocks: a tied doc at a smaller docid outranks
+        the incumbent under the final lexsort). ``other_ub`` is the other
+        terms' score bound: a scalar, or a callable mapping the block rows
+        under consideration to a per-row bound (MaxScore tightens it per
+        block once seeded terms' docids are known). Pruned rows are only
+        buffered here (``pruned_rows``); the exit accounting books them
+        after subtracting any row a later probe pass gathered anyway.
         """
         tp = self.tp
         j = int(np.searchsorted(tp.first_doc, hi, side="right"))
@@ -498,11 +539,9 @@ class _StripCursor:
         if theta is not None and rows.size:
             ou = other_ub(rows) if callable(other_ub) else other_ub
             beaten = (tp.max_impact[rows].astype(np.int64)
-                      + ou <= theta)
+                      + ou < theta)
             if beaten.any():
-                stats.count_pruned(
-                    int(beaten.sum()),
-                    int(np.asarray(tp.arr.counts)[rows[beaten]].sum()))
+                self.pruned_rows.append(rows[beaten])
                 rows = rows[~beaten]
         if rows.size:
             pad = _pow2(rows.size)
@@ -515,6 +554,7 @@ class _StripCursor:
                 sub = tp.arr.take_blocks(rows, pad_to=pad)
                 wsub = tp.impacts.take_blocks(rows, pad_to=pad)
             stats.count(tp.term, int(rows.size), 0, sub.n)
+            stats.touch(tp.term, rows)
             docs = sub.decode(plan=plan).astype(np.int64)
             if self.has_tf:
                 stats.impact_ints_decoded += wsub.n
@@ -560,9 +600,11 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
     """Block-max pruned disjunctive top-k (see module docstring).
 
     Bit-exact with :func:`_taat_scores` + lexsort by construction: every
-    pruning decision only ever discards work whose best case cannot beat
-    the current k-th score (ties lose to the incumbent's smaller docid,
-    and candidates arrive in ascending docid strips)."""
+    pruning decision only ever discards work whose best case is *strictly
+    below* the current k-th score θ. Strictness matters: the seed phase
+    puts exactly-scored incumbents at arbitrary docids into the heap, so
+    a later candidate whose score ties θ at a smaller docid must still be
+    generated — the final lexsort ranks it ahead of the tied incumbent."""
     st = stats if stats is not None else QueryStats()
     tps = [tp for tp in _term_postings(index, dict.fromkeys(terms))
            if tp.df > 0]
@@ -599,6 +641,9 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
     # exists: seeding everything would just re-derive TAAT.
     seeded = np.zeros(0, np.int64)
     seed_docs = []
+    # block rows of each term gathered by probe/merge passes — the exit
+    # accounting subtracts these so "pruned" means never decoded anywhere
+    touched: dict[int, set] = {}
     if max(tp.n_blocks for tp in tps) > 4 * strip_blocks:
         seeds = [c for c in cursors if c.tp.n_blocks <= strip_blocks]
         parts = []
@@ -619,7 +664,9 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
                                 np.arange(cand.size), scores,
                                 has_tf=index.has_tf,
                                 probe_width=probe_width, plan=plan,
-                                stats=st)
+                                stats=st,
+                                touched=touched.setdefault(c.tp.term,
+                                                           set()))
             order = np.lexsort((cand, -scores))[:k]
             top_d, top_s = cand[order], scores[order]
             seeded = cand
@@ -627,11 +674,12 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
     while True:
         full = top_d.size >= k
         theta = int(top_s[k - 1]) if full else -1
-        # non-essential prefix: cumulative upper bound can't beat θ alone
-        n_ness = (int(np.searchsorted(cum_ub, theta, side="right"))
+        # non-essential prefix: cumulative upper bound strictly below θ —
+        # a ub-tying prefix stays essential, its docs could tie-and-win
+        n_ness = (int(np.searchsorted(cum_ub, theta, side="left"))
                   if full else 0)
         if n_ness >= len(tps):
-            break  # Σ all ubs ≤ θ: nothing unseen can enter the top-k
+            break  # Σ all ubs < θ: nothing unseen can reach the top-k
         ess = cursors[n_ness:]
         # strip horizon: each essential term advances ≤ strip blocks
         his = [int(c.tp.last_doc[min(c.i + strip, c.tp.n_blocks) - 1])
@@ -676,7 +724,7 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
                  [0]]) if ness else np.zeros(1, np.int64)
             alive = np.ones(cand.size, bool)
             if full:
-                dead = scores + int(rem_ub[0]) <= theta
+                dead = scores + int(rem_ub[0]) < theta
                 st.probes_pruned += int(dead.sum()) * len(ness)
                 alive &= ~dead
             for idx, c in enumerate(ness):
@@ -685,9 +733,10 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
                     break
                 _score_term(c.tp, c.base_impact, cand, sel, scores,
                             has_tf=index.has_tf, probe_width=probe_width,
-                            plan=plan, stats=st)
+                            plan=plan, stats=st,
+                            touched=touched.setdefault(c.tp.term, set()))
                 if full:
-                    dead = alive & (scores + int(rem_ub[idx + 1]) <= theta)
+                    dead = alive & (scores + int(rem_ub[idx + 1]) < theta)
                     st.probes_pruned += (int(dead.sum())
                                          * (len(ness) - idx - 1))
                     alive &= ~dead
@@ -696,13 +745,26 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
             order = np.lexsort((md, -ms))[:k]
             top_d, top_s = md[order], ms[order]
         strip = min(strip * STRIP_RAMP, MAX_STRIP_BLOCKS)
-    # everything not yet decoded at exit was eliminated by the threshold
+    # exit accounting: a block was threshold-pruned iff NO pass ever
+    # decoded it — neither a strip pull (pull-pruned rows + everything
+    # past the cursor frontier are the candidates) nor a non-essential
+    # probe/merge gather (subtracted via ``touched``), so decoded and
+    # pruned block sets stay disjoint and, per term,
+    # pruned + decoded-at-least-once == n_blocks exactly.
     for c in cursors:
-        rem = c.tp.n_blocks - c.i
-        if rem > 0:
+        rows = np.concatenate(
+            c.pruned_rows + [np.arange(c.i, c.tp.n_blocks)]
+        ).astype(np.int64)
+        c.i = c.tp.n_blocks
+        got = touched.get(c.tp.term)
+        if got:
+            rows = rows[~np.isin(rows,
+                                 np.fromiter(got, np.int64, len(got)))]
+        if rows.size:
             st.count_pruned(
-                rem, int(np.asarray(c.tp.arr.counts)[c.i:].sum()))
-            c.i = c.tp.n_blocks
+                int(rows.size),
+                int(np.asarray(c.tp.arr.counts)[rows].sum()),
+                term=c.tp.term)
     return top_d, top_s
 
 

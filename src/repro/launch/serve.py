@@ -386,8 +386,10 @@ class SearchEngine:
             lat.append(time.perf_counter() - t0)
             n_results += len(out[0] if isinstance(out, tuple) else out)
         wall = time.perf_counter() - t_start
-        # blocks considered = decoded + skip-table-skipped + threshold-
-        # pruned (the QueryStats invariant the accounting tests prove)
+        # blocks considered = decoded + skip-table-skipped (both per
+        # decode/probe pass) + threshold-pruned (never decoded by ANY
+        # pass — disjoint from decoded, the partition the accounting
+        # tests prove per term)
         total_blocks = (st.blocks_decoded + st.blocks_skipped
                         + st.blocks_pruned)
         total_postings = st.ints_decoded + st.postings_pruned

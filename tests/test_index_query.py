@@ -465,19 +465,25 @@ def test_maxscore_ties_and_k_beyond_candidates(rng, fmt):
 
 @pytest.mark.parametrize("fmt", FMTS)
 def test_maxscore_seed_path_parity_and_pruning(rng, fmt):
-    """Selective shape (tiny high-impact term + long lists) exercises the
-    seed phase: tiny lists are decoded up front, θ matures before the
-    long lists stream, and whole blocks get threshold-pruned."""
+    """Selective shape (tiny saturated term + long tf=1 lists) exercises
+    the seed phase: the tiny list is decoded up front, θ matures past the
+    long terms' upper bounds before they ever stream, and every long
+    block not gathered by a candidate probe is threshold-pruned — never
+    decoded by any pass (the long lists carry tf=1 so their bounds sit
+    strictly under θ; saturated tfs would ceiling them at the quantizer
+    max and erase the selective gap)."""
     lists = {0: np.sort(rng.choice(U, 40, replace=False)).astype(np.uint32),
              1: np.sort(rng.choice(U, 1500, replace=False)).astype(np.uint32),
              2: np.sort(rng.choice(U, 2000, replace=False)).astype(np.uint32)}
     tfs = {0: np.full(40, 50, np.int64),  # saturated: rare term dominates
-           1: posting_tfs(rng, 1500), 2: posting_tfs(rng, 2000)}
+           1: np.ones(1500, np.int64), 2: np.ones(2000, np.int64)}
     idx = build_index(lists, tfs=tfs, format=fmt, block_size=B, n_docs=U)
-    # seed phase requires a strip-sized term next to a much longer one
+    # seed phase requires a strip-sized term next to a much longer one,
+    # and pruning requires the long terms' combined bound under θ
     strip_blocks = 64 // B
     assert idx.terms[0].n_blocks <= strip_blocks
     assert idx.terms[2].n_blocks > 4 * strip_blocks
+    assert idx.terms[1].ub + idx.terms[2].ub < idx.terms[0].ub
     st = QueryStats()
     ids, scores = topk(idx, [0, 1, 2], 10, mode="maxscore", plan="fused",
                        probe_width=64, stats=st)
@@ -488,6 +494,11 @@ def test_maxscore_seed_path_parity_and_pruning(rng, fmt):
     assert st.per_term_decoded[0] >= idx.terms[0].n_blocks
     assert st.blocks_pruned > 0 and st.postings_pruned > 0
     assert st.impact_ints_decoded > 0  # weighted epilogues actually ran
+    # pruned/decoded block sets partition each term exactly: a block is
+    # threshold-pruned iff NO pass (strip pull, probe, merge) decoded it
+    for t, tp in idx.terms.items():
+        got = len(st.per_term_blocks.get(t, ()))
+        assert st.per_term_pruned.get(t, 0) + got == tp.n_blocks
 
 
 def test_maxscore_all_blocks_pruned_zero_decode(rng):
@@ -513,6 +524,92 @@ def test_maxscore_all_blocks_pruned_zero_decode(rng):
     assert st.postings_pruned == len(heavy)
     # only the rare seed term's postings (and impacts) were ever decoded
     assert st.ints_decoded == len(rare)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_maxscore_threshold_tie_parity(fmt):
+    """A candidate whose exact score TIES the running θ at a smaller
+    docid than the tied incumbent must still be returned first — every
+    MaxScore bound comparison has to be strict, else the non-essential
+    split / block prune / probe dead-check silently drops it.
+
+    Engineered shape: a tiny seed term puts incumbent D (large docid)
+    into the heap with score θ; a long-list doc d* < D, sharing no term
+    with the seed, has tfs tuned so its exact score equals θ. The final
+    (score desc, docid asc) order must rank d* ahead of D."""
+    U2 = 100_000
+    d_star, D = 50, 90_000
+    t1 = np.unique(np.concatenate(
+        [np.arange(100, 8100, 4), [d_star, D]])).astype(np.uint32)
+    t2 = np.unique(np.concatenate(
+        [np.arange(102, 8102, 4), [d_star]])).astype(np.uint32)
+    t0 = np.array([D, 90_050, 90_100], np.uint32)
+    lists = {0: t0, 1: t1, 2: t2}
+    probe = build_index(lists, block_size=B, n_docs=U2)
+    b0, b1, b2 = (probe.impact(t) for t in (0, 1, 2))
+    # quantized impacts reachable from integer tfs, per term
+    def reach(base):
+        out = {}
+        for tf in range(1, 401):
+            out.setdefault(int(quantize_impacts(base, [tf])[0]), tf)
+        return out
+    r1, r2 = reach(b1), reach(b2)
+    # tie construction: θ = score(D) = b0 + q1D  ==  qa + qb = score(d*)
+    found = next(((q1D, qa, b0 + q1D - qa) for q1D in sorted(r1)
+                  for qa in sorted(r1) if b0 + q1D - qa in r2), None)
+    assert found, "no exact tie constructible from these impact bases"
+    q1D, qa, qb = found
+    tf1 = np.ones(t1.size, np.int64)
+    tf1[np.searchsorted(t1, D)] = r1[q1D]
+    tf1[np.searchsorted(t1, d_star)] = r1[qa]
+    tf2 = np.ones(t2.size, np.int64)
+    tf2[np.searchsorted(t2, d_star)] = r2[qb]
+    tfs = {0: np.ones(3, np.int64), 1: tf1, 2: tf2}
+    idx = build_index(lists, tfs=tfs, format=fmt, block_size=B, n_docs=U2)
+    # seed-phase preconditions: t0 is strip-sized next to long lists
+    assert idx.terms[0].n_blocks <= 64 // B
+    assert idx.terms[1].n_blocks > 4 * (64 // B)
+    theta = b0 + q1D
+    for k in (1, 2, 3, 5):
+        ids, scores = topk(idx, [0, 1, 2], k, mode="maxscore",
+                           plan="fused", probe_width=64)
+        eids, escores = oracle_topk_weighted(idx, lists, tfs, [0, 1, 2], k)
+        np.testing.assert_array_equal(ids, eids, err_msg=f"k={k}")
+        np.testing.assert_array_equal(scores, escores, err_msg=f"k={k}")
+    # the tie really exists and resolves toward the smaller docid
+    ids, scores = topk(idx, [0, 1, 2], 2, mode="maxscore", plan="fused",
+                       probe_width=64)
+    np.testing.assert_array_equal(ids, [d_star, D])
+    np.testing.assert_array_equal(scores, [theta, theta])
+
+
+def test_maxscore_pruned_accounting_partition(rng):
+    """Dense-overlap workload (nearly every block of every term ends up
+    decoded by some pass): a block gathered by a non-essential
+    probe/merge pass is NOT threshold-pruned even though the strip cursor
+    never reached it, so per term the pruned/decoded block sets partition
+    the list exactly and ``blocks_pruned + unique-decoded == total`` —
+    the old accounting double-booked probe-decoded blocks as pruned
+    (decoded + pruned exceeded the whole index)."""
+    lists = make_lists(rng, (40, 1500, 2000))
+    tfs = make_tfs(rng, lists)  # zipf tfs saturate the quantizer: the
+    #   long terms' bounds tie θ, so nothing is strictly prunable
+    idx = build_index(lists, tfs=tfs, block_size=B, n_docs=U)
+    st = QueryStats()
+    ids, scores = topk(idx, [0, 1, 2], 10, mode="maxscore", plan="jnp",
+                       probe_width=64, stats=st)
+    oids, oscores = topk(idx, [0, 1, 2], 10, mode="or", plan="jnp")
+    np.testing.assert_array_equal(ids, oids)
+    np.testing.assert_array_equal(scores, oscores)
+    total_blocks = sum(tp.n_blocks for tp in idx.terms.values())
+    for t, tp in idx.terms.items():
+        got = len(st.per_term_blocks.get(t, ()))
+        assert st.per_term_pruned.get(t, 0) + got == tp.n_blocks
+    # pruned and decoded are disjoint, so pruned can never exceed the
+    # index minus what was decoded (the old accounting double-booked
+    # probe-decoded blocks as pruned: decoded + pruned > total)
+    uniq_decoded = sum(len(s) for s in st.per_term_blocks.values())
+    assert st.blocks_pruned + uniq_decoded == total_blocks
 
 
 def test_probe_rows_accounting(rng):
