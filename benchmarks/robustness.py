@@ -1,0 +1,151 @@
+"""Robustness benchmark: validation overhead + degraded-serving rates.
+
+Two sections (``python -m benchmarks.run --only robustness``):
+
+* **decode** — validated vs unvalidated decode throughput per format. The
+  ``checksum`` epilogue computes the per-block position-weighted sum in the
+  same decode pass (no second HBM round-trip), so its device-side cost is
+  one fused multiply-add per slot; ``decode_checked`` adds the host-side
+  compare against the stored column. Quick mode asserts the in-pass
+  checksum overhead stays under 15% — the number docs/robustness.md quotes.
+* **serving** — a flaky workload through the hardened ``SearchEngine``:
+  startup validation quarantines deliberately corrupted terms, a fault hook
+  injects transient decode failures, and the reported serve stats give the
+  retry / quarantine / degraded-response rates.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+CHECKSUM_OVERHEAD_LIMIT = 0.15  # quick-mode gate (docs/robustness.md)
+
+
+def _bench(fn, *, reps: int, warmup: int = 2):
+    """Best-of-reps wall time — the standard microbenchmark noise floor."""
+    import jax
+
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run_decode(*, n_ints: int, reps: int = 5) -> list[dict]:
+    """Unvalidated vs checksum-validated decode throughput (Mis)."""
+    from repro.core import CompressedIntArray
+    from repro.kernels.vbyte_decode import dispatch
+    from repro.robustness import decode_checked
+
+    rng = np.random.default_rng(0)
+    bits = rng.integers(1, 31, size=n_ints)
+    vals = (rng.integers(0, 2**63, n_ints, dtype=np.uint64)
+            % (1 << bits.astype(np.uint64))).astype(np.uint64)
+    rows = []
+    for fmt in ("vbyte", "streamvbyte"):
+        arr = CompressedIntArray.encode(vals, format=fmt, checksum=True)
+        dt_plain, _ = _bench(lambda: dispatch.decode(arr, plan="jnp"),
+                             reps=reps)
+        dt_cs, _ = _bench(
+            lambda: dispatch.decode(arr, epilogue="checksum", plan="jnp"),
+            reps=reps)
+        # full checked path: fused epilogue + host compare of the column
+        dt_checked = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            decode_checked(arr, plan="jnp")
+            dt_checked = min(dt_checked, time.perf_counter() - t0)
+        rows.append({
+            "format": fmt,
+            "n_ints": n_ints,
+            "unvalidated_mis": round(n_ints / dt_plain / 1e6, 1),
+            "validated_mis": round(n_ints / dt_cs / 1e6, 1),
+            "checked_mis": round(n_ints / dt_checked / 1e6, 1),
+            "checksum_overhead": round(dt_cs / dt_plain - 1.0, 4),
+            "host_verify_overhead": round(dt_checked / dt_plain - 1.0, 4),
+        })
+    return rows
+
+
+def run_serving(*, n_queries: int = 48, seed: int = 0) -> dict:
+    """Flaky-workload serve stats: retry / quarantine / degraded rates."""
+    import dataclasses
+
+    from repro.data.synthetic import posting_list_group, posting_tfs
+    from repro.index import build_index
+    from repro.launch.serve import SearchEngine, search_queries
+    from repro.robustness import ChecksumError
+    from repro.robustness import faultgen
+
+    rng = np.random.default_rng(seed)
+    lists = dict(enumerate(
+        posting_list_group(rng, 8, 16, universe=1 << 20)))
+    tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
+    index = build_index(lists, tfs=tfs, n_docs=1 << 20, checksum=True)
+
+    # two terms ship corrupted: startup validation must quarantine them
+    terms = dict(index.terms)
+    for t in (2, 9):
+        c = faultgen.corrupt(terms[t].arr, "bit_flip", seed=t)
+        terms[t] = dataclasses.replace(terms[t], arr=c.arr)
+    index = dataclasses.replace(index, terms=terms)
+
+    def flaky(attempt, q_terms, mode):
+        # every 4th query hits one transient fault, then succeeds
+        if attempt == 0 and flaky.q % 4 == 0:
+            raise ChecksumError("transient decode fault (injected)")
+    flaky.q = 0
+
+    engine = SearchEngine(index, validate=True, fault_hook=flaky,
+                          max_retries=2)
+    qs = search_queries(rng, index, n_queries)
+    engine.warmup(qs)
+    for k in engine.serve_stats:  # warmup faults don't count
+        if k not in ("quarantined_terms", "quarantined_blocks"):
+            engine.serve_stats[k] = 0
+    flaky.q = 0
+    stats = {}
+    t0 = time.perf_counter()
+    for mode, q_terms in qs:
+        engine.search(q_terms, mode)
+        flaky.q += 1
+    wall = time.perf_counter() - t0
+    s = engine.serve_stats
+    total_blocks = sum(tp.n_blocks for tp in index.terms.values())
+    stats = {
+        "n_queries": len(qs),
+        "qps": round(len(qs) / wall, 1),
+        "errors": s["errors"],
+        "retries": s["retries"],
+        "retry_rate": round(s["retries"] / len(qs), 3),
+        "quarantined_terms": s["quarantined_terms"],
+        "quarantined_blocks": s["quarantined_blocks"],
+        "quarantined_block_rate": round(
+            s["quarantined_blocks"] / total_blocks, 3),
+        "degraded_responses": s["degraded_responses"],
+        "degraded_rate": round(s["degraded_responses"] / len(qs), 3),
+        "bound_fallbacks": s["bound_fallbacks"],
+    }
+    assert stats["quarantined_terms"] == 2
+    assert stats["retries"] > 0 and stats["degraded_responses"] > 0
+    return stats
+
+
+def run(*, quick: bool = False) -> dict:
+    # quick still measures 2^17 ints: below that, fixed per-call dispatch
+    # cost dominates and the overhead ratio is pure noise
+    decode_rows = run_decode(n_ints=1 << 17 if quick else 1 << 18,
+                             reps=5 if quick else 8)
+    if quick:
+        for r in decode_rows:
+            assert r["checksum_overhead"] < CHECKSUM_OVERHEAD_LIMIT, (
+                f"{r['format']}: in-pass checksum overhead "
+                f"{r['checksum_overhead']:.1%} exceeds "
+                f"{CHECKSUM_OVERHEAD_LIMIT:.0%}")
+    return {"decode": decode_rows,
+            "serving": run_serving(n_queries=24 if quick else 48)}

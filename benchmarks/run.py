@@ -17,6 +17,10 @@ One benchmark per paper table/figure (+ framework-level extensions):
                        length group: AND/OR/top-k, fused vs unfused vs the
                        decode-then-intersect baseline, 1/2/8 devices
   roofline           — table from the dry-run artifacts (if present)
+  robustness         — validated vs unvalidated decode throughput, plus
+                       retry/quarantine/degraded rates from a flaky
+                       workload through the hardened SearchEngine
+                       (quick mode gates checksum overhead < 15%)
 
 Results are written as machine-readable JSON (``--json``, default
 ``experiments/benchmarks.json``) so the perf trajectory is tracked across
@@ -144,7 +148,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="decode|decode_speed|compression|kernel|fused|"
-                         "serving|index|roofline")
+                         "serving|index|roofline|robustness")
     ap.add_argument("--json", default=None,
                     help="output path (default experiments/benchmarks.json; "
                          "--quick runs write the untracked -quick variant so "
@@ -319,6 +323,23 @@ def main():
                           f"skip={g['block_skip_rate']}" + extra)
         assert not any("error" in r for r in rows), "index bench failed"
         results["index_query"] = rows
+
+    if want("robustness"):
+        from benchmarks import robustness
+
+        print("== robustness: validation overhead + degraded-serving rates ==")
+        rob = robustness.run(quick=args.quick)
+        for r in rob["decode"]:
+            print(f"  {r['format']:>11} unvalidated={r['unvalidated_mis']:>7}"
+                  f" Mis  validated={r['validated_mis']:>7} Mis "
+                  f"(in-pass overhead {r['checksum_overhead']:+.1%}, "
+                  f"host verify {r['host_verify_overhead']:+.1%})")
+        srv = rob["serving"]
+        print(f"  flaky workload: {srv['qps']} QPS, "
+              f"retry rate {srv['retry_rate']}, quarantined blocks "
+              f"{srv['quarantined_block_rate']}, degraded rate "
+              f"{srv['degraded_rate']}")
+        results["robustness"] = rob
 
     if want("roofline"):
         from benchmarks import roofline

@@ -70,6 +70,25 @@ FORMAT_LEAVES = {
     "streamvbyte": ("control", "data", "counts", "bases"),
 }
 
+def block_checksums(grid: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Per-block position-weighted checksum of a decoded value grid.
+
+    ``cs[b] = (Σ_{j < counts[b]} grid[b, j] · (2j+1)) mod 2^32``, returned
+    as ``int32 [n_blocks]`` (bit pattern of the uint32 sum). Odd positional
+    weights make the sum order-sensitive. Computed in uint64 — products are
+    ≤ 2^32·(2·block_size) and blocks are short, so the sum never overflows
+    before the final mask. The device twin is the fused ``checksum``
+    epilogue (``kernels/vbyte_decode/epilogues.py``), whose int32
+    two's-complement arithmetic wraps bit-identically.
+    """
+    g = np.asarray(grid, dtype=np.uint64) & np.uint64(0xFFFFFFFF)
+    B = g.shape[1]
+    w = (2 * np.arange(B, dtype=np.uint64) + 1)[None, :]
+    valid = np.arange(B)[None, :] < np.asarray(counts).reshape(-1, 1)
+    cs = (g * w * valid).sum(axis=1, dtype=np.uint64)
+    return (cs & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+
+
 _USE_KERNEL_MSG = (
     "use_kernel= is deprecated; pass plan= instead "
     "(use_kernel=True -> plan='kernel', use_kernel=False -> plan='jnp'; "
@@ -113,6 +132,11 @@ class CompressedIntArray:
     # carries exact-size accounting (payload_bytes). NOT a pytree child —
     # arrays reconstructed inside jit/shard_map have host_enc=None.
     host_enc: Any = field(default=None, compare=False, repr=False)
+    # optional per-block checksum column (int32 [n_blocks], see
+    # block_checksums) written by encode(..., checksum=True) and verified by
+    # repro.robustness.validate.decode_checked in the same decode tile pass.
+    # Off-tree like host_enc: host metadata, dropped on pytree unflatten.
+    checksums: Any = field(default=None, compare=False, repr=False)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten_with_keys(self):
@@ -185,6 +209,8 @@ class CompressedIntArray:
         block_size: int = 128,
         differential: bool = False,
         stride_multiple: int = 128,
+        wrap: bool = False,
+        checksum: bool = False,
     ) -> "CompressedIntArray":
         if format == "vbyte":
             enc = venc.encode_blocked(
@@ -192,6 +218,7 @@ class CompressedIntArray:
                 block_size=block_size,
                 differential=differential,
                 stride_multiple=stride_multiple,
+                wrap=wrap,
             )
         elif format == "streamvbyte":
             enc = svb.encode_blocked(
@@ -199,10 +226,20 @@ class CompressedIntArray:
                 block_size=block_size,
                 differential=differential,
                 stride_multiple=stride_multiple,
+                wrap=wrap,
             )
         else:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
-        return cls._from_encoding(enc, format)
+        arr = cls._from_encoding(enc, format)
+        if checksum:
+            # checksum the *decoded* (absolute) values: pad the input to the
+            # block grid — identical for both formats and both differential
+            # flavors, since decode always recovers the absolute values
+            v = venc.validate_u32(values, wrap=wrap).ravel()
+            grid = np.zeros((enc.counts.shape[0], block_size), np.uint64)
+            grid.reshape(-1)[: v.size] = v
+            arr = replace(arr, checksums=block_checksums(grid, enc.counts))
+        return arr
 
     @classmethod
     def encode_ragged(
@@ -213,6 +250,8 @@ class CompressedIntArray:
         block_size: int = 128,
         differential: bool = False,
         stride_multiple: int = 128,
+        wrap: bool = False,
+        checksum: bool = False,
     ) -> "CompressedIntArray":
         """Encode ragged id bags: block b holds list b (≤ block_size ids).
 
@@ -225,14 +264,19 @@ class CompressedIntArray:
         if format == "vbyte":
             enc = venc.encode_ragged_blocked(
                 lists, block_size=block_size, differential=differential,
-                stride_multiple=stride_multiple)
+                stride_multiple=stride_multiple, wrap=wrap)
         elif format == "streamvbyte":
             enc = svb.encode_ragged_blocked(
                 lists, block_size=block_size, differential=differential,
-                stride_multiple=stride_multiple)
+                stride_multiple=stride_multiple, wrap=wrap)
         else:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
-        return cls._from_encoding(enc, format)
+        arr = cls._from_encoding(enc, format)
+        if checksum:
+            vpad, counts = venc.ragged_block_values(
+                lists, block_size=block_size, differential=False, wrap=wrap)
+            arr = replace(arr, checksums=block_checksums(vpad, counts))
+        return arr
 
     # -- metadata ----------------------------------------------------------
     @property
@@ -329,7 +373,12 @@ class CompressedIntArray:
                 pad = ((0, pad_to - a.shape[0]),) + ((0, 0),) * (a.ndim - 1)
                 a = np.pad(a, pad)
             leaves[nm] = a
-        return replace(self, host_enc=None,
+        cs = self.checksums
+        if cs is not None:
+            cs = np.asarray(cs)[idx]  # count-0 pad blocks checksum to 0
+            if pad_to is not None and cs.shape[0] < pad_to:
+                cs = np.pad(cs, ((0, pad_to - cs.shape[0]),))
+        return replace(self, host_enc=None, checksums=cs,
                        n=int(leaves["counts"].sum()), **leaves)
 
     # -- decoding ------------------------------------------------------------
@@ -346,16 +395,28 @@ class CompressedIntArray:
 
         return dispatch.decode(self, plan=plan)
 
-    def decode(self, *, use_kernel: bool | None = None, plan="auto") -> np.ndarray:
+    def decode(self, *, use_kernel: bool | None = None, plan="auto",
+               check: bool = False) -> np.ndarray:
         """Decode to uint32[n] (host-visible).
 
         ``use_kernel`` is the deprecated legacy boolean (True → Pallas
         kernel, False → jnp decoder); it maps onto the dispatch plan and
         emits a ``DeprecationWarning``. Use ``plan=``.
+
+        ``check=True`` decodes through the fused ``checksum`` epilogue and
+        verifies the per-block column written by ``encode(checksum=True)``
+        in the same tile pass, raising
+        :class:`repro.robustness.validate.ChecksumError` (with block
+        coordinates) on mismatch — see docs/robustness.md.
         """
         if use_kernel is not None:
             plan = warn_use_kernel(use_kernel)
-        grid = np.asarray(self.decode_blocked(plan=plan))
+        if check:
+            from repro.robustness.validate import decode_checked
+
+            grid = np.asarray(decode_checked(self, plan=plan))
+        else:
+            grid = np.asarray(self.decode_blocked(plan=plan))
         # concatenate each block's valid prefix. (Not a flat [:n] trim —
         # that silently corrupts outputs when a partial block precedes a
         # full one, as a non-contiguous take_blocks gather can produce.)

@@ -25,6 +25,41 @@ import numpy as np
 
 MAX_BYTES_PER_INT = 5  # 32-bit integers need at most ceil(32/7) = 5 bytes
 _LEN_THRESHOLDS = np.array([1 << 7, 1 << 14, 1 << 21, 1 << 28], dtype=np.uint64)
+_U32_MAX = 0xFFFFFFFF
+
+
+def validate_u32(values, *, wrap: bool = False, what: str = "encoder input") -> np.ndarray:
+    """Validate encoder input and return it as ``uint64`` in ``[0, 2^32)``.
+
+    Both on-device formats encode 32-bit unsigned integers; anything else —
+    float dtypes, negative values, values ≥ 2^32 — used to be silently
+    truncated/wrapped by the ``uint64`` cast, which turns caller bugs into
+    wrong-but-well-formed streams. Reject them with a clear ``ValueError``
+    instead. ``wrap=True`` is the explicit escape hatch: truncate floats and
+    reduce mod 2^32 (two's-complement for signed inputs), matching the
+    decoder oracles' wraparound semantics.
+    """
+    a = np.asarray(values)
+    if not (np.issubdtype(a.dtype, np.integer) or a.dtype == np.bool_):
+        if not wrap:
+            raise ValueError(
+                f"{what} must be an integer array, got dtype {a.dtype} "
+                "(pass wrap=True to truncate explicitly)")
+        a = a.astype(np.int64)
+    if wrap:
+        if np.issubdtype(a.dtype, np.signedinteger):
+            a = a.astype(np.int64).astype(np.uint64)
+        return a.astype(np.uint64) & np.uint64(_U32_MAX)
+    if a.size and np.issubdtype(a.dtype, np.signedinteger) and int(a.min()) < 0:
+        raise ValueError(
+            f"{what} must be non-negative, got min {int(a.min())} "
+            "(pass wrap=True to wrap mod 2^32 explicitly)")
+    a = a.astype(np.uint64)
+    if a.size and int(a.max()) > _U32_MAX:
+        raise ValueError(
+            f"{what} must be < 2^32, got max {int(a.max())} "
+            "(pass wrap=True to wrap mod 2^32 explicitly)")
+    return a
 
 
 def vbyte_lengths(values: np.ndarray) -> np.ndarray:
@@ -49,9 +84,9 @@ def _byte_matrix(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return data, lengths
 
 
-def encode_stream(values: np.ndarray) -> np.ndarray:
+def encode_stream(values: np.ndarray, *, wrap: bool = False) -> np.ndarray:
     """Encode to the paper's tight byte stream. Returns uint8[total_bytes]."""
-    data, lengths = _byte_matrix(values)
+    data, lengths = _byte_matrix(validate_u32(values, wrap=wrap))
     keep = np.arange(MAX_BYTES_PER_INT)[None, :] < lengths[:, None]
     return data[keep]  # row-major boolean take preserves byte order
 
@@ -198,9 +233,10 @@ def encode_blocked(
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
+    wrap: bool = False,
 ) -> BlockedEncoding:
     """Encode ``values`` into the blocked layout (see blocked_metadata)."""
-    v = np.asarray(values, dtype=np.uint64).ravel()
+    v = validate_u32(values, wrap=wrap).ravel()
     n = int(v.size)
     n_blocks = max(1, -(-n // block_size))
 
@@ -229,7 +265,7 @@ def encode_blocked(
 
 
 def ragged_block_values(
-    lists, *, block_size: int, differential: bool
+    lists, *, block_size: int, differential: bool, wrap: bool = False
 ) -> tuple[np.ndarray, np.ndarray]:
     """Shared ragged-bag layout: one independent list per block.
 
@@ -243,7 +279,7 @@ def ragged_block_values(
     counts = np.zeros(n_lists, dtype=np.int32)
     vpad = np.zeros((n_lists, block_size), dtype=np.uint64)
     for i, lst in enumerate(lists):
-        a = np.asarray(lst, dtype=np.uint64).ravel()
+        a = validate_u32(lst, wrap=wrap, what=f"list {i}").ravel()
         if a.size > block_size:
             raise ValueError(
                 f"list {i} has {a.size} ids > block_size={block_size}")
@@ -261,6 +297,7 @@ def encode_ragged_blocked(
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
+    wrap: bool = False,
 ) -> BlockedEncoding:
     """Encode ragged id bags: block b holds list b (≤ block_size ids).
 
@@ -269,7 +306,7 @@ def encode_ragged_blocked(
     lengths; ``bases`` are all zero (per-row differential is self-based).
     """
     vpad, counts = ragged_block_values(
-        lists, block_size=block_size, differential=differential)
+        lists, block_size=block_size, differential=differential, wrap=wrap)
     n_lists = vpad.shape[0]
     data, lengths = _byte_matrix(vpad.reshape(-1))
     lengths = lengths.reshape(n_lists, block_size)

@@ -70,9 +70,11 @@ def unpack_control(control: np.ndarray, n: int) -> np.ndarray:
     return codes[:n].astype(np.int64)
 
 
-def encode_stream(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def encode_stream(values: np.ndarray, *, wrap: bool = False) -> tuple[np.ndarray, np.ndarray]:
     """Encode to the paper's two tight streams: ``(control, data)``."""
-    data, lengths = _byte_matrix(values)
+    from .encode import validate_u32
+
+    data, lengths = _byte_matrix(validate_u32(values, wrap=wrap))
     n = data.shape[0]
     codes = np.zeros(-(-max(n, 1) // 4) * 4, dtype=np.uint8)
     codes[:n] = (lengths - 1).astype(np.uint8)
@@ -156,6 +158,7 @@ def encode_blocked(
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
+    wrap: bool = False,
 ) -> StreamVByteEncoding:
     """Encode ``values`` into the blocked Stream-VByte layout.
 
@@ -166,9 +169,9 @@ def encode_blocked(
     """
     if block_size % 4:
         raise ValueError(f"block_size={block_size} must be a multiple of 4")
-    from .encode import blocked_metadata, scatter_blocked_payload
+    from .encode import blocked_metadata, scatter_blocked_payload, validate_u32
 
-    v = np.asarray(values, dtype=np.uint64).ravel()
+    v = validate_u32(values, wrap=wrap).ravel()
     n = int(v.size)
     n_blocks = max(1, -(-n // block_size))
 
@@ -211,6 +214,7 @@ def encode_ragged_blocked(
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
+    wrap: bool = False,
 ) -> StreamVByteEncoding:
     """Encode ragged id bags: block b holds list b (≤ block_size ids).
 
@@ -224,7 +228,7 @@ def encode_ragged_blocked(
     from .encode import ragged_block_values, scatter_blocked_payload
 
     vpad, counts = ragged_block_values(
-        lists, block_size=block_size, differential=differential)
+        lists, block_size=block_size, differential=differential, wrap=wrap)
     n_lists = vpad.shape[0]
     data_mat, lengths = _byte_matrix(vpad.reshape(-1))
     lengths = lengths.reshape(n_lists, block_size)

@@ -1,2 +1,2 @@
-from .elastic import MeshPlan, plan_mesh, reshard_plan  # noqa: F401
+from .elastic import MeshPlan, plan_mesh, reshard_plan, shard_intervals  # noqa: F401
 from .heartbeat import StragglerDetector  # noqa: F401

@@ -193,6 +193,7 @@ def build_index(
     n_docs: int | None = None,
     impact_bits: int = 8,
     stride_multiple: int = 128,
+    checksum: bool = False,
 ) -> InvertedIndex:
     """Build a compressed inverted index from per-term docid lists.
 
@@ -210,6 +211,11 @@ def build_index(
     ``CompressedIntArray`` plus a per-block ``max_impact`` column; terms
     without a tfs entry default to tf=1 everywhere (bit-identical to the
     tf-free constant-impact index).
+
+    ``checksum=True`` writes the per-block checksum column on both the
+    docid-gap and impact streams (``CompressedIntArray.encode(...,
+    checksum=True)``), enabling checksum-verified decode and the serving
+    layer's segment quarantine (docs/robustness.md).
     """
     if not isinstance(lists, dict):
         lists = dict(enumerate(lists))
@@ -247,7 +253,7 @@ def build_index(
     for term, d in docids.items():
         arr = CompressedIntArray.encode(
             d, format=format, block_size=block_size, differential=True,
-            stride_multiple=stride_multiple)
+            stride_multiple=stride_multiple, checksum=checksum)
         first, last = _skip_table(d, block_size)
         tp = TermPostings(term=term, arr=arr, first_doc=first,
                           last_doc=last, df=int(d.size))
@@ -256,7 +262,8 @@ def build_index(
         q = quantize_impacts(index.impact(term), tf, impact_bits)
         imp = CompressedIntArray.encode(
             q.astype(np.uint64), format=format, block_size=block_size,
-            differential=False, stride_multiple=stride_multiple)
+            differential=False, stride_multiple=stride_multiple,
+            checksum=checksum)
         index.terms[term] = TermPostings(
             term=term, arr=arr, first_doc=first, last_doc=last,
             df=int(d.size), impacts=imp,

@@ -69,6 +69,7 @@ import jax.numpy as jnp
 
 from repro.kernels.vbyte_decode import dispatch
 from repro.kernels.vbyte_decode.ops import normalize_probe
+from repro.robustness.validate import Deadline  # noqa: F401  (re-exported)
 
 from .builder import InvertedIndex, TermPostings
 
@@ -126,6 +127,41 @@ class QueryStats:
     per_term_pruned: dict = field(default_factory=dict)
     per_term_blocks: dict = field(default_factory=dict)  # term -> set of
     #   live block rows decoded at least once (strip-pulled or gathered)
+    # robustness accounting (docs/robustness.md): a degraded result is
+    # still correct over the work that ran — smaller, never silently wrong
+    errors: int = 0  # typed DecodeErrors hit while answering
+    retries: int = 0  # transient-failure retries that succeeded
+    quarantined_blocks: int = 0  # blocks of quarantined segments not served
+    bound_fallbacks: int = 0  # maxscore→TAAT fallbacks (unsafe bounds)
+    degraded: bool = False
+    degraded_reasons: list = field(default_factory=list)
+
+    def mark_degraded(self, reason: str):
+        self.degraded = True
+        if reason not in self.degraded_reasons:
+            self.degraded_reasons.append(reason)
+
+    def merge(self, other: "QueryStats"):
+        """Fold a per-query stats object into this aggregate — how
+        ``SearchEngine``/``run_workload`` keep one per-call degraded flag
+        while still reporting workload-wide decode accounting."""
+        for f in ("blocks_decoded", "blocks_skipped", "blocks_pruned",
+                  "rows_gathered", "ints_decoded", "impact_ints_decoded",
+                  "postings_pruned", "probes_pruned", "decode_calls",
+                  "errors", "retries", "quarantined_blocks",
+                  "bound_fallbacks"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for t, v in other.per_term_decoded.items():
+            self.per_term_decoded[t] = self.per_term_decoded.get(t, 0) + v
+        for t, v in other.per_term_pruned.items():
+            self.per_term_pruned[t] = self.per_term_pruned.get(t, 0) + v
+        for t, v in other.per_term_blocks.items():
+            self.per_term_blocks.setdefault(t, set()).update(v)
+        if other.degraded:
+            self.degraded = True
+            for r in other.degraded_reasons:
+                if r not in self.degraded_reasons:
+                    self.degraded_reasons.append(r)
 
     def count(self, term: int, decoded: int, skipped: int, ints: int):
         self.blocks_decoded += decoded
@@ -150,6 +186,21 @@ class QueryStats:
 
 def _pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length()
+
+
+def _expired(deadline: Deadline | None, stats: QueryStats | None,
+             where: str) -> bool:
+    """Deadline check at a work-unit boundary (docs/robustness.md).
+
+    Work in flight always completes — expiry only stops *new* strips /
+    terms / chunks from starting, so a timed-out query returns a smaller
+    but well-defined result, flagged via ``stats.degraded``.
+    """
+    if deadline is None or not deadline.expired():
+        return False
+    if stats is not None:
+        stats.mark_degraded(f"deadline:{where}")
+    return True
 
 
 def _overlap_blocks(tp: TermPostings, lo: int, hi: int) -> tuple[int, int]:
@@ -417,8 +468,14 @@ def conjunctive(
     probe_width: int = DEFAULT_PROBE_WIDTH,
     stats: QueryStats | None = None,
     use_skip: bool = True,
+    deadline: Deadline | None = None,
 ) -> np.ndarray:
-    """AND query: sorted uint32 docids present in every term's postings."""
+    """AND query: sorted uint32 docids present in every term's postings.
+
+    On deadline expiry the remaining terms are skipped and the
+    intersection-so-far is returned — a *superset* of the exact answer,
+    flagged degraded via ``stats`` (docs/robustness.md).
+    """
     if not terms:
         raise ValueError("conjunctive query needs ≥1 term")
     # dedup repeated terms: AND(t, t) = t, and each repeat would re-probe
@@ -439,9 +496,14 @@ def conjunctive(
     for tp in rest:
         if cand.size == 0:
             break
+        if _expired(deadline, stats, "and-term"):
+            break
         w = min(_pow2(cand.size), probe_width)
         keep = np.zeros(cand.size, bool)
         for s in range(0, cand.size, w):
+            if s and _expired(deadline, stats, "and-chunk"):
+                keep[s:] = True  # unprobed candidates stay (superset)
+                break
             chunk = cand[s:s + w]
             hit = _probe_pass(tp, chunk, impact=0, probe_width=w, plan=plan,
                               stats=stats, use_skip=use_skip)
@@ -457,14 +519,21 @@ def disjunctive(
     plan="auto",
     stats: QueryStats | None = None,
     use_skip: bool = True,
+    deadline: Deadline | None = None,
 ) -> np.ndarray:
-    """OR query: sorted uint32 docids present in any term's postings."""
+    """OR query: sorted uint32 docids present in any term's postings.
+
+    On deadline expiry the remaining terms are skipped: the union-so-far
+    (a subset) is returned, flagged degraded via ``stats``.
+    """
     if not terms:
         raise ValueError("disjunctive query needs ≥1 term")
     parts = []
     for tp in _term_postings(index, dict.fromkeys(terms)):  # dedup repeats
         if tp.df == 0:
             continue
+        if parts and _expired(deadline, stats, "or-term"):
+            break
         parts.append(_decode_blocks(tp, 0, tp.n_blocks, plan=plan,
                                     stats=stats, use_skip=use_skip))
     if not parts:
@@ -472,15 +541,20 @@ def disjunctive(
     return np.unique(np.concatenate(parts)).astype(np.uint32)
 
 
-def _taat_scores(index: InvertedIndex, terms, *, plan, stats, use_skip):
+def _taat_scores(index: InvertedIndex, terms, *, plan, stats, use_skip,
+                 deadline: Deadline | None = None):
     """Exhaustive TAAT scoring: every term decodes once (the union pass),
     its impacts scatter onto its own docids. ``(cand int64, scores int64)``,
-    exact — the reference every pruned path must match bit-for-bit."""
+    exact — the reference every pruned path must match bit-for-bit. On
+    deadline expiry the remaining terms never decode: candidates and
+    scores cover the terms that ran (flagged degraded via ``stats``)."""
     parts = {}
     for t in dict.fromkeys(terms):
         tp = index.terms.get(t)
         if tp is None or tp.df == 0:
             continue
+        if parts and _expired(deadline, stats, "taat-term"):
+            break
         parts[t] = _decode_blocks(tp, 0, tp.n_blocks, plan=plan,
                                   stats=stats, use_skip=use_skip)
     if not parts:
@@ -596,7 +670,7 @@ def _seeded_bound(c, total_ub: int, seed_docs):
 
 
 def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
-              stats: QueryStats | None):
+              stats: QueryStats | None, deadline: Deadline | None = None):
     """Block-max pruned disjunctive top-k (see module docstring).
 
     Bit-exact with :func:`_taat_scores` + lexsort by construction: every
@@ -671,7 +745,13 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
             top_d, top_s = cand[order], scores[order]
             seeded = cand
 
+    timed_out = False
     while True:
+        if _expired(deadline, st, "maxscore-strip"):
+            # the running top-k is exact over every strip that completed —
+            # return it as the degraded partial result
+            timed_out = True
+            break
         full = top_d.size >= k
         theta = int(top_s[k - 1]) if full else -1
         # non-essential prefix: cumulative upper bound strictly below θ —
@@ -750,8 +830,10 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
     # past the cursor frontier are the candidates) nor a non-essential
     # probe/merge gather (subtracted via ``touched``), so decoded and
     # pruned block sets stay disjoint and, per term,
-    # pruned + decoded-at-least-once == n_blocks exactly.
-    for c in cursors:
+    # pruned + decoded-at-least-once == n_blocks exactly. A timed-out
+    # query books nothing: blocks past the frontier were abandoned by the
+    # deadline, not proven beaten.
+    for c in cursors if not timed_out else ():
         rows = np.concatenate(
             c.pruned_rows + [np.arange(c.i, c.tp.n_blocks)]
         ).astype(np.int64)
@@ -778,6 +860,7 @@ def topk(
     probe_width: int = DEFAULT_PROBE_WIDTH,
     stats: QueryStats | None = None,
     use_skip: bool = True,
+    deadline: Deadline | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Top-k scored query: ``(docids uint32 [≤k], scores int32 [≤k])``.
 
@@ -801,13 +884,15 @@ def topk(
     k = int(k)
     if mode == "or" or (mode == "maxscore" and not use_skip):
         cand, scores = _taat_scores(index, terms, plan=plan, stats=stats,
-                                    use_skip=use_skip)
+                                    use_skip=use_skip, deadline=deadline)
     elif mode == "maxscore":
         cand, scores = _maxscore(index, terms, k, plan=plan,
-                                 probe_width=probe_width, stats=stats)
+                                 probe_width=probe_width, stats=stats,
+                                 deadline=deadline)
     elif mode == "and":
         cand = conjunctive(index, terms, plan=plan, probe_width=probe_width,
-                           stats=stats, use_skip=use_skip).astype(np.int64)
+                           stats=stats, use_skip=use_skip,
+                           deadline=deadline).astype(np.int64)
         if index.has_tf:
             # per-posting impacts vary per candidate: probe each term's
             # weight stream over the conjunctive candidates
@@ -816,6 +901,8 @@ def topk(
                 tp = index.terms.get(t)
                 if tp is None or tp.df == 0 or cand.size == 0:
                     continue
+                if _expired(deadline, stats, "and-score-term"):
+                    break
                 w = min(_pow2(cand.size), probe_width)
                 for s in range(0, cand.size, w):
                     chunk = cand[s:s + w].astype(np.uint32)
@@ -847,6 +934,8 @@ def topk(
             tp = index.terms.get(t)
             if t == terms[0] or tp is None or tp.df == 0:
                 continue
+            if _expired(deadline, stats, "driver-term"):
+                break
             imp = index.impact(t)
             w = min(_pow2(cand.size), probe_width)
             for s in range(0, cand.size, w):

@@ -355,6 +355,9 @@ def _build_sharded_fn(mesh, axes: tuple, format: str, epilogue: str,
     if epilogue == "dot_score":
         out_specs = (spec_block,
                      P(axes, None, None) if multi_query else spec_block)
+    elif epilogue == "checksum":
+        # (decoded grid, per-block checksum column) — both block-leading
+        out_specs = (spec_block, spec_block)
     else:
         # stream / bag_sum / adjacency_rebase / membership / bm25_accum:
         # one [nb, ·] output whose leading dim is the block dim
@@ -505,6 +508,7 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
         "bm25_weighted_rows": {"probe": jnp.asarray(
             rng.integers(0, vocab, (nb, 1)).astype(np.int32)), **w_ops},
         "stream": {},
+        "checksum": {},
     }
     return operands, extras, arr.bits_per_int
 
@@ -515,7 +519,7 @@ def autotune(
     epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase",
                     "membership", "bm25_accum", "membership_rows",
                     "bm25_accum_rows", "bm25_weighted",
-                    "bm25_weighted_rows"),
+                    "bm25_weighted_rows", "checksum"),
     block_size: int = 128,
     n_blocks: int = 64,
     vocab: int = 4096,

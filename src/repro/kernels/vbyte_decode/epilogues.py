@@ -51,6 +51,13 @@ Registered epilogues:
                          or ``w_control``/``w_data`` (streamvbyte) — so the
                          weighted epilogue works for both formats under one
                          name. Drives MaxScore top-k (repro.index.query).
+* ``checksum``         — validated decode: the decoded integers plus a
+                         per-block position-weighted checksum
+                         ``cs[b] = Σ_j vals[b,j]·(2j+1) mod 2^32`` computed
+                         in the same tile pass, compared host-side against
+                         the encode-time column (repro.robustness.validate)
+                         — stream-validation at the cost of one epilogue,
+                         not a second HBM round-trip.
 * ``membership_rows`` / ``bm25_accum_rows`` / ``bm25_weighted_rows`` —
                          the block-aligned variants:
                          ``probe`` is a **tiled** ``[n_blocks, 1]`` extra
@@ -107,6 +114,18 @@ def _dot_score_apply(vals, valid, *, table, query):
         return ids, jnp.einsum("tbd,d->tb", vecs, q[0]).astype(jnp.float32)
     # microbatched queries (the serving engine's bucket): scores [T, B, q]
     return ids, jnp.einsum("tbd,qd->tbq", vecs, q).astype(jnp.float32)
+
+
+def _checksum_apply(vals, valid):
+    # cs[t] = Σ_j valid · vals[t,j] · (2j+1)  (mod 2^32). int32 products and
+    # sums wrap two's-complement, which is bit-identical to the host's
+    # uint32 mod-2^32 arithmetic; odd positional weights make the sum
+    # order-sensitive (a swap of two unequal values changes it). Count-0
+    # (padding) blocks checksum to 0.
+    B = vals.shape[-1]
+    w = (2 * jnp.arange(B, dtype=jnp.int32) + 1)[None, :]
+    cs = jnp.where(valid, vals * w, 0).sum(axis=1, dtype=jnp.int32)
+    return vals, cs[:, None]
 
 
 def _adjacency_rebase_apply(vals, valid, *, edge_base):
@@ -265,6 +284,13 @@ def _dot_score_out(nb, B, bt, extras):
     return (ids, scores), (ids_spec, scores_spec)
 
 
+def _checksum_out(nb, B, bt, extras):
+    return ((jax.ShapeDtypeStruct((nb, B), jnp.int32),
+             jax.ShapeDtypeStruct((nb, 1), jnp.int32)),
+            (pl.BlockSpec((bt, B), lambda g: (g, 0)),
+             pl.BlockSpec((bt, 1), lambda g: (g, 0))))
+
+
 def _probe_out(nb, B, bt, extras):
     P = extras["probe"].shape[-1]
     return (jax.ShapeDtypeStruct((nb, P), jnp.int32),
@@ -282,6 +308,7 @@ EPILOGUES = {
                         out_info=_bag_sum_out),
     "dot_score": Epilogue("dot_score", _dot_score_apply,
                           extras=("table", "query"), out_info=_dot_score_out),
+    "checksum": Epilogue("checksum", _checksum_apply, out_info=_checksum_out),
     "adjacency_rebase": Epilogue(
         "adjacency_rebase", _adjacency_rebase_apply, extras=("edge_base",),
         tiled_extras=("edge_base",), requires_differential=True,

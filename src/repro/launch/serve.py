@@ -8,6 +8,8 @@ search engine (:class:`SearchEngine`).
         --reduced --devices 8 --requests 256
     PYTHONPATH=src python -m repro.launch.serve --arch search --requests 64
     PYTHONPATH=src python -m repro.launch.serve --arch search --devices 8
+    PYTHONPATH=src python -m repro.launch.serve --arch search --devices 8 \
+        --degraded-smoke    # kill 1 of 8 shards, assert flagged partials
 
 The two-tower arch runs the ``ServingEngine``: a compressed candidate
 corpus resident on the mesh (``CompressedIntArray.shard`` — block dim over
@@ -179,6 +181,13 @@ class ServingEngine:
                                                    dtype=self.dtype))
         self._topk_fn = jax.jit(self._mask_and_topk)
         self._stats = []
+        # liveness: one heartbeat per served microbatch; run_workload
+        # reports the detector's straggler classification (empty when
+        # healthy — the coordinator hook for elastic re-meshing, ft/)
+        from repro.ft import StragglerDetector
+
+        self.detector = StragglerDetector()
+        self._step = 0
 
     # -- retrieval ---------------------------------------------------------
     def _mask_and_topk(self, ids, scores):
@@ -276,6 +285,8 @@ class ServingEngine:
             jax.block_until_ready((top_s, top_i))
             dt = time.perf_counter() - t0
             lat.extend([dt] * take)  # whole microbatch completes together
+            self.detector.heartbeat("serve-host", self._step)
+            self._step += 1
             i += take
         wall = time.perf_counter() - t_start
         stats = {
@@ -286,6 +297,7 @@ class ServingEngine:
             "top_k": self.top_k,
             "corpus_n": self.corpus.n,
             "buckets": list(self.buckets),
+            "stragglers": self.detector.stragglers(),
         }
         self._stats.append(stats)
         return stats
@@ -318,11 +330,31 @@ class SearchEngine:
     ``search(terms, mode=...)`` serves one query; ``run_workload`` drives a
     query list and reports QPS, p50/p99 latency, and decode-vs-skip block
     accounting.
+
+    **Degraded-mode serving** (docs/robustness.md): with ``validate=True``
+    every term's streams are validated at startup — terms whose payload /
+    metadata / checksum column fails are **quarantined** (dropped from
+    queries, which come back flagged ``degraded``), terms whose
+    ``max_impact`` bound is unsafe are kept but force a
+    ``topk_maxscore`` → exhaustive-TAAT fallback (exact, just slower).
+    Per-request ``Deadline`` budgets (``deadline_s``), bounded
+    retry-with-backoff on transient :class:`DecodeError`\\ s (a failure
+    carrying term coordinates quarantines that segment and the query is
+    re-answered from the rest), and a logical-shard health layer
+    (``n_shards`` + :class:`~repro.ft.StragglerDetector`: ``heartbeat`` /
+    ``check_health`` / ``kill_shard`` / ``heal``) keep the engine answering
+    — partial and flagged, never hung, never silently wrong.
     """
 
     def __init__(self, index, *, mesh=None, axis="data", top_k: int = 10,
-                 plan="auto", probe_width: int = 512):
+                 plan="auto", probe_width: int = 512,
+                 validate: bool = False, deep_validate: bool = False,
+                 deadline_s: float | None = None, max_retries: int = 2,
+                 backoff_s: float = 0.0, fault_hook=None,
+                 n_shards: int = 0, clock=None):
         from dataclasses import replace as _dc_replace
+
+        from repro.ft import StragglerDetector, shard_intervals
 
         self.index = index
         self.mesh = mesh
@@ -330,6 +362,32 @@ class SearchEngine:
         self.plan = plan
         self.probe_width = probe_width
         self.use_skip = mesh is None
+        # -- robustness state ------------------------------------------------
+        self.deadline_s = deadline_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.fault_hook = fault_hook  # fault_hook(attempt, terms, mode):
+        #   raise DecodeError to inject a failure for attempt k (tests/CI)
+        self.clock = clock or time.monotonic
+        self.quarantined: dict = {}  # term -> reason (startup or at-serve)
+        self.bound_unsafe: set = set()  # terms with unsafe max_impact bounds
+        self.serve_stats = {"errors": 0, "retries": 0,
+                            "quarantined_terms": 0, "quarantined_blocks": 0,
+                            "bound_fallbacks": 0, "degraded_responses": 0}
+        # logical shards: the sorted term list partitioned into n_shards
+        # contiguous intervals (ft.elastic.shard_intervals) — the unit of
+        # simulated host loss. A dead shard's terms are dropped from
+        # queries (flagged degraded) until heal() re-partitions ownership.
+        self.term_order = sorted(index.terms)
+        self.n_shards = int(n_shards)
+        self.detector = StragglerDetector()
+        self.dead_shards: set = set()
+        self.shard_of: dict = {}
+        if self.n_shards:
+            self._assign_shards(shard_intervals(len(self.term_order),
+                                                self.n_shards))
+        if validate:
+            self._validate_index(deep=deep_validate)
         if mesh is not None:
             # shard every term's blocks across the mesh, once, up front —
             # the per-posting impact stream too (same block layout, so the
@@ -346,14 +404,110 @@ class SearchEngine:
             self.index = _dc_replace(index, terms=sharded)
         self._stats = []
 
-    def search(self, terms, mode: str = "and", *, stats=None):
-        """One query. ``mode``: 'and' | 'or' → sorted uint32 docids;
-        'topk' (disjunctive TAAT) | 'topk_maxscore' (block-max pruned,
-        bit-identical results) | 'topk_driver' (required-term DAAT) →
-        (docids, int32 scores), ordered (score desc, docid asc)."""
+    # -- startup validation / quarantine ----------------------------------
+    def _validate_index(self, *, deep: bool):
+        """Gate every term at startup (docs/robustness.md).
+
+        Structure + stream validation, skip-table/df invariants, and — when
+        the stream carries a checksum column — a checksum-verified decode
+        through the fused epilogue. Failing terms are quarantined. A
+        :class:`BoundViolationError` (unsafe ``max_impact``, only checked
+        with ``deep=True``) instead marks the term ``bound_unsafe``: its
+        results are still exact under every mode except MaxScore pruning,
+        so the engine keeps it and falls back to exhaustive TAAT.
+        """
+        from repro.robustness import (BoundViolationError, DecodeError,
+                                      decode_checked, validate_array,
+                                      validate_meta)
+
+        for t in self.term_order:
+            tp = self.index.terms[t]
+            if not tp.df:
+                continue
+            try:
+                validate_array(tp.arr, term=t)
+                if tp.impacts is not None:
+                    validate_array(tp.impacts, term=t)
+                if tp.arr.checksums is not None:
+                    decode_checked(tp.arr, plan=self.plan, term=t)
+                if tp.impacts is not None and tp.impacts.checksums is not None:
+                    decode_checked(tp.impacts, plan=self.plan, term=t)
+                validate_meta(tp, deep=deep)
+            except BoundViolationError:
+                self.bound_unsafe.add(t)
+            except DecodeError as e:
+                self._quarantine(t, str(e))
+
+    def _quarantine(self, term, reason: str):
+        if term in self.quarantined:
+            return
+        self.quarantined[term] = reason
+        self.serve_stats["quarantined_terms"] += 1
+        tp = self.index.terms.get(term)
+        if tp is not None:
+            self.serve_stats["quarantined_blocks"] += tp.n_blocks
+
+    # -- logical-shard health (ft.heartbeat + ft.elastic) ------------------
+    def _assign_shards(self, intervals):
+        self.shards = list(intervals)
+        self.shard_of = {t: s for s, (lo, hi) in enumerate(self.shards)
+                         for t in self.term_order[lo:hi]}
+
+    def heartbeat(self, shard: int, step: int, now: float | None = None):
+        """One liveness beat from a logical shard (tests drive sim time)."""
+        self.detector.heartbeat(f"shard{shard}", step,
+                                self.clock() if now is None else now)
+
+    def check_health(self, now: float | None = None) -> dict:
+        """Classify shards via the straggler detector; newly-'dead' shards
+        are killed (their terms drop from queries until :meth:`heal`)."""
+        report = self.detector.stragglers(
+            self.clock() if now is None else now)
+        for host, state in report.items():
+            if state == "dead" and host.startswith("shard"):
+                self.dead_shards.add(int(host[len("shard"):]))
+        return report
+
+    def kill_shard(self, shard: int):
+        """Simulate losing one logical shard (CI degraded-serving smoke)."""
+        self.dead_shards.add(int(shard))
+
+    def heal(self):
+        """Re-partition term ownership over the surviving shards.
+
+        Uses :func:`repro.ft.elastic.reshard_plan` to map each new interval
+        onto slices of the old partition (returned for inspection), then
+        reassigns every term to a live owner — after healing no query is
+        degraded by shard loss (the terms were host-resident all along;
+        what died was the logical serving owner).
+        """
+        from repro.ft import reshard_plan, shard_intervals
+
+        if not self.dead_shards:
+            return []
+        n_alive = self.n_shards - len(self.dead_shards)
+        if n_alive <= 0:
+            raise RuntimeError("no live shards left to heal onto")
+        plan = reshard_plan(len(self.term_order), self.n_shards, n_alive)
+        for s in self.dead_shards:
+            self.detector.hosts.pop(f"shard{s}", None)
+        self.n_shards = n_alive
+        self._assign_shards(shard_intervals(len(self.term_order), n_alive))
+        self.dead_shards = set()
+        return plan
+
+    # -- queries -----------------------------------------------------------
+    def _run_query(self, terms, mode: str, stats, deadline):
         from repro.index import conjunctive, disjunctive, topk
 
-        kw = dict(plan=self.plan, stats=stats, use_skip=self.use_skip)
+        if not terms:  # everything quarantined / dead: empty, well-typed
+            import numpy as np
+
+            empty = np.zeros(0, np.uint32)
+            return (empty if mode in ("and", "or")
+                    else (empty, np.zeros(0, np.int32)))
+        kw = dict(plan=self.plan, stats=stats, use_skip=self.use_skip,
+                  deadline=deadline)
         if mode == "and":
             return conjunctive(self.index, terms,
                                probe_width=self.probe_width, **kw)
@@ -366,6 +520,75 @@ class SearchEngine:
                         probe_width=self.probe_width, **kw)
         raise ValueError(f"unknown query mode {mode!r}")
 
+    def search(self, terms, mode: str = "and", *, stats=None, deadline=None):
+        """One query. ``mode``: 'and' | 'or' → sorted uint32 docids;
+        'topk' (disjunctive TAAT) | 'topk_maxscore' (block-max pruned,
+        bit-identical results) | 'topk_driver' (required-term DAAT) →
+        (docids, int32 scores), ordered (score desc, docid asc).
+
+        Hardened path: quarantined / dead-shard terms are dropped (query
+        flagged ``degraded`` via ``stats``), unsafe-bound terms force
+        ``topk_maxscore`` → exhaustive TAAT, a :class:`DecodeError` raised
+        mid-answer is retried up to ``max_retries`` times (term-coordinate
+        failures quarantine the segment first), and an expired ``deadline``
+        (or ``deadline_s`` default) yields a smaller, flagged result. The
+        query never hangs and never returns silently-wrong data.
+        """
+        from repro.index import QueryStats
+        from repro.robustness import Deadline, DecodeError
+
+        qst = QueryStats()  # per-call: the degraded flag must be per query
+        if deadline is None and self.deadline_s is not None:
+            deadline = Deadline(self.deadline_s, clock=self.clock)
+        live = []
+        for t in dict.fromkeys(terms):
+            if t in self.quarantined:
+                qst.mark_degraded(f"quarantined-term:{t}")
+                tp = self.index.terms.get(t)
+                qst.quarantined_blocks += tp.n_blocks if tp else 0
+            elif self.shard_of.get(t) in self.dead_shards:
+                qst.mark_degraded(f"dead-shard:{self.shard_of[t]}")
+            else:
+                live.append(t)
+        eff = mode
+        if mode == "topk_maxscore" and any(t in self.bound_unsafe
+                                           for t in live):
+            eff = "topk"  # exhaustive TAAT: exact without the bounds
+            qst.bound_fallbacks += 1
+            self.serve_stats["bound_fallbacks"] += 1
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(attempt, live, eff)
+                out = self._run_query(live, eff, qst, deadline)
+                break
+            except DecodeError as e:
+                qst.errors += 1
+                self.serve_stats["errors"] += 1
+                term = getattr(e, "term", None)
+                if term is not None and term in live:
+                    # the segment itself is bad — quarantine it and answer
+                    # the query from the remaining terms
+                    self._quarantine(term, str(e))
+                    live = [t for t in live if t != term]
+                    qst.mark_degraded(f"quarantined-term:{term}")
+                elif attempt >= self.max_retries:
+                    qst.mark_degraded("retries-exhausted")
+                    out = self._run_query([], eff, qst, deadline)
+                    break
+                else:
+                    attempt += 1
+                    qst.retries += 1
+                    self.serve_stats["retries"] += 1
+                    if self.backoff_s:
+                        time.sleep(self.backoff_s * attempt)
+        if qst.degraded:
+            self.serve_stats["degraded_responses"] += 1
+        if stats is not None:
+            stats.merge(qst)
+        return out
+
     def warmup(self, queries):
         """Run each (mode, terms) query once to compile its shapes."""
         for mode, terms in queries:
@@ -373,18 +596,26 @@ class SearchEngine:
 
     def run_workload(self, queries) -> dict:
         """Drive (mode, terms) queries sequentially; aggregate QPS/latency
-        plus the skip-table decode accounting over the whole workload."""
+        plus the skip-table decode accounting over the whole workload.
+        Each query posts a heartbeat for every live logical shard, so a
+        killed shard goes stale and ``check_health`` classifies it dead."""
         from repro.index import QueryStats
 
         st = QueryStats()
+        serve_before = dict(self.serve_stats)
         lat = []
         n_results = 0
+        step = 0
         t_start = time.perf_counter()
         for mode, terms in queries:
             t0 = time.perf_counter()
             out = self.search(terms, mode, stats=st)
             lat.append(time.perf_counter() - t0)
             n_results += len(out[0] if isinstance(out, tuple) else out)
+            for s in range(self.n_shards):
+                if s not in self.dead_shards:
+                    self.heartbeat(s, step)
+            step += 1
         wall = time.perf_counter() - t_start
         # blocks considered = decoded + skip-table-skipped (both per
         # decode/probe pass) + threshold-pruned (never decoded by ANY
@@ -412,6 +643,15 @@ class SearchEngine:
             "impact_ints_decoded": st.impact_ints_decoded,
             "decoded_ints_per_s": round(st.ints_decoded / wall, 1),
             "index": self.index.stats(),
+            # robustness accounting over this workload (docs/robustness.md)
+            "errors": st.errors,
+            "retries": st.retries,
+            "degraded_responses": (self.serve_stats["degraded_responses"]
+                                   - serve_before["degraded_responses"]),
+            "quarantined_terms": self.serve_stats["quarantined_terms"],
+            "quarantined_blocks": self.serve_stats["quarantined_blocks"],
+            "bound_fallbacks": st.bound_fallbacks,
+            "dead_shards": sorted(self.dead_shards),
         }
         self._stats.append(stats)
         return stats
@@ -445,7 +685,8 @@ def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
 
     rng = np.random.default_rng(seed)
     universe = 1 << 22
-    lists = posting_list_group(rng, group_k, n_lists, universe=universe)
+    lists = dict(enumerate(
+        posting_list_group(rng, group_k, n_lists, universe=universe)))
     tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
     index = build_index(lists, tfs=tfs, n_docs=universe)
     n_dev = len(jax.devices())
@@ -464,6 +705,119 @@ def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
           f"{stats['pruned_block_rate']}")
     if record:
         path = record_benchmark("search_engine", stats)
+        print(f"recorded -> {path}")
+    return stats
+
+
+def serve_search_degraded(*, queries: int = 32, group_k: int = 8,
+                          n_lists: int = 16, n_shards: int = 8,
+                          top_k: int = 10, record: bool = True,
+                          seed: int = 0) -> dict:
+    """CI degraded-serving smoke (docs/robustness.md).
+
+    Builds a checksummed index served over ``n_shards`` logical shards,
+    runs a healthy workload, then silences one shard's heartbeats until the
+    straggler detector classifies it dead — queries touching its terms must
+    come back as *flagged partial results* (smaller, ``degraded``, never an
+    exception or a hang). ``heal()`` re-partitions ownership over the
+    survivors and the same workload must return bit-identical to the
+    healthy baseline. Raises ``AssertionError`` on any violation.
+    """
+    import numpy as np
+
+    import jax
+
+    from repro.data.synthetic import posting_list_group, posting_tfs
+    from repro.index import QueryStats, build_index
+
+    rng = np.random.default_rng(seed)
+    universe = 1 << 20
+    lists = dict(enumerate(
+        posting_list_group(rng, group_k, n_lists, universe=universe)))
+    tfs = {t: posting_tfs(rng, len(v)) for t, v in lists.items()}
+    index = build_index(lists, tfs=tfs, n_docs=universe, checksum=True)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+
+    sim = {"t": 0.0}  # injectable clock: the smoke is deterministic
+
+    def clock():
+        sim["t"] += 1e-3  # every observation ticks, like a real clock
+        return sim["t"]
+
+    engine = SearchEngine(index, mesh=mesh, top_k=top_k, validate=True,
+                          n_shards=n_shards, clock=clock)
+    print(f"degraded smoke: {index.n_terms} terms over {n_shards} logical "
+          f"shards, {n_dev} device(s), validate=True "
+          f"(quarantined={engine.serve_stats['quarantined_terms']})")
+    assert not engine.quarantined and not engine.bound_unsafe
+
+    victim = 3
+    lo, hi = engine.shards[victim]
+    victim_terms = engine.term_order[lo:hi]
+    qs = search_queries(rng, index, queries)
+    qs.append(("or", [victim_terms[0]]))  # at least one query is hit
+    engine.warmup(qs)
+
+    clean = [engine.search(terms, mode) for mode, terms in qs]
+    healthy = engine.run_workload(qs)  # every query beats all 8 shards
+    assert healthy["degraded_responses"] == 0, healthy
+
+    # the victim goes silent while the survivors keep beating: its
+    # staleness blows past dead_factor × median step time and
+    # check_health (not a manual kill) takes it out of rotation
+    for i in range(5):
+        sim["t"] += 1.0
+        for s in range(n_shards):
+            if s != victim:
+                engine.heartbeat(s, 1000 + i)
+    report = engine.check_health()
+    assert report.get(f"shard{victim}") == "dead", report
+    assert engine.dead_shards == {victim}
+
+    degraded = 0
+    for (mode, terms), ref in zip(qs, clean):
+        st = QueryStats()
+        out = engine.search(terms, mode, stats=st)
+        touched = any(t in victim_terms for t in terms)
+        assert st.degraded == touched, (mode, terms)
+        if touched:
+            degraded += 1
+            # partial: the surviving terms' exact answer, a well-formed
+            # subset of the healthy result for or/topk modes
+            ids = out[0] if isinstance(out, tuple) else out
+            ref_ids = ref[0] if isinstance(ref, tuple) else ref
+            if mode == "or":
+                assert np.isin(ids, ref_ids).all()
+        else:
+            a = out if isinstance(out, tuple) else (out,)
+            b = ref if isinstance(ref, tuple) else (ref,)
+            assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    assert degraded > 0
+    print(f"killed shard {victim}: {degraded}/{len(qs)} responses flagged "
+          "degraded, the rest bit-identical to healthy")
+
+    plan = engine.heal()
+    assert engine.dead_shards == set() and len(plan) == engine.n_shards
+    for (mode, terms), ref in zip(qs, clean):
+        st = QueryStats()
+        out = engine.search(terms, mode, stats=st)
+        assert not st.degraded
+        a = out if isinstance(out, tuple) else (out,)
+        b = ref if isinstance(ref, tuple) else (ref,)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    stats = {
+        "n_queries": len(qs),
+        "n_shards": n_shards,
+        "n_devices": n_dev,
+        "degraded_responses": degraded,
+        "healed_shards": engine.n_shards,
+        **{k: v for k, v in engine.serve_stats.items()},
+    }
+    print(f"healed onto {engine.n_shards} shards: all {len(qs)} responses "
+          "bit-identical to healthy — degraded-serving smoke OK")
+    if record:
+        path = record_benchmark("search_degraded_smoke", stats)
         print(f"recorded -> {path}")
     return stats
 
@@ -552,6 +906,9 @@ def main():
     ap.add_argument("--top-k", type=int, default=10)
     ap.add_argument("--no-record", action="store_true",
                     help="skip merging engine stats into benchmarks.json")
+    ap.add_argument("--degraded-smoke", action="store_true",
+                    help="search arch: kill one logical shard mid-workload "
+                         "and assert flagged partial results + healing")
     args = ap.parse_args()
 
     if args.devices:
@@ -564,8 +921,12 @@ def main():
 
     # jax must initialize AFTER the device-count flag is set
     if args.arch == "search":
-        serve_search(queries=args.requests, top_k=args.top_k,
-                     record=not args.no_record)
+        if args.degraded_smoke:
+            serve_search_degraded(queries=args.requests, top_k=args.top_k,
+                                  record=not args.no_record)
+        else:
+            serve_search(queries=args.requests, top_k=args.top_k,
+                         record=not args.no_record)
         return
 
     from repro.distributed.api import activate_mesh

@@ -1,0 +1,29 @@
+"""Hardened decode: stream validation, fault injection, degraded serving.
+
+Three layers (docs/robustness.md):
+
+* :mod:`repro.robustness.validate` — the error taxonomy (typed
+  :class:`DecodeError` subclasses carrying block/term coordinates), host-side
+  stream/metadata validators for both formats, and checksum-verified decode
+  (:func:`decode_checked`) riding the fused ``checksum`` epilogue.
+* :mod:`repro.robustness.faultgen` — the seeded corruption generator driving
+  the detect-or-defined-value property tests (tests/test_robustness.py).
+* degraded-mode serving lives with the engines in ``repro.launch.serve``
+  (quarantine, deadlines, retry, shard loss), built on these validators.
+"""
+from .validate import (  # noqa: F401
+    BlockMetaError,
+    BoundViolationError,
+    ChecksumError,
+    ControlMismatchError,
+    Deadline,
+    DecodeError,
+    NonCanonicalError,
+    OverlongRunError,
+    TruncatedPayloadError,
+    decode_checked,
+    validate_array,
+    validate_meta,
+    validate_stream,
+    validate_structure,
+)

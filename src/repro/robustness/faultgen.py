@@ -1,0 +1,244 @@
+"""Seeded corruption generator for the robustness property tests.
+
+Every corruption class takes a *clean* ``CompressedIntArray`` (typically
+encoded with ``checksum=True``) and a seed, and returns a
+:class:`Corruption` — the corrupted array plus the coordinates of what was
+broken — or ``None`` when the class doesn't apply to the array (e.g.
+``continuation_flip`` on Stream VByte, ``base_corrupt`` on a
+non-differential stream). Corruptions only ever touch *used* bytes (bytes
+the decoder actually consumes for the claimed ``counts``) — flipping
+padding is provably harmless by the masking contract and tells the tests
+nothing.
+
+The test contract (tests/test_robustness.py) for every class × format ×
+plan is **detect-or-defined-value**:
+
+* *detected* — ``validate_structure``/``validate_stream``/``decode_checked``
+  raises a typed :class:`~repro.robustness.validate.DecodeError` subclass,
+  or
+* *provably harmless* — with checksums disabled, every vectorized plan
+  decodes the corrupted stream to the same defined value (no crash, dense
+  and banded bit-identical), so serving can degrade instead of dying.
+
+Index-level corruptions (skip table, ``max_impact`` bound, impact payload)
+operate on a ``TermPostings`` and return a replaced copy; whole-shard loss
+is injected at the serving layer (``SearchEngine.kill_shard``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.compressed_array import CompressedIntArray
+from repro.core.vbyte import ref as vref
+from repro.core.vbyte import stream_vbyte as svb
+
+
+@dataclass(frozen=True)
+class Corruption:
+    """One injected fault: the corrupted array + what/where."""
+
+    arr: CompressedIntArray
+    cls: str
+    block: int
+    detail: str
+
+
+def _leaf(arr: CompressedIntArray, name: str) -> np.ndarray:
+    return np.array(np.asarray(getattr(arr, name)))  # writable copy
+
+
+def _rebuild(arr: CompressedIntArray, **leaves) -> CompressedIntArray:
+    return replace(arr, host_enc=None, **leaves)
+
+
+def _pick_block(arr: CompressedIntArray, rng: np.random.Generator) -> int:
+    """A block with at least one claimed integer (corrupting an empty
+    block's padding is harmless by construction)."""
+    live = np.flatnonzero(np.asarray(arr.counts) > 0)
+    if live.size == 0:
+        raise ValueError("array has no non-empty block to corrupt")
+    return int(rng.choice(live))
+
+
+def _used_bytes(arr: CompressedIntArray, b: int) -> int:
+    """Bytes the decoder consumes in block ``b`` for the claimed count."""
+    c = int(np.asarray(arr.counts)[b])
+    if arr.format == "vbyte":
+        return vref.consumed_bytes(np.asarray(arr.payload)[b], c)
+    lengths = svb.unpack_control(np.asarray(arr.control)[b], c) + 1
+    return int(lengths.sum())
+
+
+# --- stream-level corruption classes ---------------------------------------
+def _bit_flip(arr, rng):
+    b = _pick_block(arr, rng)
+    name = "payload" if arr.format == "vbyte" else "data"
+    leaf = _leaf(arr, name)
+    i = int(rng.integers(_used_bytes(arr, b)))
+    bit = int(rng.integers(8))
+    leaf[b, i] ^= 1 << bit
+    return Corruption(_rebuild(arr, **{name: leaf}), "bit_flip", b,
+                      f"{name}[{b},{i}] ^= 1<<{bit}")
+
+
+def _byte_drop(arr, rng):
+    # drop one used byte: the tail shifts left, the last byte pads with 0 —
+    # models a short read / lost byte mid-segment
+    b = _pick_block(arr, rng)
+    name = "payload" if arr.format == "vbyte" else "data"
+    leaf = _leaf(arr, name)
+    used = _used_bytes(arr, b)
+    i = int(rng.integers(used))
+    leaf[b, i:-1] = leaf[b, i + 1:]
+    leaf[b, -1] = 0
+    return Corruption(_rebuild(arr, **{name: leaf}), "byte_drop", b,
+                      f"{name}[{b},{i}] dropped, tail shifted")
+
+
+def _payload_truncate(arr, rng):
+    # vbyte-only: turn the tail of the used region into an unterminated
+    # continuation run, as if the stream were cut mid-integer
+    if arr.format != "vbyte":
+        return None
+    b = _pick_block(arr, rng)
+    leaf = _leaf(arr, "payload")
+    used = _used_bytes(arr, b)
+    i = int(rng.integers(max(used - 2, 0), used))
+    leaf[b, i:] = 0xFF
+    return Corruption(_rebuild(arr, payload=leaf), "payload_truncate", b,
+                      f"payload[{b},{i}:] = 0xFF (no terminator)")
+
+
+def _continuation_flip(arr, rng):
+    if arr.format != "vbyte":
+        return None
+    b = _pick_block(arr, rng)
+    leaf = _leaf(arr, "payload")
+    i = int(rng.integers(_used_bytes(arr, b)))
+    leaf[b, i] ^= 0x80
+    return Corruption(_rebuild(arr, payload=leaf), "continuation_flip", b,
+                      f"payload[{b},{i}] continuation bit flipped")
+
+
+def _control_corrupt(arr, rng):
+    if arr.format != "streamvbyte":
+        return None
+    b = _pick_block(arr, rng)
+    c = int(np.asarray(arr.counts)[b])
+    leaf = _leaf(arr, "control")
+    i = int(rng.integers(-(-c // 4)))  # a control byte with live codes
+    leaf[b, i] ^= int(rng.integers(1, 256))
+    return Corruption(_rebuild(arr, control=leaf), "control_corrupt", b,
+                      f"control[{b},{i}] xored")
+
+
+def _count_over(arr, rng):
+    b = _pick_block(arr, rng)
+    counts = _leaf(arr, "counts")
+    if int(counts[b]) >= arr.block_size:
+        counts[b] = arr.block_size  # keep in range; sum mismatch remains
+        counts[(b + 1) % counts.shape[0]] += 1
+    else:
+        counts[b] += 1
+    return Corruption(_rebuild(arr, counts=counts), "count_over", b,
+                      f"counts[{b}] inflated (sum != n)")
+
+
+def _count_under(arr, rng):
+    b = _pick_block(arr, rng)
+    counts = _leaf(arr, "counts")
+    counts[b] -= 1
+    return Corruption(_rebuild(arr, counts=counts), "count_under", b,
+                      f"counts[{b}] deflated (sum != n)")
+
+
+def _base_corrupt(arr, rng):
+    if not arr.differential or arr.ragged:
+        return None
+    counts = np.asarray(arr.counts)
+    live = np.flatnonzero(counts > 0)
+    live = live[live > 0]  # block 0's base is 0 by convention
+    if live.size == 0:
+        return None
+    b = int(rng.choice(live))
+    bases = _leaf(arr, "bases")
+    bases[b] ^= np.uint32(1 << int(rng.integers(31)))
+    return Corruption(_rebuild(arr, bases=bases), "base_corrupt", b,
+                      f"bases[{b}] bit-flipped")
+
+
+def _checksum_corrupt(arr, rng):
+    if arr.checksums is None:
+        return None
+    b = _pick_block(arr, rng)
+    cs = _leaf(arr, "checksums")
+    cs[b] ^= np.int32(1 << int(rng.integers(31)))
+    return Corruption(_rebuild(arr, checksums=cs), "checksum_corrupt", b,
+                      f"checksums[{b}] bit-flipped")
+
+
+STREAM_CLASSES: dict[str, Callable[..., Any]] = {
+    "bit_flip": _bit_flip,
+    "byte_drop": _byte_drop,
+    "payload_truncate": _payload_truncate,
+    "continuation_flip": _continuation_flip,
+    "control_corrupt": _control_corrupt,
+    "count_over": _count_over,
+    "count_under": _count_under,
+    "base_corrupt": _base_corrupt,
+    "checksum_corrupt": _checksum_corrupt,
+}
+
+
+def corrupt(arr: CompressedIntArray, cls: str, seed: int) -> Corruption | None:
+    """Apply one named corruption class with a fixed seed.
+
+    Returns ``None`` when the class doesn't apply to this array (wrong
+    format / no checksum column / not differential).
+    """
+    try:
+        fn = STREAM_CLASSES[cls]
+    except KeyError:
+        raise ValueError(f"unknown corruption class {cls!r}; expected one "
+                         f"of {tuple(STREAM_CLASSES)}") from None
+    return fn(arr, np.random.default_rng(seed))
+
+
+# --- index-level corruption classes (TermPostings) -------------------------
+def corrupt_skip_table(tp, seed: int):
+    """Break skip-table monotonicity: swap a block's first/last bounds."""
+    rng = np.random.default_rng(seed)
+    b = _pick_block(tp.arr, rng)
+    first = np.array(np.asarray(tp.first_doc))
+    last = np.array(np.asarray(tp.last_doc))
+    first[b], last[b] = last[b] + 1, first[b]
+    return replace(tp, first_doc=first, last_doc=last)
+
+
+def corrupt_max_impact(tp, seed: int):
+    """Understate a block's ``max_impact`` bound (the MaxScore invariant
+    violation: pruning with it silently drops true top-k results)."""
+    rng = np.random.default_rng(seed)
+    mi = np.array(np.asarray(tp.max_impact))
+    live = np.flatnonzero(mi > 0)
+    b = int(rng.choice(live)) if live.size else 0
+    mi[b] = 0
+    return replace(tp, max_impact=mi)
+
+
+def corrupt_impacts(tp, seed: int):
+    """Bit-flip a used byte of the per-posting impact stream."""
+    if tp.impacts is None:
+        return None
+    c = _bit_flip(tp.impacts, np.random.default_rng(seed))
+    return replace(tp, impacts=c.arr)
+
+
+INDEX_CLASSES = {
+    "skip_corrupt": corrupt_skip_table,
+    "max_impact_under": corrupt_max_impact,
+    "impact_bit_flip": corrupt_impacts,
+}

@@ -1,0 +1,364 @@
+"""Stream validation: typed decode errors, host validators, checked decode.
+
+Every decoder in the repo — scalar oracle, jnp grids, both Pallas kernels —
+is branch-free arithmetic over whatever bytes it is handed: a truncated
+payload, a flipped continuation bit, or a corrupted Stream VByte control
+byte produces *defined garbage*, never a crash. That is the right contract
+for the kernels (the paper's §2 point is that lengths are data-dependent, so
+the fast path cannot afford to branch on malformed input), but it means
+corruption flows silently into skip tables, BM25 scores and served results.
+This module is the detection layer on top:
+
+* **Error taxonomy** — :class:`DecodeError` subclasses carrying
+  ``format``/``block``/``term`` coordinates, so a failing segment can be
+  quarantined instead of taking the whole index down
+  (``repro.launch.serve``).
+* **Host validators** — :func:`validate_structure` (block metadata),
+  :func:`validate_stream` (per-block byte-level format checks: truncation,
+  overlong continuation runs, non-canonical encodings, control/data length
+  mismatches), :func:`validate_meta` (skip-table monotonicity, ``df``,
+  block-max ``max_impact`` invariants of a ``TermPostings``).
+* **Checked decode** — :func:`decode_checked`: decode through the fused
+  ``checksum`` epilogue and compare the per-block column written by
+  ``CompressedIntArray.encode(checksum=True)``. The checksum
+  ``cs[b] = Σ_j vals[b,j]·(2j+1) mod 2^32`` is verified in the same decode
+  tile pass (one epilogue, no second HBM round-trip); the odd positional
+  weights are invertible mod 2^32, so *any single-value corruption is
+  always detected* (a change δ≠0 at slot j shifts the checksum by
+  δ·(2j+1) ≠ 0).
+
+Also home of :class:`Deadline`, the injectable-clock per-request budget the
+query engine and serving layer check at strip/chunk boundaries.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.compressed_array import CompressedIntArray, block_checksums
+from repro.core.vbyte import stream_vbyte as svb
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+class DecodeError(ValueError):
+    """A compressed stream (or its metadata) failed validation.
+
+    Carries coordinates — ``format``, ``block`` (index within the stream's
+    block dimension), ``term`` (owning posting-list term, when known) — so
+    callers can quarantine the failing segment (docs/robustness.md).
+    """
+
+    def __init__(self, message: str, *, format: str | None = None,
+                 block: int | None = None, term=None):
+        self.format = format
+        self.block = block
+        self.term = term
+        coords = [f"format={format!r}" if format else None,
+                  f"block={block}" if block is not None else None,
+                  f"term={term!r}" if term is not None else None]
+        coords = ", ".join(c for c in coords if c)
+        super().__init__(f"{message} [{coords}]" if coords else message)
+
+
+class TruncatedPayloadError(DecodeError):
+    """The payload ends before the block's ``counts`` integers terminate."""
+
+
+class OverlongRunError(DecodeError):
+    """A continuation run spans more than 5 bytes (no 32-bit terminator)."""
+
+
+class NonCanonicalError(DecodeError):
+    """A value is encoded in more bytes than the format requires."""
+
+
+class ControlMismatchError(DecodeError):
+    """Stream VByte control-claimed data length exceeds the data stride."""
+
+
+class BlockMetaError(DecodeError):
+    """Block metadata is inconsistent (counts, bases, skip table, bounds)."""
+
+
+class BoundViolationError(BlockMetaError):
+    """A block's ``max_impact`` understates its true impact max — the
+    MaxScore pruning invariant. Pruning with an understated bound silently
+    drops true top-k results, so the serving layer maps this error to an
+    exhaustive-TAAT fallback (exact, just slower) instead of quarantine."""
+
+
+class ChecksumError(DecodeError):
+    """Decoded values disagree with the stored per-block checksum column."""
+
+
+# ---------------------------------------------------------------------------
+# deadlines (used by repro.index.query and repro.launch.serve)
+# ---------------------------------------------------------------------------
+@dataclass
+class Deadline:
+    """A per-request time budget with an injectable clock.
+
+    ``expired()`` is checked at work-unit boundaries (per decoded chunk /
+    per term / per MaxScore strip) — work in flight always completes, so a
+    deadline never yields a torn result, only a *smaller* one flagged
+    ``degraded`` (docs/robustness.md §Degraded-mode semantics). ``clock``
+    is injectable so tests expire deadlines deterministically.
+    """
+
+    budget_s: float
+    clock: callable = time.monotonic
+    start: float = field(default=None)  # type: ignore[assignment]
+    hit: bool = False  # set once expired() first returns True
+
+    def __post_init__(self):
+        if self.start is None:
+            self.start = self.clock()
+
+    def expired(self) -> bool:
+        if not self.hit and self.clock() - self.start >= self.budget_s:
+            self.hit = True
+        return self.hit
+
+    def remaining(self) -> float:
+        return max(0.0, self.budget_s - (self.clock() - self.start))
+
+
+# ---------------------------------------------------------------------------
+# host-side validators
+# ---------------------------------------------------------------------------
+def validate_structure(arr: CompressedIntArray, *, term=None) -> None:
+    """Block-metadata invariants that need no byte-level decoding.
+
+    Raises :class:`BlockMetaError` when ``counts`` fall outside
+    ``[0, block_size]``, when they don't sum to ``n``, or when ``bases``
+    are nonzero for a non-differential (or ragged) stream.
+    """
+    fmt = arr.format
+    counts = np.asarray(arr.counts)
+    bad = np.flatnonzero((counts < 0) | (counts > arr.block_size))
+    if bad.size:
+        raise BlockMetaError(
+            f"count {int(counts[bad[0]])} outside [0, {arr.block_size}]",
+            format=fmt, block=int(bad[0]), term=term)
+    if int(counts.sum()) != arr.n:
+        raise BlockMetaError(
+            f"counts sum to {int(counts.sum())} but n={arr.n}",
+            format=fmt, term=term)
+    if not arr.differential or arr.ragged:
+        bases = np.asarray(arr.bases)
+        bad = np.flatnonzero(bases != 0)
+        if bad.size:
+            raise BlockMetaError(
+                "nonzero base on a stream whose blocks are self-based",
+                format=fmt, block=int(bad[0]), term=term)
+
+
+def _validate_vbyte_block(p: np.ndarray, c: int, b: int, term) -> None:
+    term_pos = np.flatnonzero(p < 128)
+    if term_pos.size < c:
+        # fewer terminator bytes than claimed integers — either the stream
+        # was cut, or a flipped continuation bit merged two integers
+        raise TruncatedPayloadError(
+            f"payload holds {term_pos.size} terminated integers, "
+            f"counts claim {c}", format="vbyte", block=b, term=term)
+    ends = term_pos[:c]
+    starts = np.concatenate(([0], ends[:-1] + 1))
+    lens = ends - starts + 1
+    bad = np.flatnonzero(lens > 5)
+    if bad.size:
+        raise OverlongRunError(
+            f"integer {int(bad[0])} spans {int(lens[bad[0]])} bytes "
+            "(max 5 for 32-bit values)", format="vbyte", block=b, term=term)
+    top = p[ends].astype(np.int64)
+    # multi-byte integer whose most-significant 7-bit group is zero would
+    # fit in fewer bytes; a 5-byte integer with >4 payload bits in the top
+    # group overflows 32 bits (the decoders wrap it mod 2^32)
+    bad = np.flatnonzero(((lens > 1) & (top == 0))
+                         | ((lens == 5) & (top > 0x0F)))
+    if bad.size:
+        j = int(bad[0])
+        raise NonCanonicalError(
+            f"integer {j} ({int(lens[j])} bytes, top group "
+            f"{int(top[j]):#x}) is not canonically encoded",
+            format="vbyte", block=b, term=term)
+
+
+def _validate_svb_block(control: np.ndarray, data: np.ndarray, c: int,
+                        b: int, term) -> None:
+    lengths = svb.unpack_control(control, c) + 1
+    total = int(lengths.sum())
+    if total > data.shape[0]:
+        raise ControlMismatchError(
+            f"control stream claims {total} data bytes, stride is "
+            f"{data.shape[0]}", format="streamvbyte", block=b, term=term)
+    # canonical: the top claimed byte of every multi-byte integer must be
+    # nonzero, else the control code overstates the length
+    ends = np.cumsum(lengths) - 1
+    top = data[ends].astype(np.int64)
+    bad = np.flatnonzero((lengths > 1) & (top == 0))
+    if bad.size:
+        j = int(bad[0])
+        raise NonCanonicalError(
+            f"integer {j} ({int(lengths[j])} bytes) has a zero top byte — "
+            "control code overstates its length",
+            format="streamvbyte", block=b, term=term)
+
+
+def validate_stream(arr: CompressedIntArray, *, term=None,
+                    blocks=None) -> None:
+    """Byte-level format validation of every (or the given) block.
+
+    VByte: the block must hold ``counts[b]`` terminated integers
+    (:class:`TruncatedPayloadError`), no continuation run may exceed 5
+    bytes (:class:`OverlongRunError`), and every integer must be canonical
+    (:class:`NonCanonicalError`). Stream VByte: the control-claimed data
+    length must fit the data stride (:class:`ControlMismatchError`) and
+    every multi-byte integer must use its claimed width
+    (:class:`NonCanonicalError`). Padding bytes beyond the last claimed
+    integer are *not* checked — the decoders mask them, so their content is
+    provably harmless.
+    """
+    counts = np.asarray(arr.counts)
+    idx = range(counts.shape[0]) if blocks is None else blocks
+    if arr.format == "vbyte":
+        payload = np.asarray(arr.payload)
+        for b in idx:
+            c = int(counts[b])
+            if c:
+                _validate_vbyte_block(payload[b], c, int(b), term)
+    else:
+        control = np.asarray(arr.control)
+        data = np.asarray(arr.data)
+        for b in idx:
+            c = int(counts[b])
+            if c:
+                _validate_svb_block(control[b], data[b], c, int(b), term)
+
+
+def validate_array(arr: CompressedIntArray, *, term=None) -> None:
+    """Structure + stream validation (the serving layer's startup gate)."""
+    validate_structure(arr, term=term)
+    validate_stream(arr, term=term)
+
+
+def validate_meta(tp, *, deep: bool = False) -> None:
+    """Skip-table / impact invariants of one ``TermPostings``.
+
+    Cheap checks: per-block ``first_doc <= last_doc``, strictly increasing
+    across non-empty blocks (docids are sorted and unique), ``df`` equal to
+    the stream's ``n``. With ``deep=True`` the postings and impacts are
+    scalar-decoded and the skip table and ``max_impact`` column are checked
+    against the actual block contents — in particular ``max_impact[b]``
+    must bound block ``b``'s true impact max, the invariant MaxScore prunes
+    with (a violated bound silently drops results, so the engine falls back
+    to exhaustive TAAT when this raises — docs/robustness.md).
+    """
+    term = tp.term
+    counts = np.asarray(tp.arr.counts)
+    live = np.flatnonzero(counts > 0)
+    first = np.asarray(tp.first_doc).astype(np.int64)
+    last = np.asarray(tp.last_doc).astype(np.int64)
+    bad = live[first[live] > last[live]]
+    if bad.size:
+        raise BlockMetaError(
+            f"skip table first_doc {int(first[bad[0]])} > last_doc "
+            f"{int(last[bad[0]])}", block=int(bad[0]), term=term)
+    if live.size > 1:
+        gap = np.flatnonzero(first[live][1:] <= last[live][:-1])
+        if gap.size:
+            b = int(live[gap[0] + 1])
+            raise BlockMetaError(
+                "skip table not monotone: first_doc[b] <= last_doc of the "
+                "previous non-empty block", block=b, term=term)
+    if tp.df != int(counts.sum()):
+        raise BlockMetaError(
+            f"df={tp.df} but posting blocks hold {int(counts.sum())} ids",
+            term=term)
+    if not deep:
+        return
+    grid = _scalar_grid(tp.arr)
+    B = tp.arr.block_size
+    valid = np.arange(B)[None, :] < counts[:, None]
+    for b in live:
+        docs = grid[b, : counts[b]]
+        if int(docs[0]) != int(first[b]) or int(docs[-1]) != int(last[b]):
+            raise BlockMetaError(
+                f"skip table ({int(first[b])}, {int(last[b])}) disagrees "
+                f"with decoded block range ({int(docs[0])}, "
+                f"{int(docs[-1])})", block=int(b), term=term)
+    if tp.impacts is not None and tp.max_impact is not None:
+        imp = _scalar_grid(tp.impacts)
+        actual = np.where(valid, imp, 0).max(axis=1).astype(np.int64)
+        mi = np.asarray(tp.max_impact).astype(np.int64)
+        bad = np.flatnonzero(mi < actual)
+        if bad.size:
+            b = int(bad[0])
+            raise BoundViolationError(
+                f"max_impact {int(mi[b])} < actual block max "
+                f"{int(actual[b])} — MaxScore bounds are unsafe",
+                block=b, term=term)
+
+
+def _scalar_grid(arr: CompressedIntArray) -> np.ndarray:
+    """Scalar-oracle decode to the padded block grid (host, trusted path)."""
+    flat = arr.decode_scalar_oracle()
+    counts = np.asarray(arr.counts)
+    grid = np.zeros((counts.shape[0], arr.block_size), np.uint32)
+    mask = np.arange(arr.block_size)[None, :] < counts[:, None]
+    grid[mask] = flat
+    return grid
+
+
+# ---------------------------------------------------------------------------
+# checksum-verified decode (the fused `checksum` epilogue's host half)
+# ---------------------------------------------------------------------------
+def decode_checked(arr: CompressedIntArray, *, plan="auto",
+                   term=None) -> np.ndarray:
+    """Decode to the ``uint32 [n_blocks, block_size]`` grid, verified.
+
+    Runs the fused ``checksum`` epilogue — the decoded tile and its
+    position-weighted per-block checksum come out of the *same* kernel pass
+    — and compares against the column stored at encode time
+    (``encode(checksum=True)``). Raises :class:`ChecksumError` with the
+    first mismatching block. Works across the whole parity matrix
+    (pallas/jnp × fused/unfused × dense/banded × sharded); on clean input
+    the returned grid is bit-exact with ``decode_blocked``'s (same decode
+    core, identity epilogue on the value path).
+
+    Sharded arrays may carry more device blocks than checksum rows
+    (``shard()`` pads the block dim with count-0 blocks, which checksum to
+    0 by construction) — only stored rows are compared, padding rows must
+    be 0.
+    """
+    from repro.kernels.vbyte_decode import dispatch
+
+    if arr.checksums is None:
+        raise ValueError(
+            "array carries no checksum column — encode with checksum=True "
+            "(or validate via validate_array/scalar re-decode instead)")
+    vals, cs = dispatch.decode(arr, epilogue="checksum", plan=plan)
+    cs = np.asarray(cs).reshape(-1).astype(np.uint32)
+    stored = np.asarray(arr.checksums).reshape(-1).astype(np.uint32)
+    k = min(stored.shape[0], cs.shape[0])
+    bad = np.flatnonzero(cs[:k] != stored[:k])
+    if bad.size == 0 and cs.shape[0] > k:
+        bad = k + np.flatnonzero(cs[k:] != 0)  # shard-padding blocks
+    if bad.size:
+        b = int(bad[0])
+        want = int(stored[b]) if b < k else 0
+        raise ChecksumError(
+            f"block checksum {int(cs[b]):#010x} != stored {want:#010x} "
+            f"({bad.size} corrupt block(s))",
+            format=arr.format, block=b, term=term)
+    return np.asarray(vals).astype(np.int64).astype(np.uint32).reshape(
+        cs.shape[0], arr.block_size)
+
+
+def expected_checksums(arr: CompressedIntArray) -> np.ndarray:
+    """Recompute the checksum column from a trusted scalar decode
+    (tests/tools; the fast path is the fused epilogue above)."""
+    return block_checksums(_scalar_grid(arr), np.asarray(arr.counts))
