@@ -1,10 +1,12 @@
 """Compression-rate table: bits/int by posting-list length group (paper §V:
 'this value ranges from 8 to slightly less than 16'), plus blocked-layout
 metadata overhead and the framework integrations (tokens, adjacency,
-candidate lists). Both on-device formats are reported side by side: classic
-VByte (7 payload bits/byte) and Stream VByte (whole payload bytes + 2-bit
-control codes) — the latter trades a small bits/int penalty for scan-free
-decoding (docs/formats.md)."""
+candidate lists). Every registered on-device format is reported side by
+side — classic VByte (7 payload bits/byte), Stream VByte (whole payload
+bytes + 2-bit control codes) and binary packing (per-block bit width) —
+plus the DP-partitioned mixed-codec index (``format="auto"``), so the
+compression-vs-throughput trade (docs/formats.md, docs/index.md) is one
+table per group."""
 from __future__ import annotations
 
 import numpy as np
@@ -14,41 +16,48 @@ from repro.data.graph import compress_adjacency
 from repro.data.sampler import CSRGraph
 from repro.data.synthetic import CLUEWEB_DOCS, random_graph, token_stream
 
+FORMATS = ("vbyte", "streamvbyte", "binpack")
+
 
 def run(groups=(10, 12, 14, 16, 18, 20, 22), lists_per_group: int = 4):
     rng = np.random.default_rng(11)
     rows = []
     for k in groups:
-        bits, ratios, overheads = [], [], []
-        svb_bits, svb_ratios = [], []
+        stats = {f: {"bits": [], "ratio": []} for f in FORMATS}
+        overheads = []
         for _ in range(lists_per_group):
             length = int(rng.integers(1 << k, 1 << (k + 1)))
             length = min(length, 1 << 21)
             ids = np.sort(rng.choice(CLUEWEB_DOCS, size=length,
                                      replace=False)).astype(np.uint64)
-            arr = CompressedIntArray.encode(ids, differential=True)
-            bits.append(arr.bits_per_int)
-            ratios.append(arr.compression_ratio)
-            overheads.append(arr.enc.device_bytes / max(arr.enc.payload_bytes, 1) - 1)
-            svb = CompressedIntArray.encode(ids, format="streamvbyte",
-                                            differential=True)
-            svb_bits.append(svb.bits_per_int)
-            svb_ratios.append(svb.compression_ratio)
-        rows.append({"group_K": k, "bits_per_int": round(float(np.mean(bits)), 2),
-                     "svb_bits_per_int": round(float(np.mean(svb_bits)), 2),
-                     "ratio_vs_u32": round(float(np.mean(ratios)), 2),
-                     "svb_ratio_vs_u32": round(float(np.mean(svb_ratios)), 2),
-                     "block_overhead": round(float(np.mean(overheads)), 3)})
+            for f in FORMATS:
+                arr = CompressedIntArray.encode(ids, format=f,
+                                                differential=True)
+                stats[f]["bits"].append(arr.bits_per_int)
+                stats[f]["ratio"].append(arr.compression_ratio)
+                if f == "vbyte":
+                    overheads.append(
+                        arr.enc.device_bytes / max(arr.enc.payload_bytes, 1) - 1)
+        rows.append({
+            "group_K": k,
+            "formats": {f: {
+                "bits_per_int": round(float(np.mean(stats[f]["bits"])), 2),
+                "ratio_vs_u32": round(float(np.mean(stats[f]["ratio"])), 2),
+            } for f in FORMATS},
+            "block_overhead": round(float(np.mean(overheads)), 3),
+        })
     return rows
 
 
-def run_posting_index(groups=(10, 12, 14, 16), lists_per_group: int = 4):
+def run_posting_index(groups=(10, 12, 14, 16, 18), lists_per_group: int = 4):
     """Index-level compression per length group K, next to decode speed.
 
     Builds a real inverted index per group (``repro.index.build_index``:
-    d-gaps + skip tables, both formats) from the same ClueWeb09-style
-    posting lists and reports corpus-weighted bits/int against the paper's
-    §V figure ('this value ranges from 8 to slightly less than 16').
+    d-gaps + skip tables) from the same ClueWeb09-style posting lists for
+    every uniform format AND the DP-partitioned mixed-codec ``auto`` path,
+    and reports corpus-weighted bits/int against the paper's §V figure
+    ('this value ranges from 8 to slightly less than 16'). The tracked
+    scoreboard claim: ``auto`` ≤ every uniform single-codec at every K.
     """
     from repro.data.synthetic import posting_list_group
     from repro.index import build_index
@@ -58,11 +67,10 @@ def run_posting_index(groups=(10, 12, 14, 16), lists_per_group: int = 4):
     for k in groups:
         lists = posting_list_group(rng, k, lists_per_group,
                                    universe=CLUEWEB_DOCS)
-        row = {"group_K": k, "paper_range_bits": [8, 16]}
-        for fmt, key in (("vbyte", "bits_per_int"),
-                         ("streamvbyte", "svb_bits_per_int")):
+        row = {"group_K": k, "paper_range_bits": [8, 16], "formats": {}}
+        for fmt in FORMATS + ("auto",):
             idx = build_index(lists, format=fmt, n_docs=CLUEWEB_DOCS)
-            row[key] = round(idx.bits_per_int, 2)
+            row["formats"][fmt] = round(idx.bits_per_int, 2)
         rows.append(row)
     return rows
 

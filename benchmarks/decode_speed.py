@@ -45,6 +45,20 @@ def _bench(fn, *args, reps=5, warmup=2):
     return (time.perf_counter() - t0) / reps, out
 
 
+FORMATS = ("vbyte", "streamvbyte", "binpack")
+
+
+def _format_decoder(fmt):
+    """The jitted vectorized jnp decoder for one format."""
+    if fmt == "vbyte":
+        from repro.core.vbyte.masked import decode_blocked
+    elif fmt == "streamvbyte":
+        from repro.core.vbyte.stream_masked import decode_blocked
+    else:
+        from repro.core.vbyte.binpack_masked import decode_blocked
+    return decode_blocked
+
+
 def run(groups=(14, 16, 18, 20), n_ints: int = 1 << 18, reps: int = 8,
         universe: int = CLUEWEB_DOCS):
     rng = np.random.default_rng(7)
@@ -57,23 +71,7 @@ def run(groups=(14, 16, 18, 20), n_ints: int = 1 << 18, reps: int = 8,
         gaps = venc.delta_encode(ids)
         gaps = np.maximum((gaps.astype(np.float64) * scale / gaps.mean()), 1).astype(np.uint64)
         values = np.cumsum(gaps)
-        arr = CompressedIntArray.encode(values, differential=True)
-        svb_arr = CompressedIntArray.encode(values, format="streamvbyte",
-                                            differential=True)
-
-        ops = arr.device_operands()
-        svb_ops = svb_arr.device_operands()
-        n = arr.n
-
-        # vectorized masked decode (jitted), both formats
-        from repro.core.vbyte.masked import decode_blocked
-        from repro.core.vbyte.stream_masked import decode_blocked as svb_decode
-        t_masked, _ = _bench(
-            lambda: decode_blocked(**ops, block_size=128, differential=True),
-            reps=reps, warmup=3)
-        t_svb, _ = _bench(
-            lambda: svb_decode(**svb_ops, block_size=128, differential=True),
-            reps=reps, warmup=3)
+        n = len(values)
 
         # scalar Algorithm-1 (jitted while_loop) on the same data as a stream
         stream = venc.encode_stream(venc.delta_encode(values))
@@ -82,16 +80,22 @@ def run(groups=(14, 16, 18, 20), n_ints: int = 1 << 18, reps: int = 8,
             d, n, differential=True, nbytes=len(stream))[0])
         t_scalar, _ = _bench(scalar, sdata, reps=max(2, reps // 2), warmup=2)
 
-        rows.append({
-            "group_K": k,
-            "bits_per_int": round(arr.bits_per_int, 2),
-            "svb_bits_per_int": round(svb_arr.bits_per_int, 2),
-            "scalar_mis": round(n / t_scalar / 1e6, 1),
-            "masked_mis": round(n / t_masked / 1e6, 1),
-            "svb_mis": round(n / t_svb / 1e6, 1),
-            "speedup": round(t_scalar / t_masked, 2),
-            "svb_speedup": round(t_scalar / t_svb, 2),
-        })
+        row = {"group_K": k, "scalar_mis": round(n / t_scalar / 1e6, 1),
+               "formats": {}}
+        for fmt in FORMATS:
+            arr = CompressedIntArray.encode(values, format=fmt,
+                                            differential=True)
+            ops = arr.device_operands()
+            dec = _format_decoder(fmt)
+            t, _ = _bench(
+                lambda: dec(**ops, block_size=128, differential=True),
+                reps=reps, warmup=3)
+            row["formats"][fmt] = {
+                "bits_per_int": round(arr.bits_per_int, 2),
+                "mis": round(n / t / 1e6, 1),
+                "speedup_vs_scalar": round(t_scalar / t, 2),
+            }
+        rows.append(row)
     return rows
 
 
@@ -143,7 +147,7 @@ def run_fused(n_ints: int = 1 << 18, d: int = 8, vocab: int = 1 << 16,
     query = jnp.asarray(rng.standard_normal((1, d)).astype(np.float32))
 
     rows = []
-    for fmt in ("vbyte", "streamvbyte"):
+    for fmt in FORMATS:
         arr = CompressedIntArray.encode(values, format=fmt, differential=True)
         ops = arr.device_operands()
         nb = arr.n_blocks
@@ -211,14 +215,18 @@ def run_decode_cores(n_ints: int = 1 << 18, reps: int = 8,
     ``benchmarks/report.py`` excludes those rows from headline tables.
     """
     from repro.kernels.vbyte_decode import banded, ops
+    from repro.kernels.vbyte_decode.binpack_kernel import binpack_decode_tile
     from repro.kernels.vbyte_decode.kernel import decode_tile, prefix_sum_tile
     from repro.kernels.vbyte_decode.stream_kernel import stream_decode_tile
 
     rng = np.random.default_rng(5)
+    # sorted sample of the 50M-doc universe: dense low-width gap blocks
+    # (block max width ~13-14 bits) — the binpack-favourable regime the
+    # scoreboard tracks binpack tiles/sec ≥ streamvbyte on
     values = np.sort(rng.integers(0, CLUEWEB_DOCS, size=n_ints)).astype(np.uint64)
     B = block_size
     rows = []
-    for fmt in ("vbyte", "streamvbyte"):
+    for fmt in FORMATS:
         arr = CompressedIntArray.encode(values, format=fmt, block_size=B,
                                         differential=True)
         od = arr.device_operands()
@@ -239,7 +247,7 @@ def run_decode_cores(n_ints: int = 1 << 18, reps: int = 8,
                                              chunk_width=core_w)
                     return prefix_sum_tile(out, valid, bases)
                 return lambda: f(*fmt_args, counts2, bases2)
-        else:
+        elif fmt == "streamvbyte":
             S = od["data"].shape[1]
             fmt_args = (jnp.asarray(od["control"]), jnp.asarray(od["data"]))
 
@@ -251,8 +259,25 @@ def run_decode_cores(n_ints: int = 1 << 18, reps: int = 8,
                                                     chunk_width=core_w)
                     return prefix_sum_tile(out, valid, bases)
                 return lambda: f(*fmt_args, counts2, bases2)
+        else:
+            S = od["data"].shape[1]
+            fmt_args = (jnp.asarray(np.asarray(od["widths"])
+                                    .reshape(-1, 1).astype(np.uint8)),
+                        jnp.asarray(od["data"]))
 
-        widths = [None] + [w for w in chunk_widths if w <= B]
+            def make(core_w):
+                @jax.jit
+                def f(w8, data, counts, bases):
+                    out, valid = binpack_decode_tile(w8, data, counts,
+                                                     block_size=B,
+                                                     chunk_width=core_w)
+                    return prefix_sum_tile(out, valid, bases)
+                return lambda: f(*fmt_args, counts2, bases2)
+
+        # binpack has no length scan — the chunk axis doesn't exist, so
+        # only the dense core is measured for it
+        widths = [None] + ([] if fmt == "binpack"
+                           else [w for w in chunk_widths if w <= B])
         times = _bench_interleaved(
             {str(w): make(w) for w in widths}, reps)
         t_dense = times["None"]
@@ -285,13 +310,19 @@ def run_decode_cores(n_ints: int = 1 << 18, reps: int = 8,
         # time proves nothing about the kernel — keep it out of headlines
         ib = min(interpret_blocks, nb)
         small = {k: jnp.asarray(np.asarray(v)[:ib]) for k, v in od.items()}
-        for w in (None, 64 if B >= 64 else 8):
+        interp_widths = ((None,) if fmt == "binpack"
+                         else (None, 64 if B >= 64 else 8))
+        for w in interp_widths:
             if fmt == "vbyte":
                 fn = lambda w=w: ops.vbyte_decode_blocked(
                     **small, block_size=B, differential=True, chunk_width=w,
                     interpret=True)
-            else:
+            elif fmt == "streamvbyte":
                 fn = lambda w=w: ops.stream_vbyte_decode_blocked(
+                    **small, block_size=B, differential=True, chunk_width=w,
+                    interpret=True)
+            else:
+                fn = lambda w=w: ops.binpack_decode_blocked(
                     **small, block_size=B, differential=True, chunk_width=w,
                     interpret=True)
             t, _ = _bench(fn, reps=2, warmup=1)

@@ -134,6 +134,64 @@ def index_query_table(device_rows: list[dict]) -> str:
     return out
 
 
+def _row_formats(rows: list[dict]) -> list[str]:
+    """Ordered union of the per-row format columns — the tables derive
+    their columns from the data, so a new codec shows up without touching
+    the renderer (the old renderers hardcoded the vbyte/streamvbyte pair)."""
+    seen: list[str] = []
+    for r in rows:
+        for f in r.get("formats", {}):
+            if f not in seen:
+                seen.append(f)
+    return seen
+
+
+def compression_table(rows: list[dict]) -> str:
+    """Per-group bits/int + ratio, one column pair per format."""
+    fmts = _row_formats(rows)
+    out = ("| K | " + " | ".join(f"{f} b/i | {f} ratio" for f in fmts)
+           + " | overhead |\n" + "|" + "---|" * (2 * len(fmts) + 2) + "\n")
+    for r in rows:
+        cells = []
+        for f in fmts:
+            d = r["formats"].get(f)
+            cells += ([str(d["bits_per_int"]), f"{d['ratio_vs_u32']}x"]
+                      if d else ["—", "—"])
+        out += (f"| {r['group_K']} | " + " | ".join(cells)
+                + f" | {r.get('block_overhead', '—')} |\n")
+    return out
+
+
+def posting_index_table(rows: list[dict]) -> str:
+    """Index-level bits/int per group: every uniform codec + the
+    DP-partitioned mixed-codec ``auto`` column (scoreboard: auto ≤ vbyte
+    at every K, paper range 8..16)."""
+    fmts = _row_formats(rows)
+    out = ("| K | " + " | ".join(fmts) + " |\n"
+           + "|" + "---|" * (len(fmts) + 1) + "\n")
+    for r in rows:
+        cells = [str(r["formats"].get(f, "—")) for f in fmts]
+        out += f"| {r['group_K']} | " + " | ".join(cells) + " |\n"
+    return out
+
+
+def decode_speed_table(rows: list[dict]) -> str:
+    """Fig.-2 decode rate per group: scalar baseline + every format."""
+    fmts = _row_formats(rows)
+    out = ("| K | scalar Mint/s | "
+           + " | ".join(f"{f} Mint/s | {f} speedup" for f in fmts)
+           + " |\n" + "|" + "---|" * (2 * len(fmts) + 2) + "\n")
+    for r in rows:
+        cells = []
+        for f in fmts:
+            d = r["formats"].get(f)
+            cells += ([str(d["mis"]), f"{d['speedup_vs_scalar']}x"]
+                      if d else ["—", "—"])
+        out += (f"| {r['group_K']} | {r['scalar_mis']} | "
+                + " | ".join(cells) + " |\n")
+    return out
+
+
 def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     """Render the headline perf tables from the tracked benchmarks JSON."""
     try:
@@ -145,6 +203,18 @@ def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     if "decode_kernel" in d:
         out += ("## Decode-tile cores (dense vs banded)\n\n"
                 + decode_kernel_table(d["decode_kernel"]))
+    if "decode_speed" in d and d["decode_speed"] and \
+            "formats" in d["decode_speed"][0]:
+        out += ("\n## Decode speed by posting-list group (Fig. 2)\n\n"
+                + decode_speed_table(d["decode_speed"]))
+    if "compression_ratio" in d and d["compression_ratio"] and \
+            "formats" in d["compression_ratio"][0]:
+        out += ("\n## Compression by group (§V)\n\n"
+                + compression_table(d["compression_ratio"]))
+    if "posting_index" in d and d["posting_index"] and \
+            "formats" in d["posting_index"][0]:
+        out += ("\n## Posting-index bits/int (uniform codecs vs DP auto)\n\n"
+                + posting_index_table(d["posting_index"]))
     if "fused" in d:
         out += "\n## Fused epilogues\n\n" + fused_table(d["fused"])
     if "index_query" in d:

@@ -55,11 +55,12 @@ def bench_kernel_check(quick: bool = False):
             b = vbyte_decode_blocked_ref(**ops, block_size=128, differential=diff)
             assert np.array_equal(np.asarray(a), np.asarray(b))
             checked += 1
-            svb = CompressedIntArray.encode(vals, format="streamvbyte",
-                                            differential=diff)
-            assert np.array_equal(svb.decode(plan="kernel"),
-                                  svb.decode_scalar_oracle())
-            checked += 1
+            for fmt in ("streamvbyte", "binpack"):
+                other = CompressedIntArray.encode(vals, format=fmt,
+                                                  differential=diff)
+                assert np.array_equal(other.decode(plan="kernel"),
+                                      other.decode_scalar_oracle()), fmt
+                checked += 1
 
     # banded-vs-dense parity across (chunk W, block_tile, stride_multiple)
     # combos: the chunked scatter must be a pure perf knob — identical
@@ -91,7 +92,7 @@ def bench_kernel_check(quick: bool = False):
     vals = np.sort(rng.integers(0, 4096, 640)).astype(np.uint64)
     table = jnp.asarray(rng.standard_normal((4096, 16)).astype(np.float32))
     query = jnp.asarray(rng.standard_normal((1, 16)).astype(np.float32))
-    for fmt in ("vbyte", "streamvbyte"):
+    for fmt in ("vbyte", "streamvbyte", "binpack"):
         arr = CompressedIntArray.encode(vals, format=fmt, differential=True)
         ops = arr.device_operands()
         eb = jnp.asarray(rng.integers(0, 4096, (arr.n_blocks, 128))
@@ -119,7 +120,7 @@ def bench_kernel_check(quick: bool = False):
     sharded_cases = 0
     if len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-        for fmt in ("vbyte", "streamvbyte"):
+        for fmt in ("vbyte", "streamvbyte", "binpack"):
             arr = CompressedIntArray.encode(vals, format=fmt,
                                             differential=True)
             sh = arr.shard(mesh)
@@ -138,7 +139,7 @@ def bench_kernel_check(quick: bool = False):
             sharded_cases += 2
             checked += 2
     return {"kernel_vs_oracle_cases": checked, "all_equal": True,
-            "formats": ["vbyte", "streamvbyte"],
+            "formats": ["vbyte", "streamvbyte", "binpack"],
             "fused_epilogues": ["bag_sum", "dot_score", "adjacency_rebase"],
             "sharded_parity_cases": sharded_cases,
             "devices": len(jax.devices())}
@@ -197,11 +198,12 @@ def main():
         print("== decode speed by posting-list group (paper Fig. 2) ==")
         rows = decode_speed.run(n_ints=n)
         for r in rows:
-            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
-                  f"(svb {r['svb_bits_per_int']:>5}) "
-                  f"scalar={r['scalar_mis']:>7} mis  masked={r['masked_mis']:>8} mis "
-                  f" svb={r['svb_mis']:>8} mis  speedup={r['speedup']}x "
-                  f"(svb {r['svb_speedup']}x)")
+            per = "  ".join(
+                f"{f}={d['mis']:>8} mis ({d['bits_per_int']}b/i, "
+                f"{d['speedup_vs_scalar']}x)"
+                for f, d in r["formats"].items())
+            print(f"  K={r['group_K']:>2} scalar={r['scalar_mis']:>7} mis  "
+                  + per)
         results["decode_speed"] = rows
         print("== buffered vs full-stream decode (paper §V) ==")
         b = decode_speed.run_buffered(n_ints=n)
@@ -215,18 +217,24 @@ def main():
         from benchmarks import compression_ratio
 
         print("== compression by group (paper §V) ==")
-        rows = compression_ratio.run()
+        rows = (compression_ratio.run(groups=(10, 12, 14, 16, 18),
+                                      lists_per_group=2)
+                if args.quick else compression_ratio.run())
         for r in rows:
-            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
-                  f"(svb {r['svb_bits_per_int']:>5}) "
-                  f"ratio={r['ratio_vs_u32']}x (svb {r['svb_ratio_vs_u32']}x) "
+            per = " ".join(
+                f"{f}={d['bits_per_int']:>5}b/i ({d['ratio_vs_u32']}x)"
+                for f, d in r["formats"].items())
+            print(f"  K={r['group_K']:>2} {per} "
                   f"overhead={r['block_overhead']}")
         results["compression_ratio"] = rows
         print("== posting-list index compression (bits/int vs paper 8..16) ==")
-        idx_rows = compression_ratio.run_posting_index()
+        idx_rows = compression_ratio.run_posting_index(
+            lists_per_group=2 if args.quick else 4)
         for r in idx_rows:
-            print(f"  K={r['group_K']:>2} bits/int={r['bits_per_int']:>5} "
-                  f"(svb {r['svb_bits_per_int']:>5})")
+            per = " ".join(f"{f}={b:>5}" for f, b in r["formats"].items())
+            print(f"  K={r['group_K']:>2} bits/int: {per}")
+            assert r["formats"]["auto"] <= r["formats"]["vbyte"] + 1e-9, \
+                f"DP-partitioned index lost to uniform vbyte at K={r['group_K']}"
         results["posting_index"] = idx_rows
         integ = compression_ratio.run_integrations()
         print(f"== framework id-stream compression ==\n  {integ}")

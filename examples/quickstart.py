@@ -57,3 +57,13 @@ for v in (1, 128, 16384):
 svb = CompressedIntArray.encode(docids, format="streamvbyte", differential=True)
 assert np.array_equal(svb.decode(plan="kernel").astype(np.uint64), docids)
 print(f"streamvbyte: {svb.bits_per_int:.2f} bits/int, kernel round-trips ✓")
+
+# 9. binary packing: each block stores its gaps at the block's max bit
+# width — no per-int framing at all, so it is usually both the smallest
+# AND the fastest to decode on locally-uniform gaps (docs/formats.md).
+# `build_index(..., format="auto")` picks codec + block boundaries per
+# posting list with a shortest-path DP (docs/index.md §Optimal
+# partitioning).
+bpk = CompressedIntArray.encode(docids, format="binpack", differential=True)
+assert np.array_equal(bpk.decode(plan="kernel").astype(np.uint64), docids)
+print(f"binpack: {bpk.bits_per_int:.2f} bits/int, kernel round-trips ✓")

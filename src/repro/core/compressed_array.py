@@ -15,7 +15,7 @@ and ``bases``) are traced leaves, while ``format`` / ``block_size`` /
 models and kernels instead of unpacking ``device_operands()`` dicts, and
 two arrays with the same shapes share one jit trace.
 
-Two on-device formats are supported, selected with ``format=``:
+Three on-device formats are supported, selected with ``format=``:
 
 * ``"vbyte"`` (default) — the classic format of Plaisance, Kurz & Lemire:
   7 payload bits per byte, the high bit a continuation flag. Densest for
@@ -34,11 +34,24 @@ Two on-device formats are supported, selected with ``format=``:
   typical gap distributions — and decode is faster because byte→integer
   routing comes straight from the control stream.
 
+* ``"binpack"`` — binary packing (Lemire & Boytsov): every block's values
+  are packed at the block's max bit width ``w``, recorded in a one-byte
+  per-block width column. Integer ``j`` starts at bit ``j·w`` — affine,
+  so decode needs **no boundary recovery and no length prefix sum at
+  all** (``repro.core.vbyte.binpack_masked``,
+  ``repro.kernels.vbyte_decode.binpack_kernel``): the fastest decode of
+  the three. Compression is width-outlier-sensitive (one large gap costs
+  the whole block), which the index builder's optimal block partition
+  turns back into a win (``repro.index.partition``). Blocked operands:
+  ``widths [n_blocks, 1]`` + ``data [n_blocks, stride]`` + ``counts`` +
+  ``bases``.
+
 Rule of thumb (see docs/formats.md): pick ``"vbyte"`` when bits/int is the
-binding constraint, ``"streamvbyte"`` when decode throughput is. Both
+binding constraint, ``"streamvbyte"`` for fast decode on mixed-width gaps,
+``"binpack"`` for the fastest decode on width-homogeneous blocks. All
 formats share the blocked SPMD layout (``block_size`` integers per block,
 per-block ``counts``/``bases``) so every block decodes independently, and
-both support fused differential (delta) decoding of sorted id lists.
+all support fused differential (delta) decoding of sorted id lists.
 
 Because blocks are independent, the block dimension is also the natural
 **sharding** dimension: ``arr.shard(mesh, axis="data")`` places the block
@@ -58,16 +71,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .vbyte import binpack as bpk
 from .vbyte import encode as venc
 from .vbyte import ref as vref
 from .vbyte import stream_vbyte as svb
 
-FORMATS = ("vbyte", "streamvbyte")
+FORMATS = ("vbyte", "streamvbyte", "binpack")
 
 # pytree leaves per format, in flatten order (the block dim leads every leaf)
 FORMAT_LEAVES = {
     "vbyte": ("payload", "counts", "bases"),
     "streamvbyte": ("control", "data", "counts", "bases"),
+    "binpack": ("widths", "data", "counts", "bases"),
 }
 
 def block_checksums(grid: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -110,7 +125,8 @@ class CompressedIntArray:
 
     * ``payload`` — ``uint8 [n_blocks, stride]`` (``format="vbyte"`` only)
     * ``control`` — ``uint8 [n_blocks, block_size // 4]`` (streamvbyte)
-    * ``data``    — ``uint8 [n_blocks, data_stride]`` (streamvbyte)
+    * ``widths``  — ``uint8 [n_blocks, 1]`` per-block bit width (binpack)
+    * ``data``    — ``uint8 [n_blocks, data_stride]`` (streamvbyte/binpack)
     * ``counts``  — ``int32 [n_blocks]`` valid integers per block
     * ``bases``   — ``uint32 [n_blocks]`` differential carry-in
 
@@ -120,7 +136,8 @@ class CompressedIntArray:
 
     payload: Any = None  # vbyte
     control: Any = None  # streamvbyte
-    data: Any = None  # streamvbyte
+    widths: Any = None  # binpack
+    data: Any = None  # streamvbyte / binpack
     counts: Any = None
     bases: Any = None
     format: str = "vbyte"
@@ -203,7 +220,7 @@ class CompressedIntArray:
     @classmethod
     def encode(
         cls,
-        values: np.ndarray,
+        values: np.ndarray | None = None,
         *,
         format: str = "vbyte",
         block_size: int = 128,
@@ -211,32 +228,27 @@ class CompressedIntArray:
         stride_multiple: int = 128,
         wrap: bool = False,
         checksum: bool = False,
+        meta=None,
     ) -> "CompressedIntArray":
-        if format == "vbyte":
-            enc = venc.encode_blocked(
-                values,
-                block_size=block_size,
-                differential=differential,
-                stride_multiple=stride_multiple,
-                wrap=wrap,
-            )
-        elif format == "streamvbyte":
-            enc = svb.encode_blocked(
-                values,
-                block_size=block_size,
-                differential=differential,
-                stride_multiple=stride_multiple,
-                wrap=wrap,
-            )
-        else:
+        """Encode ``values`` (or a pre-computed ``BlockedMeta`` via
+        ``meta=``, sharing one metadata pass with the skip-table path)."""
+        encoders = {"vbyte": venc.encode_blocked,
+                    "streamvbyte": svb.encode_blocked,
+                    "binpack": bpk.encode_blocked}
+        if format not in encoders:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
+        if meta is None:
+            meta = venc.prepare_blocked(
+                values, block_size=block_size, differential=differential,
+                wrap=wrap)
+        enc = encoders[format](stride_multiple=stride_multiple, meta=meta)
         arr = cls._from_encoding(enc, format)
         if checksum:
             # checksum the *decoded* (absolute) values: pad the input to the
-            # block grid — identical for both formats and both differential
+            # block grid — identical for all formats and both differential
             # flavors, since decode always recovers the absolute values
-            v = venc.validate_u32(values, wrap=wrap).ravel()
-            grid = np.zeros((enc.counts.shape[0], block_size), np.uint64)
+            v = meta.values
+            grid = np.zeros((enc.counts.shape[0], meta.block_size), np.uint64)
             grid.reshape(-1)[: v.size] = v
             arr = replace(arr, checksums=block_checksums(grid, enc.counts))
         return arr
@@ -261,16 +273,14 @@ class CompressedIntArray:
         never leave VMEM. With ``differential=True`` each (sorted) list is
         delta-encoded independently, first gap absolute, ``bases`` all zero.
         """
-        if format == "vbyte":
-            enc = venc.encode_ragged_blocked(
-                lists, block_size=block_size, differential=differential,
-                stride_multiple=stride_multiple, wrap=wrap)
-        elif format == "streamvbyte":
-            enc = svb.encode_ragged_blocked(
-                lists, block_size=block_size, differential=differential,
-                stride_multiple=stride_multiple, wrap=wrap)
-        else:
+        encoders = {"vbyte": venc.encode_ragged_blocked,
+                    "streamvbyte": svb.encode_ragged_blocked,
+                    "binpack": bpk.encode_ragged_blocked}
+        if format not in encoders:
             raise ValueError(f"unknown format {format!r}; expected one of {FORMATS}")
+        enc = encoders[format](
+            lists, block_size=block_size, differential=differential,
+            stride_multiple=stride_multiple, wrap=wrap)
         arr = cls._from_encoding(enc, format)
         if checksum:
             vpad, counts = venc.ragged_block_values(
@@ -435,6 +445,15 @@ class CompressedIntArray:
                 self.block_size,
                 differential=self.differential,
             )
+        elif self.format == "binpack":
+            out = bpk.decode_blocked_scalar(
+                np.asarray(self.widths),
+                np.asarray(self.data),
+                np.asarray(self.counts),
+                np.asarray(self.bases),
+                self.block_size,
+                differential=self.differential,
+            )
         else:
             out = vref.decode_blocked_scalar(
                 np.asarray(self.payload),
@@ -443,7 +462,11 @@ class CompressedIntArray:
                 self.block_size,
                 differential=self.differential,
             )
-        return out.reshape(-1)[: self.n].astype(np.uint32)
+        # concatenate valid prefixes (same rule as decode(): partial blocks
+        # may precede full ones, e.g. in optimally-partitioned arrays)
+        mask = (np.arange(self.block_size)[None, :]
+                < np.asarray(self.counts)[:, None])
+        return out[mask].astype(np.uint32)
 
 
 jax.tree_util.register_pytree_with_keys(

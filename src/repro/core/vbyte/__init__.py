@@ -1,10 +1,24 @@
-from . import encode, masked, ref, stream_masked, stream_vbyte  # noqa: F401
+from . import (  # noqa: F401
+    binpack,
+    binpack_masked,
+    encode,
+    masked,
+    ref,
+    stream_masked,
+    stream_vbyte,
+)
+from .binpack import (  # noqa: F401
+    BinpackEncoding,
+    bit_widths,
+)
 from .encode import (  # noqa: F401
     BlockedEncoding,
+    BlockedMeta,
     delta_decode,
     delta_encode,
     encode_blocked,
     encode_stream,
+    prepare_blocked,
     vbyte_lengths,
 )
 from .stream_vbyte import (  # noqa: F401

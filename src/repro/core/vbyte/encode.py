@@ -150,6 +150,56 @@ class BlockedEncoding:
         return 8.0 * self.payload_bytes / max(self.n, 1)
 
 
+@dataclass(frozen=True)
+class BlockedMeta:
+    """Single-pass blocked-layout metadata shared by all three encoders.
+
+    The index builder used to recompute ``blocked_metadata`` (validate,
+    delta-encode, bases, counts) once for the payload encode and again for
+    the skip table — profiled hot on large builds. ``prepare_blocked``
+    computes it once; every ``encode_blocked`` accepts it via ``meta=`` and
+    :meth:`skip_table` derives the per-block first/last values from the
+    same pass.
+    """
+
+    values: np.ndarray  # validated uint64 absolute values
+    enc_values: np.ndarray  # what gets packed (gaps when differential)
+    bases: np.ndarray  # uint32 [n_blocks]
+    counts: np.ndarray  # int32 [n_blocks]
+    n: int
+    n_blocks: int
+    block_size: int
+    differential: bool
+
+    def skip_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-block (first, last) absolute values — uint32 [n_blocks] each."""
+        if self.n == 0:
+            z = np.zeros(0, np.uint32)
+            return z, z
+        idx = np.arange(self.n_blocks)
+        first = self.values[idx * self.block_size]
+        last = self.values[np.minimum((idx + 1) * self.block_size, self.n) - 1]
+        return first.astype(np.uint32), last.astype(np.uint32)
+
+
+def prepare_blocked(
+    values: np.ndarray,
+    *,
+    block_size: int = 128,
+    differential: bool = False,
+    wrap: bool = False,
+) -> BlockedMeta:
+    """Validate + derive blocked metadata once, for reuse across encoders."""
+    v = validate_u32(values, wrap=wrap).ravel()
+    n = int(v.size)
+    n_blocks = max(1, -(-n // block_size))
+    enc_values, bases, counts = blocked_metadata(
+        v, n_blocks=n_blocks, block_size=block_size, differential=differential)
+    return BlockedMeta(
+        values=v, enc_values=enc_values, bases=bases, counts=counts, n=n,
+        n_blocks=n_blocks, block_size=block_size, differential=differential)
+
+
 def blocked_metadata(
     v: np.ndarray, *, n_blocks: int, block_size: int, differential: bool
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -227,28 +277,29 @@ def scatter_blocked_payload(
 
 
 def encode_blocked(
-    values: np.ndarray,
+    values: np.ndarray | None = None,
     *,
     block_size: int = 128,
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
     wrap: bool = False,
+    meta: BlockedMeta | None = None,
 ) -> BlockedEncoding:
-    """Encode ``values`` into the blocked layout (see blocked_metadata)."""
-    v = validate_u32(values, wrap=wrap).ravel()
-    n = int(v.size)
-    n_blocks = max(1, -(-n // block_size))
+    """Encode into the blocked layout (see blocked_metadata).
 
-    enc_values, bases, counts = blocked_metadata(
-        v, n_blocks=n_blocks, block_size=block_size, differential=differential
-    )
-    data, lengths = _byte_matrix(enc_values)
+    ``meta`` accepts a pre-computed :class:`BlockedMeta` so the builder's
+    encode → skip-table path runs the metadata pass once per list.
+    """
+    if meta is None:
+        meta = prepare_blocked(values, block_size=block_size,
+                               differential=differential, wrap=wrap)
+    data, lengths = _byte_matrix(meta.enc_values)
     payload = scatter_blocked_payload(
         data,
         lengths,
-        n_blocks=n_blocks,
-        block_size=block_size,
+        n_blocks=meta.n_blocks,
+        block_size=meta.block_size,
         max_bytes=MAX_BYTES_PER_INT,
         stride_multiple=stride_multiple,
         min_stride=min_stride,
@@ -256,11 +307,11 @@ def encode_blocked(
 
     return BlockedEncoding(
         payload=payload,
-        counts=counts,
-        bases=bases,
-        n=n,
-        block_size=block_size,
-        differential=differential,
+        counts=meta.counts,
+        bases=meta.bases,
+        n=meta.n,
+        block_size=meta.block_size,
+        differential=meta.differential,
     )
 
 
@@ -279,6 +330,8 @@ def ragged_block_values(
     counts = np.zeros(n_lists, dtype=np.int32)
     vpad = np.zeros((n_lists, block_size), dtype=np.uint64)
     for i, lst in enumerate(lists):
+        if np.asarray(lst).size == 0:
+            continue  # empty bag: dtype carries no intent (e.g. [] padding)
         a = validate_u32(lst, wrap=wrap, what=f"list {i}").ravel()
         if a.size > block_size:
             raise ValueError(

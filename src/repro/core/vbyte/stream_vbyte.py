@@ -152,33 +152,34 @@ class StreamVByteEncoding:
 
 
 def encode_blocked(
-    values: np.ndarray,
+    values: np.ndarray | None = None,
     *,
     block_size: int = 128,
     differential: bool = False,
     stride_multiple: int = 128,
     min_stride: int | None = None,
     wrap: bool = False,
+    meta=None,
 ) -> StreamVByteEncoding:
     """Encode ``values`` into the blocked Stream-VByte layout.
 
     Same block semantics as ``encode.encode_blocked``: with
     ``differential=True`` the gaps are encoded and ``bases[b]`` holds the
     absolute value preceding block ``b``, so every block decodes
-    independently.
+    independently. ``meta`` accepts a pre-computed
+    :class:`~repro.core.vbyte.encode.BlockedMeta` (single shared metadata
+    pass across the builder's encode → skip-table path).
     """
+    from .encode import prepare_blocked, scatter_blocked_payload
+
+    if meta is None:
+        meta = prepare_blocked(values, block_size=block_size,
+                               differential=differential, wrap=wrap)
+    block_size, differential = meta.block_size, meta.differential
     if block_size % 4:
         raise ValueError(f"block_size={block_size} must be a multiple of 4")
-    from .encode import blocked_metadata, scatter_blocked_payload, validate_u32
-
-    v = validate_u32(values, wrap=wrap).ravel()
-    n = int(v.size)
-    n_blocks = max(1, -(-n // block_size))
-
-    enc_values, bases, counts = blocked_metadata(
-        v, n_blocks=n_blocks, block_size=block_size, differential=differential
-    )
-    data_mat, lengths = _byte_matrix(enc_values)
+    n, n_blocks = meta.n, meta.n_blocks
+    data_mat, lengths = _byte_matrix(meta.enc_values)
 
     # control stream: codes padded with 0 for tail slots, 4 codes per byte
     codes = np.zeros(n_blocks * block_size, dtype=np.uint8)
@@ -199,8 +200,8 @@ def encode_blocked(
     return StreamVByteEncoding(
         control=control,
         data=data,
-        counts=counts,
-        bases=bases,
+        counts=meta.counts,
+        bases=meta.bases,
         n=n,
         block_size=block_size,
         differential=differential,

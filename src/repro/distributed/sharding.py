@@ -146,7 +146,7 @@ def compressed_block_specs(format: str, axis=DP) -> dict:
     keyed like ``device_operands()`` (usable as shard_map in_specs)."""
     from repro.core.compressed_array import FORMAT_LEAVES
 
-    return {nm: P(axis, None) if nm in ("payload", "control", "data")
+    return {nm: P(axis, None) if nm in ("payload", "control", "data", "widths")
             else P(axis)
             for nm in FORMAT_LEAVES[format]}
 

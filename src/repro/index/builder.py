@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import CompressedIntArray
+from repro.core.vbyte import prepare_blocked
 
 MAX_DOCID = (1 << 31) - 1  # the membership epilogue compares in int32
 BM25_K1 = 1.2  # tf-saturation shape; sat(1) == 1 exactly, keeping tf-free
@@ -216,6 +217,16 @@ def build_index(
     docid-gap and impact streams (``CompressedIntArray.encode(...,
     checksum=True)``), enabling checksum-verified decode and the serving
     layer's segment quarantine (docs/robustness.md).
+
+    ``format="auto"`` runs the shortest-path block-partition DP per list
+    (``repro.index.partition``): each term gets its own codec (vbyte /
+    streamvbyte / binpack) and its own variable-count block boundaries,
+    chosen to minimize encoded bits + modeled decode cost. The emitted
+    arrays are ordinary uniform-``block_size`` ``CompressedIntArray``s
+    (counts ≤ block_size mask the tails), so the query engine, MaxScore,
+    skip tables and the sharded serving path consume the mixed-codec index
+    transparently — and the corpus bits/int can only improve on the
+    uniform single-codec layout (docs/index.md §Optimal partitioning).
     """
     if not isinstance(lists, dict):
         lists = dict(enumerate(lists))
@@ -251,21 +262,56 @@ def build_index(
                           block_size=block_size, format=format,
                           impact_bits=impact_bits, has_tf=bool(tf_arrs))
     for term, d in docids.items():
-        arr = CompressedIntArray.encode(
-            d, format=format, block_size=block_size, differential=True,
-            stride_multiple=stride_multiple, checksum=checksum)
-        first, last = _skip_table(d, block_size)
+        if format == "auto":
+            from repro.index.partition import (
+                choose_partition, encode_partitioned)
+
+            part = choose_partition(d, block_size=block_size)
+            arr = encode_partitioned(
+                d, part.bounds, format=part.format, block_size=block_size,
+                differential=True, stride_multiple=stride_multiple,
+                checksum=checksum)
+            if d.size:
+                first = d[part.bounds[:-1]].astype(np.uint32)
+                last = d[part.bounds[1:] - 1].astype(np.uint32)
+            else:
+                first = last = np.zeros(0, np.uint32)
+        else:
+            # one metadata pass (validate, delta, bases, counts) shared by
+            # the payload encode AND the skip table — prepare_blocked was
+            # previously recomputed inside encode() and again here
+            meta = prepare_blocked(d, block_size=block_size,
+                                   differential=True)
+            arr = CompressedIntArray.encode(
+                format=format, block_size=block_size, differential=True,
+                stride_multiple=stride_multiple, checksum=checksum,
+                meta=meta)
+            first, last = meta.skip_table()
         tp = TermPostings(term=term, arr=arr, first_doc=first,
                           last_doc=last, df=int(d.size))
         index.terms[term] = tp  # impact() below needs df registered
         tf = tf_arrs.get(term, np.ones(d.size, np.int64))
         q = quantize_impacts(index.impact(term), tf, impact_bits)
-        imp = CompressedIntArray.encode(
-            q.astype(np.uint64), format=format, block_size=block_size,
-            differential=False, stride_multiple=stride_multiple,
-            checksum=checksum)
+        if format == "auto":
+            # impacts share the docid stream's partition so blocks stay
+            # aligned 1:1 (MaxScore's block-max column indexes both)
+            imp = encode_partitioned(
+                q.astype(np.uint64), part.bounds, format=part.format,
+                block_size=block_size, differential=False,
+                stride_multiple=stride_multiple, checksum=checksum)
+            mi = np.array([int(q[i:j].max(initial=0)) for i, j in
+                           zip(part.bounds[:-1], part.bounds[1:])],
+                          np.int32) if d.size else np.zeros(0, np.int32)
+        else:
+            imeta = prepare_blocked(q.astype(np.uint64),
+                                    block_size=block_size,
+                                    differential=False)
+            imp = CompressedIntArray.encode(
+                format=format, block_size=block_size, differential=False,
+                stride_multiple=stride_multiple, checksum=checksum,
+                meta=imeta)
+            mi = _block_max(q, block_size)
         index.terms[term] = TermPostings(
             term=term, arr=arr, first_doc=first, last_doc=last,
-            df=int(d.size), impacts=imp,
-            max_impact=_block_max(q, block_size))
+            df=int(d.size), impacts=imp, max_impact=mi)
     return index

@@ -248,7 +248,7 @@ def _weight_extras(weights, rows=None, *, pad=None):
     sub = weights if rows is None else weights.take_blocks(rows, pad_to=pad)
     ops = sub.device_operands()
     extras = {f"w_{k}": v for k, v in ops.items()
-              if k in ("payload", "control", "data")}
+              if k in ("payload", "control", "data", "widths")}
     return extras, sub.n
 
 

@@ -179,9 +179,30 @@ def routing_cost(format: str, *, S: int, B: int, W: int | None,
     ``W=None`` models the dense core. Numbers are per tile of ``T`` blocks;
     divide by T for per-block, as quoted in docs/kernels.md.
     """
-    if format not in ("vbyte", "streamvbyte"):
+    if format not in ("vbyte", "streamvbyte", "binpack"):
         raise ValueError(f"unknown format {format!r}")
     f32 = 4
+    if format == "binpack":
+        # binpack has no length scan, so there is no banded variant (W is
+        # ignored): the routing is one [T,B,S] one-hot gather realized as
+        # two byte-packed contractions, plus pure VPU index/shift math
+        mxu = {"window_gather": 2 * T * B * S}  # lo24 + hi16 matmuls
+        vpu = {
+            "onehot_build": T * B * S,  # byte-offset equality tests
+            "shift_mask": 4 * T * B,  # bitpos, shift, recombine, mask
+        }
+        vmem = {
+            "onehot": T * B * S * f32,
+            "shifted_copies": 2 * T * S * f32,  # grp012 + grp34 operands
+        }
+        return {
+            "mxu_macs": mxu,
+            "mxu_total": sum(mxu.values()),
+            "vpu_ops": vpu,
+            "vpu_total": sum(vpu.values()),
+            "vmem_bytes": vmem,
+            "vmem_total": sum(vmem.values()),
+        }
     if W is None:
         if format == "vbyte":
             mxu = {

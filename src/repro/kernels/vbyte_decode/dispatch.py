@@ -52,12 +52,13 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.vbyte import binpack_masked as bpk_masked
 from repro.core.vbyte import masked as vmasked
 from repro.core.vbyte import stream_masked as svb_masked
 
 from . import epilogues as eplib
-from .ops import (normalize_block_meta, stream_vbyte_decode_blocked,
-                  vbyte_decode_blocked)
+from .ops import (binpack_decode_blocked, normalize_block_meta,
+                  stream_vbyte_decode_blocked, vbyte_decode_blocked)
 
 # cache lives under the repo's experiments/ dir (resolved relative to this
 # file, NOT the process cwd — library call sites run from anywhere); the
@@ -115,6 +116,14 @@ class DecodePlan:
 _CACHE: dict | None = None
 _CACHE_FILE: str | None = None
 
+# Autotune-cache schema version. Bumped to 2 when "binpack" became a third
+# format: older caches were measured in a two-format world (candidate sets,
+# default chunk widths, and cost trade-offs that no longer hold) and carry
+# no schema tag at all, so version-mismatched entries are dropped on load
+# and the plan resolver falls back to the heuristic default instead of
+# mis-resolving from a stale measurement.
+CACHE_SCHEMA = 2
+
 
 def cache_path() -> str:
     return os.environ.get("REPRO_AUTOTUNE_CACHE", DEFAULT_CACHE_PATH)
@@ -126,6 +135,14 @@ def cache_key(format: str, epilogue: str, block_size: int,
     return f"{backend}/{format}/{epilogue}/bs{block_size}"
 
 
+def _migrate_cache(raw: dict) -> dict:
+    """Drop entries from a different (or missing) schema version."""
+    if not isinstance(raw, dict):
+        return {}
+    return {k: v for k, v in raw.items()
+            if isinstance(v, dict) and v.get("schema") == CACHE_SCHEMA}
+
+
 def load_cache(path: str | None = None, *, reload: bool = False) -> dict:
     global _CACHE, _CACHE_FILE
     path = path or cache_path()
@@ -133,7 +150,7 @@ def load_cache(path: str | None = None, *, reload: bool = False) -> dict:
         _CACHE_FILE = path
         try:
             with open(path) as f:
-                _CACHE = json.load(f)
+                _CACHE = _migrate_cache(json.load(f))
         except (OSError, ValueError):
             _CACHE = {}
     return _CACHE
@@ -141,8 +158,9 @@ def load_cache(path: str | None = None, *, reload: bool = False) -> dict:
 
 # per-format default banded chunk width: the smallest W that clears the
 # ≥4x modeled routing-MAC reduction at default shapes without shrinking
-# the MXU tiles below usefulness (docs/kernels.md §Banded chunked scatter)
-DEFAULT_CHUNK = {"vbyte": 64, "streamvbyte": 32}
+# the MXU tiles below usefulness (docs/kernels.md §Banded chunked scatter).
+# binpack has no length scan — the chunk axis doesn't exist for it.
+DEFAULT_CHUNK = {"vbyte": 64, "streamvbyte": 32, "binpack": None}
 
 
 def default_plan(epilogue: str = "stream",
@@ -207,8 +225,9 @@ def _decode_grid(operands: dict, *, format: str, block_size: int,
                  differential: bool, plan: DecodePlan) -> jax.Array:
     """Step-1 decode to the uint32 [n_blocks, block_size] grid."""
     if plan.path == "pallas":
-        fn = (vbyte_decode_blocked if format == "vbyte"
-              else stream_vbyte_decode_blocked)
+        fn = {"vbyte": vbyte_decode_blocked,
+              "streamvbyte": stream_vbyte_decode_blocked,
+              "binpack": binpack_decode_blocked}[format]
         return fn(**operands, block_size=block_size, differential=differential,
                   block_tile=plan.block_tile, chunk_width=plan.chunk)
     if plan.path == "ref":
@@ -224,8 +243,9 @@ def _decode_grid(operands: dict, *, format: str, block_size: int,
 
         return vbyte_decode_blocked_ref(
             **operands, block_size=block_size, differential=differential)
-    dec = vmasked.decode_blocked if format == "vbyte" \
-        else svb_masked.decode_blocked
+    dec = {"vbyte": vmasked.decode_blocked,
+           "streamvbyte": svb_masked.decode_blocked,
+           "binpack": bpk_masked.decode_blocked}[format]
     return dec(**operands, block_size=block_size, differential=differential,
                chunk_width=plan.chunk)
 
@@ -245,8 +265,9 @@ def _jnp_fused(operands: dict, extras: dict, *, format: str, epilogue: str,
     keeping the grid as an in-executable intermediate. The grid still never
     crosses a dispatch boundary — that round trip is what fusion removes.
     """
-    dec = vmasked.decode_blocked if format == "vbyte" \
-        else svb_masked.decode_blocked
+    dec = {"vbyte": vmasked.decode_blocked,
+           "streamvbyte": svb_masked.decode_blocked,
+           "binpack": bpk_masked.decode_blocked}[format]
     grid = dec(**operands, block_size=block_size, differential=differential,
                chunk_width=chunk_width)
     grid = lax.optimization_barrier(grid)
@@ -486,7 +507,7 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
                                         block_size=block_size,
                                         differential=False)
     w_ops = {f"w_{k}": v for k, v in imp_arr.device_operands().items()
-             if k in ("payload", "control", "data")}
+             if k in ("payload", "control", "data", "widths")}
     extras = {
         "bag_sum": {"table": jnp.asarray(
             rng.standard_normal((vocab, d)).astype(np.float32))},
@@ -515,7 +536,7 @@ def _synthetic_workload(format: str, *, n_blocks: int, block_size: int,
 
 def autotune(
     *,
-    formats=("vbyte", "streamvbyte"),
+    formats=("vbyte", "streamvbyte", "binpack"),
     epilogue_names=("stream", "bag_sum", "dot_score", "adjacency_rebase",
                     "membership", "bm25_accum", "membership_rows",
                     "bm25_accum_rows", "bm25_weighted",
@@ -573,6 +594,9 @@ def autotune(
                                    for bt in (8, 16) for w in (None, w0)]
                     candidates += [DecodePlan("pallas", True, 32, chunk=w0),
                                    DecodePlan("pallas", False, 8)]
+            # binpack has no chunk axis (DEFAULT_CHUNK[fmt] is None), which
+            # collapses banded candidates onto their dense twins — dedupe
+            candidates = list({c.label: c for c in candidates}.values())
             timings = {}
             for cand in candidates:
                 fn = functools.partial(
@@ -583,6 +607,7 @@ def autotune(
                     _time_call(fn, reps=reps, warmup=warmup) * 1e3, 4)
             best = min(candidates, key=lambda c: timings[c.label])
             cache[cache_key(fmt, ep_name, block_size, backend)] = {
+                "schema": CACHE_SCHEMA,
                 "plan": asdict(best),
                 "candidates_ms": timings,
                 "backend": backend,

@@ -47,9 +47,10 @@ Registered epilogues:
                          blocked compressed array with identical per-block
                          counts), and emit each probe candidate's exact
                          int32 impact contribution. The weight operands are
-                         format-tagged tiled extras — ``w_payload`` (vbyte)
-                         or ``w_control``/``w_data`` (streamvbyte) — so the
-                         weighted epilogue works for both formats under one
+                         format-tagged tiled extras — ``w_payload`` (vbyte),
+                         ``w_control``/``w_data`` (streamvbyte), or
+                         ``w_widths``/``w_data`` (binpack) — so the
+                         weighted epilogue works for every format under one
                          name. Drives MaxScore top-k (repro.index.query).
 * ``checksum``         — validated decode: the decoded integers plus a
                          per-block position-weighted checksum
@@ -80,10 +81,15 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .binpack_kernel import binpack_decode_tile
 from .kernel import decode_tile, prefix_sum_tile
 from .stream_kernel import stream_decode_tile
 
-FORMAT_OPERANDS = {"vbyte": ("payload",), "streamvbyte": ("control", "data")}
+FORMAT_OPERANDS = {
+    "vbyte": ("payload",),
+    "streamvbyte": ("control", "data"),
+    "binpack": ("widths", "data"),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -167,46 +173,53 @@ def _bm25_accum_rows_apply(vals, valid, *, probe, impact):
             * impact.reshape(()))
 
 
-def _decode_weight_tile(valid, w_payload=None, w_control=None, w_data=None):
+def _decode_weight_tile(valid, w_payload=None, w_control=None, w_data=None,
+                        w_widths=None):
     """Decode the aligned per-posting weight tile in the same kernel pass.
 
     The weight stream is a second blocked compressed array whose blocks
     align 1:1 with the main stream, so the main tile's ``valid`` mask IS
-    the weight tile's count vector — no extra metadata operands. Always
+    the weight tile's count vector — no extra metadata operands. The
+    format discriminator is which operands arrived: ``w_widths`` → binpack,
+    ``w_payload`` → vbyte, ``w_control``+``w_data`` → streamvbyte. Always
     decodes dense (``chunk_width=None``): the weight stride is short
-    (impacts are < 2^impact_bits) and ``decode_tile`` is bit-exact for
+    (impacts are < 2^impact_bits) and the tile cores are bit-exact for
     any routing geometry.
     """
-    if w_payload is None and (w_control is None or w_data is None):
-        raise ValueError(
-            "weighted epilogue needs w_payload (vbyte) or "
-            "w_control + w_data (streamvbyte) extras")
     counts = valid.astype(jnp.int32).sum(axis=1, keepdims=True)
     B = valid.shape[-1]
-    if w_payload is not None:
+    if w_widths is not None and w_data is not None:
+        w, _ = binpack_decode_tile(w_widths, w_data, counts,
+                                   block_size=B, chunk_width=None)
+    elif w_payload is not None:
         w, _ = decode_tile(w_payload, counts, block_size=B, chunk_width=None)
-    else:
+    elif w_control is not None and w_data is not None:
         w, _ = stream_decode_tile(w_control, w_data, counts,
                                   block_size=B, chunk_width=None)
+    else:
+        raise ValueError(
+            "weighted epilogue needs w_payload (vbyte), "
+            "w_control + w_data (streamvbyte), or "
+            "w_widths + w_data (binpack) extras")
     return jnp.where(valid, w, 0)
 
 
-def _bm25_weighted_apply(vals, valid, *, probe,
-                         w_payload=None, w_control=None, w_data=None):
+def _bm25_weighted_apply(vals, valid, *, probe, w_payload=None,
+                         w_control=None, w_data=None, w_widths=None):
     # out[t, i] = Σ_j (vals[t,j] == probe[i]) · weight[t,j] — a docid lives
     # in at most one block, so summing over blocks gives each candidate's
     # exact int32 per-posting-impact contribution.
-    w = _decode_weight_tile(valid, w_payload, w_control, w_data)
+    w = _decode_weight_tile(valid, w_payload, w_control, w_data, w_widths)
     p = probe.reshape(-1)
     v = jnp.where(valid, vals, -1)
     hit = (v[:, :, None] == p[None, None, :]) & (p[None, None, :] >= 0)
     return (hit.astype(jnp.int32) * w[:, :, None]).sum(axis=1)  # [T, P]
 
 
-def _bm25_weighted_rows_apply(vals, valid, *, probe,
-                              w_payload=None, w_control=None, w_data=None):
+def _bm25_weighted_rows_apply(vals, valid, *, probe, w_payload=None,
+                              w_control=None, w_data=None, w_widths=None):
     # probe: int32 [T, 1] — block t's single candidate (see *_rows above).
-    w = _decode_weight_tile(valid, w_payload, w_control, w_data)
+    w = _decode_weight_tile(valid, w_payload, w_control, w_data, w_widths)
     v = jnp.where(valid, vals, -1)
     hit = (v == probe) & (probe >= 0)  # [T, B]
     return (hit.astype(jnp.int32) * w).sum(axis=1, keepdims=True)  # [T, 1]
@@ -326,13 +339,13 @@ EPILOGUES = {
         out_info=_rows_out),
     "bm25_weighted": Epilogue(
         "bm25_weighted", _bm25_weighted_apply, extras=("probe",),
-        optional_extras=("w_payload", "w_control", "w_data"),
-        tiled_extras=("w_payload", "w_control", "w_data"),
+        optional_extras=("w_payload", "w_control", "w_data", "w_widths"),
+        tiled_extras=("w_payload", "w_control", "w_data", "w_widths"),
         out_info=_probe_out),
     "bm25_weighted_rows": Epilogue(
         "bm25_weighted_rows", _bm25_weighted_rows_apply, extras=("probe",),
-        optional_extras=("w_payload", "w_control", "w_data"),
-        tiled_extras=("probe", "w_payload", "w_control", "w_data"),
+        optional_extras=("w_payload", "w_control", "w_data", "w_widths"),
+        tiled_extras=("probe", "w_payload", "w_control", "w_data", "w_widths"),
         out_info=_rows_out),
 }
 
@@ -411,6 +424,11 @@ def fused_decode_pallas(
             vals, valid = decode_tile(refs[0][...], counts_ref[...],
                                       block_size=block_size,
                                       chunk_width=chunk_width)
+        elif format == "binpack":
+            vals, valid = binpack_decode_tile(refs[0][...], refs[1][...],
+                                              counts_ref[...],
+                                              block_size=block_size,
+                                              chunk_width=chunk_width)
         else:
             vals, valid = stream_decode_tile(refs[0][...], refs[1][...],
                                              counts_ref[...],

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .binpack_kernel import binpack_decode_blocked_pallas
 from .kernel import decode_blocked_pallas
 from .stream_kernel import stream_decode_blocked_pallas
 
@@ -142,6 +143,55 @@ def stream_vbyte_decode_blocked(
 
     out = stream_decode_blocked_pallas(
         control,
+        data,
+        counts2,
+        bases2,
+        block_size=block_size,
+        differential=differential,
+        block_tile=block_tile,
+        chunk_width=chunk_width,
+        interpret=interpret,
+    )
+    out = jax.lax.bitcast_convert_type(out, jnp.uint32)
+    return out[:nb]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "differential", "block_tile",
+                              "chunk_width", "interpret")
+)
+def binpack_decode_blocked(
+    widths: jax.Array,  # uint8 [n_blocks, 1] or [n_blocks]
+    data: jax.Array,  # uint8 [n_blocks, stride]
+    counts: jax.Array,  # int   [n_blocks] or [n_blocks, 1]
+    bases: jax.Array,  # uint32/int32 [n_blocks] or [n_blocks, 1]
+    *,
+    block_size: int,
+    differential: bool,
+    block_tile: int = 8,
+    chunk_width: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode a blocked binpack payload to uint32[n_blocks, block_size]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    nb, _ = data.shape
+    widths = normalize_block_meta("widths", widths, nb)[:, None].astype(jnp.uint8)
+    counts = normalize_block_meta("counts", counts, nb)
+    bases = normalize_block_meta("bases", bases, nb)
+
+    pad = (-nb) % block_tile
+    if pad:
+        widths = jnp.pad(widths, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        counts = jnp.pad(counts, ((0, pad),))
+        bases = jnp.pad(bases, ((0, pad),))
+
+    counts2 = counts.astype(jnp.int32)[:, None]
+    bases2 = jax.lax.bitcast_convert_type(bases.astype(jnp.uint32), jnp.int32)[:, None]
+
+    out = binpack_decode_blocked_pallas(
+        widths,
         data,
         counts2,
         bases2,

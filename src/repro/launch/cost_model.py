@@ -56,11 +56,38 @@ DECODE_INT_OPS = 30
 DECODE_READ_B = 2.0
 DECODE_RT_B = 8.0  # unfused-only: u32 HBM write + consumer re-read
 
+# Per-codec decode-tile costs, split into a per-int term and a per-block
+# term (the tile's fixed routing/one-hot setup, amortized over the block).
+# Relative weights follow the decode cores: vbyte pays the boundary-recovery
+# prefix sums (DECODE_INT_OPS), streamvbyte skips the continuation scan but
+# still routes bytes through the control-driven gather, binpack is a static
+# shift/mask with no boundary recovery at all. These price the edges of the
+# index builder's shortest-path block partition (repro.index.partition) —
+# a partition with many tiny blocks pays CODEC_BLOCK_OPS once per block.
+CODEC_INT_OPS = {"vbyte": float(DECODE_INT_OPS), "streamvbyte": 18.0,
+                 "binpack": 8.0}
+CODEC_BLOCK_OPS = {"vbyte": 320.0, "streamvbyte": 256.0, "binpack": 96.0}
+
 
 def decode_cost(n_ints: float, *, fused: bool) -> Cost:
     """Per-device decode cost; ``fused`` = consumer runs in the kernel epilogue."""
     b = DECODE_READ_B + (0.0 if fused else DECODE_RT_B)
     return Cost(DECODE_INT_OPS * n_ints, b * n_ints)
+
+
+def codec_decode_cost(n_ints: float, *, format: str = "vbyte",
+                      fused: bool = True, n_blocks: float = 0.0) -> Cost:
+    """Per-codec decode cost (per-int + per-block tile terms).
+
+    Same traffic model as :func:`decode_cost`; the FLOP side is the
+    codec-specific int-op weight plus the per-block tile setup. Used by the
+    index builder's block-partition DP to trade encoded bits against
+    modeled decode time.
+    """
+    ops = (CODEC_INT_OPS.get(format, float(DECODE_INT_OPS)) * n_ints
+           + CODEC_BLOCK_OPS.get(format, 0.0) * n_blocks)
+    b = DECODE_READ_B + (0.0 if fused else DECODE_RT_B)
+    return Cost(ops, b * n_ints)
 
 
 def _ring(n: int, nbytes: float, *, reduce: bool = False) -> float:

@@ -68,6 +68,9 @@ def _used_bytes(arr: CompressedIntArray, b: int) -> int:
     c = int(np.asarray(arr.counts)[b])
     if arr.format == "vbyte":
         return vref.consumed_bytes(np.asarray(arr.payload)[b], c)
+    if arr.format == "binpack":
+        w = int(np.asarray(arr.widths).reshape(-1)[b])
+        return max(-(-(w * c) // 8), 1)  # ≥1 so bit_flip/byte_drop apply
     lengths = svb.unpack_control(np.asarray(arr.control)[b], c) + 1
     return int(lengths.sum())
 
@@ -170,6 +173,46 @@ def _base_corrupt(arr, rng):
                       f"bases[{b}] bit-flipped")
 
 
+def _width_inflate(arr, rng):
+    # binpack-only: overstate a block's width byte by one — the decoder
+    # reads shifted garbage; the validator's tight-width canon catches it
+    if arr.format != "binpack":
+        return None
+    b = _pick_block(arr, rng)
+    widths = _leaf(arr, "widths")
+    if int(widths[b, 0]) >= 32:
+        return None
+    widths[b, 0] += 1
+    return Corruption(_rebuild(arr, widths=widths), "width_inflate", b,
+                      f"widths[{b}] inflated by 1")
+
+
+def _width_deflate(arr, rng):
+    # binpack-only: understate the width — values alias into each other
+    if arr.format != "binpack":
+        return None
+    ws = np.asarray(arr.widths).reshape(-1)
+    live = np.flatnonzero((np.asarray(arr.counts) > 0) & (ws > 0))
+    if live.size == 0:
+        return None
+    b = int(rng.choice(live))
+    widths = _leaf(arr, "widths")
+    widths[b, 0] -= 1
+    return Corruption(_rebuild(arr, widths=widths), "width_deflate", b,
+                      f"widths[{b}] deflated by 1")
+
+
+def _width_range(arr, rng):
+    # binpack-only: width byte outside [0, 32] entirely
+    if arr.format != "binpack":
+        return None
+    b = _pick_block(arr, rng)
+    widths = _leaf(arr, "widths")
+    widths[b, 0] = 200
+    return Corruption(_rebuild(arr, widths=widths), "width_range", b,
+                      f"widths[{b}] = 200 (out of range)")
+
+
 def _checksum_corrupt(arr, rng):
     if arr.checksums is None:
         return None
@@ -186,6 +229,9 @@ STREAM_CLASSES: dict[str, Callable[..., Any]] = {
     "payload_truncate": _payload_truncate,
     "continuation_flip": _continuation_flip,
     "control_corrupt": _control_corrupt,
+    "width_inflate": _width_inflate,
+    "width_deflate": _width_deflate,
+    "width_range": _width_range,
     "count_over": _count_over,
     "count_under": _count_under,
     "base_corrupt": _base_corrupt,

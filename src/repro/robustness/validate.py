@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.compressed_array import CompressedIntArray, block_checksums
+from repro.core.vbyte import binpack as bpk
 from repro.core.vbyte import stream_vbyte as svb
 
 
@@ -208,6 +209,31 @@ def _validate_svb_block(control: np.ndarray, data: np.ndarray, c: int,
             format="streamvbyte", block=b, term=term)
 
 
+def _validate_binpack_block(w: int, data: np.ndarray, c: int, b: int,
+                            term) -> None:
+    if w > bpk.MAX_WIDTH:
+        raise BlockMetaError(
+            f"width byte {w} exceeds the 32-bit maximum",
+            format="binpack", block=b, term=term)
+    used = -(-(w * c) // 8)
+    if used > data.shape[0]:
+        raise TruncatedPayloadError(
+            f"width {w} × {c} values needs {used} bytes, stride is "
+            f"{data.shape[0]}", format="binpack", block=b, term=term)
+    vals = bpk.decode_block_scalar(data, w, c)
+    if w and int(bpk.bit_widths(vals).max(initial=0)) < w:
+        raise NonCanonicalError(
+            f"width byte claims {w} bits but the widest value fits in "
+            f"{int(bpk.bit_widths(vals).max(initial=0))} — width is "
+            "overstated", format="binpack", block=b, term=term)
+    # canonical padding: bits of the last used byte past c·w must be zero
+    tail_bits = (w * c) & 7
+    if used and tail_bits and int(data[used - 1]) >> tail_bits:
+        raise NonCanonicalError(
+            f"nonzero padding bits above bit {w * c} in the last packed "
+            "byte", format="binpack", block=b, term=term)
+
+
 def validate_stream(arr: CompressedIntArray, *, term=None,
                     blocks=None) -> None:
     """Byte-level format validation of every (or the given) block.
@@ -218,9 +244,14 @@ def validate_stream(arr: CompressedIntArray, *, term=None,
     (:class:`NonCanonicalError`). Stream VByte: the control-claimed data
     length must fit the data stride (:class:`ControlMismatchError`) and
     every multi-byte integer must use its claimed width
-    (:class:`NonCanonicalError`). Padding bytes beyond the last claimed
-    integer are *not* checked — the decoders mask them, so their content is
-    provably harmless.
+    (:class:`NonCanonicalError`). Binpack: the width byte must be ≤ 32
+    (:class:`BlockMetaError`), the packed bits must fit the data stride
+    (:class:`TruncatedPayloadError`), the width must be tight for the
+    block's widest value, and the final partial byte's padding bits must
+    be zero (:class:`NonCanonicalError` — the zero-padding canon makes a
+    bit flip in the dead bits of a *used* byte detectable). Padding bytes
+    beyond the last claimed integer are *not* checked — the decoders mask
+    them, so their content is provably harmless.
     """
     counts = np.asarray(arr.counts)
     idx = range(counts.shape[0]) if blocks is None else blocks
@@ -230,6 +261,14 @@ def validate_stream(arr: CompressedIntArray, *, term=None,
             c = int(counts[b])
             if c:
                 _validate_vbyte_block(payload[b], c, int(b), term)
+    elif arr.format == "binpack":
+        widths = np.asarray(arr.widths).reshape(-1)
+        data = np.asarray(arr.data)
+        for b in idx:
+            c = int(counts[b])
+            if c:
+                _validate_binpack_block(int(widths[b]), data[b], c,
+                                        int(b), term)
     else:
         control = np.asarray(arr.control)
         data = np.asarray(arr.data)

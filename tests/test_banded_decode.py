@@ -236,6 +236,7 @@ def test_plan_resolution_with_chunk_cache_entry(tmp_path, monkeypatch):
     import json
 
     cache = {"cpu/vbyte/stream/bs128": {
+        "schema": dispatch.CACHE_SCHEMA,  # untagged entries are migrated away
         "plan": {"path": "jnp", "fused": True, "block_tile": 8, "chunk": 32}}}
     p = tmp_path / "autotune.json"
     p.write_text(json.dumps(cache))

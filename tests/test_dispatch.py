@@ -120,6 +120,43 @@ def test_autotune_persists_and_auto_plan_reads_cache(tmp_path, monkeypatch):
     dispatch.load_cache(reload=True)  # restore global cache state
 
 
+def test_cache_migration_drops_stale_schema_entries(tmp_path, monkeypatch):
+    """A two-format-era cache (no per-entry schema tag, or an old one) must
+    be invalidated on load: stale plans were measured before binpack joined
+    the format registry and can resolve to a plan shape that no longer
+    matches the codec (e.g. a banded chunk for a format with no length
+    scan). Every stale entry falls back to the heuristic default."""
+    cache_file = tmp_path / "autotune.json"
+    key = dispatch.cache_key("vbyte", "bag_sum", 32)
+    old_key = dispatch.cache_key("streamvbyte", "dot_score", 32)
+    cache_file.write_text(json.dumps({
+        key: {"plan": {"path": "jnp", "fused": False, "chunk": 64}},
+        old_key: {"schema": 1,
+                  "plan": {"path": "pallas", "fused": True, "chunk": 64}},
+        "garbage": "not-a-dict",
+    }))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache_file))
+    cache = dispatch.load_cache(str(cache_file), reload=True)
+    assert cache == {}  # versionless + old-schema + junk all dropped
+
+    for fmt, epi in (("vbyte", "bag_sum"), ("streamvbyte", "dot_score"),
+                     ("binpack", "bag_sum")):
+        plan = dispatch.resolve_plan("auto", format=fmt, epilogue=epi,
+                                     block_size=32)
+        expected = dispatch.default_plan(epi, fmt)
+        assert plan == dispatch.replace(
+            expected, chunk=dispatch._clamp_chunk(expected.chunk, 32))
+
+    # current-schema entries survive the same migration pass untouched
+    good = {"schema": dispatch.CACHE_SCHEMA,
+            "plan": {"path": "jnp", "fused": True, "chunk": None},
+            "candidates_ms": {}}
+    cache_file.write_text(json.dumps({key: good, old_key: {"schema": 0}}))
+    cache = dispatch.load_cache(str(cache_file), reload=True)
+    assert cache == {key: good}
+    dispatch.load_cache(reload=True)  # restore global cache state
+
+
 def test_auto_plan_decodes_correctly(rng):
     """End to end: plan='auto' (whatever the cache says) is bit-correct."""
     vals = np.sort(rng.integers(0, 512, 100)).astype(np.uint64)

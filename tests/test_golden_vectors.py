@@ -18,12 +18,15 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import CompressedIntArray
+from repro.core.vbyte import binpack as bpk
+from repro.core.vbyte import binpack_masked as bpkm
 from repro.core.vbyte import encode as venc
 from repro.core.vbyte import masked as vmask
 from repro.core.vbyte import ref as vref
 from repro.core.vbyte import stream_masked as svbm
 from repro.core.vbyte import stream_vbyte as svb
-from repro.kernels.vbyte_decode import (stream_vbyte_decode_blocked,
+from repro.kernels.vbyte_decode import (binpack_decode_blocked,
+                                        stream_vbyte_decode_blocked,
                                         vbyte_decode_blocked)
 
 # -- exact encodings at the byte-length boundaries ---------------------------
@@ -151,7 +154,84 @@ def test_svb_blocked_golden_with_zero_code_padding():
     np.testing.assert_array_equal(out, expected)
 
 
-@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte"])
+def _binpack_all_decoders(widths, data, counts, bases, block_size,
+                          differential):
+    oracle = bpk.decode_blocked_scalar(widths, data, counts, bases,
+                                       block_size,
+                                       differential=differential)
+    ops = dict(widths=jnp.asarray(widths, jnp.uint8).reshape(-1, 1),
+               data=jnp.asarray(data), counts=jnp.asarray(counts),
+               bases=jnp.asarray(bases))
+    msk = bpkm.decode_blocked(**ops, block_size=block_size,
+                              differential=differential)
+    ker = binpack_decode_blocked(**ops, block_size=block_size,
+                                 differential=differential)
+    np.testing.assert_array_equal(np.asarray(msk, np.uint64), oracle)
+    np.testing.assert_array_equal(np.asarray(ker, np.uint64), oracle)
+    return oracle
+
+
+BINPACK_GOLDEN = [
+    # (width, values, packed bytes LSB-first within and across values)
+    (0, [0, 0, 0], []),
+    (1, [1, 0, 1, 1, 0, 1, 1, 1], [0xED]),
+    (7, [1, 127, 64], [0x81, 0x3F, 0x10]),
+    (32, [0xDEADBEEF], [0xEF, 0xBE, 0xAD, 0xDE]),
+]
+
+
+@pytest.mark.parametrize("width,values,expected", BINPACK_GOLDEN)
+def test_binpack_boundary_bytes(width, values, expected):
+    vals = np.array(values, np.uint64).reshape(1, -1)
+    assert int(bpk.block_widths(vals, np.array([len(values)]))[0]) == width
+    packed = bpk.pack_rows(vals, width)
+    assert packed[0].tolist() == expected
+    out = bpk.decode_block_scalar(
+        np.pad(packed[0], (0, 8)), width, len(values))
+    np.testing.assert_array_equal(out, np.array(values, np.uint64))
+
+
+def test_binpack_blocked_golden_ragged_tail_and_empty_block():
+    """Row 0: width 7, ragged count=3 — packed bits end mid-byte, pad bits
+    zero. Row 1: width 5 but count=0 with garbage data — the lane mask
+    alone must keep every decoder at zero. Row 2: width 0, count=4 —
+    decodes to zeros without touching data at all."""
+    data = np.zeros((3, 16), np.uint8)
+    data[0, :3] = [0x81, 0x3F, 0x10]  # [1, 127, 64] at w=7
+    data[1, :4] = [0xDE, 0xAD, 0xBE, 0xEF]  # garbage: count=0 row
+    widths = np.array([[7], [5], [0]], np.uint8)
+    counts = np.array([3, 0, 4], np.int32)
+    bases = np.zeros(3, np.uint32)
+    out = _binpack_all_decoders(widths, data, counts, bases, 8, False)
+    expected = np.zeros((3, 8), np.uint64)
+    expected[0, :3] = [1, 127, 64]
+    np.testing.assert_array_equal(out, expected)
+
+
+def test_binpack_width32_blocked_golden():
+    """Full-width lanes: 2^32-1 and a mixed word survive the 24/16-bit
+    split recombination exactly."""
+    data = np.zeros((1, 128), np.uint8)
+    data[0, :8] = [0xFF, 0xFF, 0xFF, 0xFF, 0xEF, 0xBE, 0xAD, 0xDE]
+    widths = np.array([[32]], np.uint8)
+    counts = np.array([2], np.int32)
+    bases = np.zeros(1, np.uint32)
+    out = _binpack_all_decoders(widths, data, counts, bases, 8, False)
+    np.testing.assert_array_equal(out[0, :2], [2**32 - 1, 0xDEADBEEF])
+
+
+def test_binpack_differential_wraparound_golden():
+    """base=2^32-2, w=3 gaps [1, 5]: absolutes wrap mod 2^32."""
+    data = np.zeros((1, 16), np.uint8)
+    data[0, 0] = 0x29  # bits: 1,0,0 then 1,0,1 LSB-first = 0b101001
+    widths = np.array([[3]], np.uint8)
+    counts = np.array([2], np.int32)
+    bases = np.array([2**32 - 2], np.uint32)
+    out = _binpack_all_decoders(widths, data, counts, bases, 8, True)
+    np.testing.assert_array_equal(out[0, :2], [2**32 - 1, 4])
+
+
+@pytest.mark.parametrize("fmt", ["vbyte", "streamvbyte", "binpack"])
 def test_empty_block_layout(fmt):
     """n=0 encodes to a single block with count 0 and decodes to nothing."""
     arr = CompressedIntArray.encode(np.zeros(0, np.uint64), format=fmt)

@@ -31,7 +31,7 @@ from repro.robustness import (BlockMetaError, BoundViolationError,
 from repro.robustness import faultgen
 from repro.robustness.validate import expected_checksums
 
-FORMATS = ("vbyte", "streamvbyte")
+FORMATS = ("vbyte", "streamvbyte", "binpack")
 PLANS = ("jnp", "banded")  # the vectorized grid plans (dense + banded)
 SEEDS = (0, 1, 2)
 
@@ -39,7 +39,8 @@ SEEDS = (0, 1, 2)
 def _clean_array(fmt, *, n=200, block_size=64, differential=False,
                  checksum=True, seed=0):
     rng = np.random.default_rng(seed)
-    vals = make_valid_stream(rng, n, max_bits=32 if fmt == "vbyte" else 30)
+    vals = make_valid_stream(rng, n,
+                             max_bits=30 if fmt == "streamvbyte" else 32)
     if differential:
         vals = np.cumsum(vals % 997).astype(np.uint64)  # sorted, in-range
     return CompressedIntArray.encode(vals, format=fmt, block_size=block_size,
@@ -243,6 +244,27 @@ def test_single_value_corruption_always_caught():
             g = grid.copy()
             g[b, j] ^= np.uint64(1) << np.uint64(rng.integers(32))
             assert block_checksums(g, counts)[b] != clean[b]
+
+
+def test_partitioned_array_detect_or_defined():
+    """DP-partitioned (variable-count) arrays pass the validators clean and
+    keep the detect contract under corruption."""
+    from repro.index.partition import choose_partition, encode_partitioned
+
+    rng = np.random.default_rng(3)
+    gaps = rng.integers(1, 9, 900).astype(np.uint64)
+    gaps[rng.random(900) < 0.02] += 100_000
+    vals = np.cumsum(gaps).astype(np.uint64)
+    part = choose_partition(vals, block_size=64)
+    arr = encode_partitioned(vals, part.bounds, format=part.format,
+                             block_size=64, differential=True,
+                             checksum=True)
+    assert _detect(arr) is None
+    for cls in ("bit_flip", "count_under", "width_deflate"):
+        c = faultgen.corrupt(arr, cls, 0)
+        if c is None:
+            continue
+        assert isinstance(_detect(c.arr), DecodeError), cls
 
 
 # ---------------------------------------------------------------------------

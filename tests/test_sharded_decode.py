@@ -22,7 +22,7 @@ multi_device = pytest.mark.skipif(
     reason="needs >1 device; run under "
            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
 
-FMTS = ["vbyte", "streamvbyte"]
+FMTS = ["vbyte", "streamvbyte", "binpack"]
 B = 32  # block size
 
 
