@@ -1,0 +1,170 @@
+"""Streaming-ingestion benchmarks: WAL append cost, recovery time, and
+query latency during a background merge (docs/ingestion.md).
+
+Four measurements, all over a real on-disk :class:`repro.index.LiveIndex`:
+
+* **adds/sec + WAL append latency** — the durability tax. Measured with
+  ``fsync=True`` (the production setting: an op is acknowledged only
+  after the WAL record is on stable storage) and ``fsync=False`` for
+  reference, so the fsync share of the ack path is explicit.
+* **recovery time vs WAL length** — reopen-from-crash cost as the
+  unmerged suffix grows (replay is linear in acked-but-unmerged ops).
+* **merge** — wall time to drain the delta into a ``format="auto"``
+  segment, and the resulting bits/int.
+* **query p50/p99 during an active merge vs quiescent** — the swap is
+  supposed to be invisible to readers: latencies are sampled at every
+  named crash point via ``step_hook`` and the results are asserted
+  bit-identical to the quiescent answers.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def _pctl(samples, q):
+    return float(np.percentile(np.asarray(samples, dtype=np.float64), q))
+
+
+def _lat_row(samples_s):
+    a = np.asarray(samples_s, dtype=np.float64)
+    return {"p50_us": round(_pctl(a, 50) * 1e6, 1),
+            "p99_us": round(_pctl(a, 99) * 1e6, 1),
+            "mean_us": round(float(a.mean()) * 1e6, 1)}
+
+
+def _make_ops(rng, n_ops, universe, n_terms=16, p_del=0.2):
+    """A reproducible add/delete stream (same generator as the fuzz suite:
+    deletes only target live docs)."""
+    ops, live = [], set()
+    while len(ops) < n_ops:
+        if live and rng.random() < p_del:
+            doc = int(rng.choice(sorted(live)))
+            ops.append(("del", doc, None))
+            live.discard(doc)
+        else:
+            doc = int(rng.integers(universe))
+            if doc in live:
+                continue
+            terms = {int(t): int(rng.integers(1, 5))
+                     for t in rng.choice(n_terms, rng.integers(1, 5),
+                                         replace=False)}
+            ops.append(("add", doc, terms))
+            live.add(doc)
+    return ops
+
+
+def _ingest(live, ops):
+    """Apply ops, returning per-op ack latency in seconds."""
+    lat = []
+    for kind, doc, terms in ops:
+        t0 = time.perf_counter()
+        if kind == "add":
+            live.add(doc, terms)
+        else:
+            live.delete(doc)
+        lat.append(time.perf_counter() - t0)
+    return lat
+
+
+def run(quick: bool = False) -> dict:
+    from repro.index import CRASH_POINTS, LiveIndex
+
+    universe = 1 << 16
+    n_ops = 400 if quick else 4000
+    rng = np.random.default_rng(0)
+    ops = _make_ops(rng, n_ops, universe)
+    root = tempfile.mkdtemp(prefix="bench_ingest_")
+    out: dict = {"n_ops": n_ops, "universe": universe}
+    try:
+        # -- ingest throughput + WAL append latency, fsync on vs off ------
+        for fsync in (True, False):
+            d = os.path.join(root, f"ing_{int(fsync)}")
+            live = LiveIndex(d, n_docs=universe, fsync=fsync)
+            lat = _ingest(live, ops)
+            live.close()
+            key = "ingest_fsync" if fsync else "ingest_nofsync"
+            out[key] = dict(_lat_row(lat),
+                            ops_per_s=round(n_ops / sum(lat)))
+        # -- recovery time vs unmerged WAL length -------------------------
+        rec_rows = []
+        for frac in (0.25, 0.5, 1.0):
+            k = int(n_ops * frac)
+            d = os.path.join(root, f"rec_{k}")
+            live = LiveIndex(d, n_docs=universe, fsync=False)
+            _ingest(live, ops[:k])
+            live.close()  # no merge: the whole stream is unmerged WAL
+            t0 = time.perf_counter()
+            live = LiveIndex(d, fsync=False)
+            dt = time.perf_counter() - t0
+            assert live.counters["replayed_ops"] == k
+            live.close()
+            rec_rows.append({"wal_ops": k,
+                             "recovery_ms": round(dt * 1e3, 2),
+                             "ops_per_s": round(k / dt)})
+        out["recovery"] = rec_rows
+        # -- merge cost + query latency during the merge vs quiescent -----
+        d = os.path.join(root, "merge")
+        live = LiveIndex(d, n_docs=universe, fsync=False)
+        _ingest(live, ops)
+        queries = [sorted(int(t) for t in rng.choice(16, 3, replace=False))
+                   for _ in range(8 if quick else 32)]
+
+        def sample(n_rounds):
+            lat, res = [], []
+            for _ in range(n_rounds):
+                for q in queries:
+                    t0 = time.perf_counter()
+                    r = live.search(q, mode="topk", k=10)
+                    lat.append(time.perf_counter() - t0)
+                    res.append(r)
+            return lat, res
+
+        rounds = 1 if quick else 3
+        quiet_lat, quiet_res = sample(rounds)
+        merge_lat: list[float] = []
+        merge_res: list = []
+
+        def hook(name):
+            lat, res = sample(1)
+            merge_lat.extend(lat)
+            if name == "after_rotate":  # pre-swap: same logical state
+                merge_res.extend(res)
+
+        t0 = time.perf_counter()
+        mstats = live.merge(step_hook=hook)
+        merge_s = time.perf_counter() - t0
+        post_lat, post_res = sample(rounds)
+        # the invisibility contract: mid-merge and post-merge answers are
+        # bit-identical to the quiescent ones
+        per_round = len(queries)
+        for i, (md, ms) in enumerate(merge_res):
+            qd, qs = quiet_res[i % per_round]
+            assert np.array_equal(md, qd) and np.array_equal(ms, qs), \
+                ("mid-merge drift", i)
+        for i, (pd, ps) in enumerate(post_res):
+            qd, qs = quiet_res[i % per_round]
+            assert np.array_equal(pd, qd) and np.array_equal(ps, qs), \
+                ("post-merge drift", i)
+        live.close()
+        out["merge"] = {"merge_s": round(merge_s, 3),
+                        "drained_docs": mstats["drained_docs"],
+                        "n_postings": mstats["n_postings"],
+                        "bits_per_int": mstats["bits_per_int"],
+                        "crash_points_sampled": len(CRASH_POINTS)}
+        out["query_quiescent"] = _lat_row(quiet_lat)
+        out["query_during_merge"] = _lat_row(merge_lat)
+        out["query_post_merge"] = _lat_row(post_lat)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(quick=True), indent=1))

@@ -192,6 +192,32 @@ def decode_speed_table(rows: list[dict]) -> str:
     return out
 
 
+def ingestion_table(d: dict) -> str:
+    """Headline table for the streaming-ingestion benchmark section."""
+    out = "| metric | value |\n|---|---|\n"
+    fs, nf = d.get("ingest_fsync"), d.get("ingest_nofsync")
+    if fs:
+        out += (f"| ingest (fsync) | {fs['ops_per_s']} ops/s, append "
+                f"p50 {fs['p50_us']}µs / p99 {fs['p99_us']}µs |\n")
+    if nf:
+        out += (f"| ingest (no fsync) | {nf['ops_per_s']} ops/s, append "
+                f"p50 {nf['p50_us']}µs / p99 {nf['p99_us']}µs |\n")
+    for r in d.get("recovery", []):
+        out += (f"| recovery @ {r['wal_ops']} WAL ops | "
+                f"{r['recovery_ms']} ms ({r['ops_per_s']} ops/s) |\n")
+    m = d.get("merge")
+    if m:
+        out += (f"| merge | {m['merge_s']} s, {m['n_postings']} postings, "
+                f"{m['bits_per_int']} bits/int |\n")
+    for key, label in (("query_quiescent", "query p50/p99 (quiescent)"),
+                       ("query_during_merge", "query p50/p99 (mid-merge)"),
+                       ("query_post_merge", "query p50/p99 (post-merge)")):
+        r = d.get(key)
+        if r:
+            out += f"| {label} | {r['p50_us']}µs / {r['p99_us']}µs |\n"
+    return out
+
+
 def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     """Render the headline perf tables from the tracked benchmarks JSON."""
     try:
@@ -220,6 +246,9 @@ def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     if "index_query" in d:
         out += ("\n## Inverted-index queries\n\n"
                 + index_query_table(d["index_query"]))
+    if "ingestion" in d:
+        out += ("\n## Streaming ingestion (WAL / recovery / live merge)\n\n"
+                + ingestion_table(d["ingestion"]))
     if "updated_at" in d:
         out += f"\n(benchmarks.json updated {d['updated_at']})\n"
     return out

@@ -21,6 +21,10 @@ One benchmark per paper table/figure (+ framework-level extensions):
                        retry/quarantine/degraded rates from a flaky
                        workload through the hardened SearchEngine
                        (quick mode gates checksum overhead < 15%)
+  ingestion          — streaming LiveIndex: adds/sec + WAL append latency
+                       (fsync on/off), recovery time vs WAL length, merge
+                       cost, and query p50/p99 during an active merge vs
+                       quiescent (asserted bit-identical)
 
 Results are written as machine-readable JSON (``--json``, default
 ``experiments/benchmarks.json``) so the perf trajectory is tracked across
@@ -149,7 +153,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="decode|decode_speed|compression|kernel|fused|"
-                         "serving|index|roofline|robustness")
+                         "serving|index|roofline|robustness|ingestion")
     ap.add_argument("--json", default=None,
                     help="output path (default experiments/benchmarks.json; "
                          "--quick runs write the untracked -quick variant so "
@@ -348,6 +352,30 @@ def main():
               f"{srv['quarantined_block_rate']}, degraded rate "
               f"{srv['degraded_rate']}")
         results["robustness"] = rob
+
+    if want("ingestion"):
+        from benchmarks import ingestion
+
+        print("== streaming ingestion: WAL, recovery, merge-time queries ==")
+        ing = ingestion.run(quick=args.quick)
+        for key, label in (("ingest_fsync", "fsync"),
+                           ("ingest_nofsync", "no-fsync")):
+            r = ing[key]
+            print(f"  ingest [{label:>8}]: {r['ops_per_s']:>7} ops/s  "
+                  f"append p50={r['p50_us']}us p99={r['p99_us']}us")
+        for r in ing["recovery"]:
+            print(f"  recovery: {r['wal_ops']:>6} WAL ops in "
+                  f"{r['recovery_ms']:>8}ms ({r['ops_per_s']} ops/s)")
+        print(f"  merge: {ing['merge']['merge_s']}s for "
+              f"{ing['merge']['n_postings']} postings "
+              f"({ing['merge']['bits_per_int']} bits/int)")
+        for key, label in (("query_quiescent", "quiescent"),
+                           ("query_during_merge", "mid-merge"),
+                           ("query_post_merge", "post-merge")):
+            r = ing[key]
+            print(f"  query [{label:>10}]: p50={r['p50_us']}us "
+                  f"p99={r['p99_us']}us")
+        results["ingestion"] = ing
 
     if want("roofline"):
         from benchmarks import roofline

@@ -1,10 +1,18 @@
 """Checkpointing: atomic, resumable, async-capable, VByte-compressed ints.
 
-Layout: <dir>/step_<N>/{manifest.json, leaves.npz} written to a tmp dir and
-renamed (atomic on POSIX). Integer leaves are zigzag+VByte-compressed inside
-the npz (the paper's codec applied to checkpoint state — DESIGN.md §3).
-Restart: ``restore_latest(example_state)`` → (state, step); crash-consistent
-because partial writes never carry the final directory name.
+Layout: <dir>/step_<N>/{manifest.json, leaves.npz} written through the
+shared crash-consistent protocol (:func:`repro.robustness.atomic_io.
+atomic_write_dir` — tmp dir + per-file fsync + rename), so partial writes
+never carry the final directory name. Integer leaves are
+zigzag+VByte-compressed inside the npz (the paper's codec applied to
+checkpoint state — DESIGN.md §3).
+
+Restart: ``restore_latest(example_state)`` → (state, step). Restore is
+hardened against storage faults: a truncated/corrupt ``leaves.npz`` or
+``manifest.json`` raises a typed
+:class:`~repro.robustness.validate.CheckpointError`, and
+``restore_latest`` skips backwards to the newest *intact* step instead of
+crashing (docs/robustness.md §Durability).
 """
 from __future__ import annotations
 
@@ -12,7 +20,7 @@ import json
 import os
 import shutil
 import threading
-import time
+import zipfile
 
 import numpy as np
 
@@ -21,6 +29,8 @@ import jax
 from repro.core.vbyte.encode import encode_stream
 from repro.core.vbyte.ref import decode_stream_scalar
 from repro.core.vbyte.masked import decode_stream
+from repro.robustness.atomic_io import atomic_write_dir
+from repro.robustness.validate import CheckpointError
 
 import jax.numpy as jnp
 
@@ -66,8 +76,6 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, host_leaves):
-        tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}_{time.time_ns()}")
-        os.makedirs(tmp, exist_ok=True)
         arrays, manifest = {}, {"step": step, "leaves": []}
         for i, (name, arr) in enumerate(host_leaves):
             key = f"leaf_{i}"
@@ -88,13 +96,13 @@ class CheckpointManager:
                 else:
                     arrays[key] = arr
             manifest["leaves"].append(entry)
-        np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+
+        def fill(tmp):
+            np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+
+        atomic_write_dir(os.path.join(self.dir, f"step_{step:08d}"), fill)
         self._prune()
 
     def _prune(self):
@@ -111,31 +119,44 @@ class CheckpointManager:
         return sorted(out)
 
     def restore(self, step: int, example_state):
+        """Restore one step; raises :class:`CheckpointError` if its
+        manifest/leaves are unreadable or inconsistent (truncated npz,
+        garbage json, missing keys, shape/codec mismatches)."""
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, "leaves.npz"))
-        leaves = []
-        for entry in manifest["leaves"]:
-            raw = data[entry["key"]]
-            dt = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" else None
-            shape = tuple(entry["shape"])
-            if entry["codec"] == "vbyte_zigzag":
-                n = int(np.prod(shape)) if shape else 1
-                z = decode_stream_scalar(raw, n) if n < 4096 else np.asarray(
-                    decode_stream(jnp.asarray(raw), n, nbytes=len(raw))[0]
-                ).astype(np.uint64)
-                arr = _unzigzag(z).astype(dt).reshape(shape)
-            elif entry["codec"] == "bf16_as_u16":
-                arr = raw.view(jnp.bfloat16).reshape(shape)
-            else:
-                arr = raw.astype(dt).reshape(shape)
-            leaves.append(arr)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(d, "leaves.npz"))
+            leaves = []
+            for entry in manifest["leaves"]:
+                raw = data[entry["key"]]
+                dt = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" else None
+                shape = tuple(entry["shape"])
+                if entry["codec"] == "vbyte_zigzag":
+                    n = int(np.prod(shape)) if shape else 1
+                    z = decode_stream_scalar(raw, n) if n < 4096 else np.asarray(
+                        decode_stream(jnp.asarray(raw), n, nbytes=len(raw))[0]
+                    ).astype(np.uint64)
+                    arr = _unzigzag(z).astype(dt).reshape(shape)
+                elif entry["codec"] == "bf16_as_u16":
+                    arr = raw.view(jnp.bfloat16).reshape(shape)
+                else:
+                    arr = raw.astype(dt).reshape(shape)
+                leaves.append(arr)
+        except (OSError, ValueError, KeyError, TypeError, IndexError,
+                zipfile.BadZipFile) as e:
+            raise CheckpointError(
+                f"checkpoint step {step} unreadable: {e}") from e
         treedef = jax.tree_util.tree_structure(example_state)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def restore_latest(self, example_state):
-        steps = self.steps()
-        if not steps:
-            return None, -1
-        return self.restore(steps[-1], example_state), steps[-1]
+        """Newest *intact* checkpoint: a step whose files are truncated or
+        corrupt is skipped (the fault is typed, the fallback silent-safe —
+        an older consistent state beats a crash loop on a broken one)."""
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step, example_state), step
+            except CheckpointError:
+                continue
+        return None, -1

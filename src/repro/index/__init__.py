@@ -9,16 +9,35 @@ stack — block-level pruning via the skip tables, block-max dynamic
 pruning (``topk(mode="maxscore")`` over per-posting quantized impacts),
 intersection and scoring fused into the decode kernel's ``membership`` /
 ``bm25_accum`` / ``bm25_weighted`` epilogues.
+
+``ingest`` + ``wal`` make the index *mutable*: a WAL-backed
+:class:`~repro.index.ingest.LiveIndex` layers an uncompressed delta (+
+tombstones) over the immutable segments, drains it through
+``build_index(format="auto")`` in crash-safe background merges, and
+recovers to the exact acknowledged state from any crash
+(docs/ingestion.md).
 """
 from .builder import (  # noqa: F401
     InvertedIndex,
     TermPostings,
     build_index,
+    impact_value,
     quantize_impacts,
+)
+from .ingest import (  # noqa: F401
+    CRASH_POINTS,
+    CrashPoint,
+    LiveIndex,
+    Snapshot,
 )
 from .query import (  # noqa: F401
     QueryStats,
     conjunctive,
     disjunctive,
     topk,
+)
+from .wal import (  # noqa: F401
+    WalWriter,
+    open_wal,
+    read_wal,
 )

@@ -95,11 +95,7 @@ class InvertedIndex:
         Per-posting impacts scale this by the BM25 tf saturation
         (:func:`quantize_impacts`).
         """
-        if self.df(term) == 0:
-            return 0
-        idf_max = math.log1p((self.n_docs - 0.5) / 1.5)
-        q = round(self.idf(term) / idf_max * ((1 << self.impact_bits) - 1))
-        return max(1, int(q))
+        return impact_value(self.n_docs, self.df(term), self.impact_bits)
 
     @property
     def n_terms(self) -> int:
@@ -123,6 +119,23 @@ class InvertedIndex:
                 "block_size": self.block_size,
                 "bits_per_int": round(self.bits_per_int, 2),
                 "has_tf": self.has_tf}
+
+
+def impact_value(n_docs: int, df: int, impact_bits: int = 8) -> int:
+    """The quantized tf-free impact as a pure function of ``(n_docs, df)``.
+
+    Shared by :meth:`InvertedIndex.impact` and the live index's
+    query-time scoring (``repro.index.ingest``), which must compute the
+    *identical* integer for a term whose df is the merged main+delta
+    count — any drift here would break the bit-identity between a
+    LiveIndex query and the same query on a rebuilt-from-scratch index.
+    """
+    if df == 0:
+        return 0
+    idf = math.log1p((n_docs - df + 0.5) / (df + 0.5))
+    idf_max = math.log1p((n_docs - 0.5) / 1.5)
+    q = round(idf / idf_max * ((1 << impact_bits) - 1))
+    return max(1, int(q))
 
 
 def quantize_impacts(base_impact: int, tfs, impact_bits: int = 8,

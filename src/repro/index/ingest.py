@@ -1,0 +1,871 @@
+"""Crash-safe streaming ingestion: a WAL-backed live index.
+
+:class:`LiveIndex` makes the inverted index mutable without giving up the
+immutable compressed segments everything else in the repo is built on.
+Three layers (docs/ingestion.md):
+
+* **Main segment** — an ordinary :class:`~repro.index.builder.InvertedIndex`
+  (DP-partitioned ``format="auto"`` by default, checksummed), persisted
+  under ``segments/seg_<epoch>/`` with a whole-file CRC. Immutable.
+* **Delta** — an uncompressed ``doc -> {term: tf}`` map of documents added
+  since the last merge, plus a **tombstone set** of main-segment docids
+  deleted since. Queries merge main − tombstones ∪ delta at run time.
+* **WAL** — every add/delete is appended (and fsynced) to a checksummed
+  write-ahead log *before* it is applied in memory or acknowledged
+  (:mod:`repro.index.wal`), so a crash at any instant replays to exactly
+  the acknowledged state.
+
+**Merge** drains the delta through ``build_index(format="auto")`` into a
+fresh segment and commits it with the atomic tmp+fsync+rename protocol
+(:mod:`repro.robustness.atomic_io`); the manifest replace is the single
+commit point. The sequence is instrumented with named **crash points**
+(:data:`CRASH_POINTS`) — the recovery fuzz suite injects a crash at every
+one and proves the reopened index answers queries bit-identically to a
+rebuilt-from-scratch index. Writes stay live during a merge: the delta is
+rotated (frozen) together with the WAL, new ops land in the new WAL +
+active delta, and the commit swaps epochs without ever blocking queries —
+in-flight readers keep a refcounted :class:`Snapshot` of the old epoch.
+
+Scoring note: query-time BM25 impacts are recomputed from the *merged*
+document frequency via :func:`~repro.index.builder.impact_value` and the
+raw per-posting tfs persisted next to each segment — never read from the
+segment's encoded impact stream, whose quantization was fixed at the df
+the term had at merge time. That is what makes a LiveIndex top-k
+bit-identical to ``query.topk`` on an index rebuilt from the current
+logical state, which is the oracle the fuzz suite checks against.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass, replace as dc_replace
+
+import numpy as np
+
+from repro.core.compressed_array import CompressedIntArray, FORMAT_LEAVES
+from repro.robustness.atomic_io import (
+    TMP_PREFIX, atomic_write_json, clean_tmp, crc32_file, fsync_dir,
+    fsync_file)
+from repro.robustness.validate import SegmentError, WalError
+
+from .builder import (InvertedIndex, TermPostings, build_index,
+                      impact_value, quantize_impacts)
+from .query import QueryStats, _decode_blocks
+from .wal import open_wal, parse_wal_name, read_wal, wal_path
+
+MANIFEST_NAME = "MANIFEST.json"
+SEGMENTS_DIR = "segments"
+
+# Named crash points of the merge/commit sequence, in order. The fuzz
+# suite injects a crash at every one (tests/test_ingest.py); the recovery
+# contract per point is tabulated in docs/ingestion.md §Crash points.
+CRASH_POINTS = (
+    "before_rotate",         # nothing rotated yet
+    "after_rotate",          # new WAL exists, delta frozen
+    "after_build",           # merged index built in memory only
+    "segment_tmp_written",   # segment bytes durable under a tmp name
+    "after_segment_rename",  # segment final-named; manifest still old
+    "manifest_tmp_written",  # new manifest durable under a tmp name
+    "after_manifest",        # COMMIT POINT passed; cleanup not run
+    "after_cleanup",         # old WALs/segments removed
+)
+
+
+class CrashPoint(RuntimeError):
+    """Injected crash (tests/benchmarks only). The raising ``LiveIndex``
+    must be discarded — like a real crash, recovery happens by reopening
+    the directory."""
+
+    def __init__(self, name: str):
+        self.name = name
+        super().__init__(f"injected crash at {name!r}")
+
+
+def _seg_name(epoch: int) -> str:
+    return f"seg_{epoch:08d}"
+
+
+def _parse_seg_name(name: str) -> int | None:
+    if not name.startswith("seg_"):
+        return None
+    mid = name[4:]
+    return int(mid) if mid.isdigit() else None
+
+
+# ---------------------------------------------------------------------------
+# segment persistence
+# ---------------------------------------------------------------------------
+def _segment_arrays(index: InvertedIndex, tfs: dict) -> dict:
+    """Flatten an index (+ raw per-posting tfs) into npz-ready arrays."""
+    arrays: dict[str, np.ndarray] = {}
+    all_docs: list[np.ndarray] = []
+    for t, tp in index.terms.items():
+        pre = f"t{t}"
+        for leaf in FORMAT_LEAVES[tp.arr.format]:
+            arrays[f"{pre}_arr_{leaf}"] = np.asarray(getattr(tp.arr, leaf))
+        if tp.arr.checksums is not None:
+            arrays[f"{pre}_arr_cs"] = np.asarray(tp.arr.checksums)
+        for leaf in FORMAT_LEAVES[tp.impacts.format]:
+            arrays[f"{pre}_imp_{leaf}"] = np.asarray(
+                getattr(tp.impacts, leaf))
+        if tp.impacts.checksums is not None:
+            arrays[f"{pre}_imp_cs"] = np.asarray(tp.impacts.checksums)
+        arrays[f"{pre}_first"] = tp.first_doc
+        arrays[f"{pre}_last"] = tp.last_doc
+        arrays[f"{pre}_maxi"] = tp.max_impact
+        # raw tfs, NOT the quantized impacts: the live index re-quantizes
+        # at query time against the merged df (module docstring)
+        arrays[f"{pre}_tf"] = np.asarray(tfs[t], dtype=np.uint32)
+    return arrays
+
+
+def _write_segment_files(seg_dir: str, index: InvertedIndex, tfs: dict,
+                         main_docs: np.ndarray, *, epoch: int,
+                         merged_wal: int, fsync: bool) -> None:
+    """Write ``postings.npz`` + ``segment.json`` into ``seg_dir`` (already
+    created, typically a tmp dir awaiting rename)."""
+    arrays = _segment_arrays(index, tfs)
+    arrays["all_docs"] = np.asarray(main_docs, dtype=np.uint32)
+    npz = os.path.join(seg_dir, "postings.npz")
+    np.savez(npz, **arrays)
+    meta = {
+        "version": 1,
+        "epoch": int(epoch),
+        "merged_wal": int(merged_wal),
+        "npz_crc32": crc32_file(npz),
+        "n_docs": int(index.n_docs),
+        "block_size": int(index.block_size),
+        "impact_bits": int(index.impact_bits),
+        "format": index.format,
+        "has_tf": bool(index.has_tf),
+        "n_postings": int(index.n_postings),
+        "terms": {str(t): {"format": tp.arr.format,
+                           "imp_format": tp.impacts.format,
+                           "n": int(tp.arr.n), "df": int(tp.df)}
+                  for t, tp in index.terms.items()},
+    }
+    with open(os.path.join(seg_dir, "segment.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if fsync:
+        fsync_file(npz)
+        fsync_file(os.path.join(seg_dir, "segment.json"))
+        fsync_dir(seg_dir)
+
+
+def read_segment_meta(seg_dir: str) -> dict:
+    """Parse + CRC-verify a segment dir's metadata (raises SegmentError)."""
+    try:
+        with open(os.path.join(seg_dir, "segment.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise SegmentError(
+            f"segment {seg_dir!r}: metadata unreadable ({e})") from e
+    npz = os.path.join(seg_dir, "postings.npz")
+    try:
+        crc = crc32_file(npz)
+    except OSError as e:
+        raise SegmentError(
+            f"segment {seg_dir!r}: postings.npz missing ({e})") from e
+    if crc != meta.get("npz_crc32"):
+        raise SegmentError(
+            f"segment {seg_dir!r}: postings.npz CRC "
+            f"{crc:#010x} != manifest {meta.get('npz_crc32'):#010x} — "
+            "truncated or corrupt")
+    return meta
+
+
+def load_segment(seg_dir: str):
+    """Load a segment: ``(InvertedIndex, tfs {term: int64[]}, all_docs)``.
+
+    Every failure mode — unreadable/garbage json, missing/truncated/
+    bit-flipped npz (whole-file CRC), missing term keys — raises a typed
+    :class:`SegmentError`; a segment never loads partially.
+    """
+    meta = read_segment_meta(seg_dir)
+    try:
+        data = np.load(os.path.join(seg_dir, "postings.npz"))
+    except Exception as e:  # zipfile.BadZipFile / OSError / ValueError
+        raise SegmentError(
+            f"segment {seg_dir!r}: postings.npz unreadable ({e})") from e
+    index = InvertedIndex(terms={}, n_docs=int(meta["n_docs"]),
+                          block_size=int(meta["block_size"]),
+                          format=meta["format"],
+                          impact_bits=int(meta["impact_bits"]),
+                          has_tf=bool(meta["has_tf"]))
+    tfs: dict[int, np.ndarray] = {}
+    try:
+        for ts, tm in meta["terms"].items():
+            t = int(ts)
+            pre = f"t{t}"
+            bs = index.block_size
+            arr = CompressedIntArray(
+                format=tm["format"], block_size=bs, differential=True,
+                n=int(tm["n"]),
+                **{leaf: data[f"{pre}_arr_{leaf}"]
+                   for leaf in FORMAT_LEAVES[tm["format"]]})
+            if f"{pre}_arr_cs" in data:
+                arr = dc_replace(arr, checksums=data[f"{pre}_arr_cs"])
+            imp = CompressedIntArray(
+                format=tm["imp_format"], block_size=bs, differential=False,
+                n=int(tm["n"]),
+                **{leaf: data[f"{pre}_imp_{leaf}"]
+                   for leaf in FORMAT_LEAVES[tm["imp_format"]]})
+            if f"{pre}_imp_cs" in data:
+                imp = dc_replace(imp, checksums=data[f"{pre}_imp_cs"])
+            index.terms[t] = TermPostings(
+                term=t, arr=arr, first_doc=data[f"{pre}_first"],
+                last_doc=data[f"{pre}_last"], df=int(tm["df"]),
+                impacts=imp, max_impact=data[f"{pre}_maxi"])
+            tfs[t] = data[f"{pre}_tf"].astype(np.int64)
+        all_docs = data["all_docs"].astype(np.int64)
+    except KeyError as e:
+        raise SegmentError(
+            f"segment {seg_dir!r}: npz missing array {e} — metadata and "
+            "payload disagree") from e
+    return index, tfs, all_docs
+
+
+# ---------------------------------------------------------------------------
+# snapshot (consistent read view)
+# ---------------------------------------------------------------------------
+@dataclass
+class Snapshot:
+    """A consistent read view of one epoch, refcounted by the owner.
+
+    Cheap to take: dicts are pointer-copied (add/delete never mutate an
+    inner per-doc term map in place — they replace whole entries), and
+    the main index/tfs are immutable. Release via ``LiveIndex.release``
+    (or use ``search(...)`` which scopes one internally) so the owner's
+    epoch accounting sees readers drain after a swap.
+    """
+
+    epoch: int
+    state: str
+    main: InvertedIndex
+    main_tfs: dict
+    tombstones: np.ndarray  # sorted int64, against main
+    delta_docs: dict  # active delta: doc -> {term: tf}
+    frozen_docs: dict  # frozen delta (mid-merge), doc -> {term: tf}
+    frozen_tomb: frozenset  # tombstones against frozen docs (mid-merge)
+
+    def delta_term(self, term: int):
+        """Sorted ``(docs int64, tfs int64)`` of the delta layers' postings
+        for ``term`` (frozen − frozen tombstones, plus active)."""
+        rows = [(d, tmap[term]) for d, tmap in self.frozen_docs.items()
+                if term in tmap and d not in self.frozen_tomb]
+        rows += [(d, tmap[term]) for d, tmap in self.delta_docs.items()
+                 if term in tmap]
+        rows.sort()
+        if not rows:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        a = np.asarray(rows, dtype=np.int64)
+        return a[:, 0], a[:, 1]
+
+    def delta_doc_ids(self) -> np.ndarray:
+        """Sorted docids served from the delta layers (delta-hit set)."""
+        ids = set(self.delta_docs)
+        ids.update(d for d in self.frozen_docs if d not in self.frozen_tomb)
+        return np.fromiter(sorted(ids), dtype=np.int64, count=len(ids))
+
+
+# ---------------------------------------------------------------------------
+# the live index
+# ---------------------------------------------------------------------------
+class LiveIndex:
+    """Mutable inverted index over ``directory`` (see module docstring).
+
+    Opening the directory *is* recovery: clean orphan tmps, reconcile the
+    manifest with whatever segments/WALs a crash left behind (adopting a
+    committed-but-uncleaned segment — roll-forward — when its WALs are
+    already gone), load + CRC-verify the main segment, then replay the
+    unmerged WAL suffix into the delta (``state == "replaying"`` until
+    done). Every add/delete is WAL-appended and fsynced before it is
+    acknowledged.
+    """
+
+    def __init__(self, directory: str, *, n_docs: int | None = None,
+                 block_size: int = 128, format: str = "auto",
+                 impact_bits: int = 8, checksum: bool = True,
+                 fsync: bool = True, plan="auto", replay_hook=None):
+        self.dir = os.path.abspath(directory)
+        self.plan = plan
+        self.fsync = fsync
+        self.state = "replaying"
+        self._lock = threading.Lock()
+        self._refs: dict[int, int] = {}
+        self._delta: dict[int, dict[int, int]] = {}
+        self._tombstones: set[int] = set()  # against the main segment
+        self._frozen: dict[int, dict[int, int]] | None = None
+        self._frozen_tomb: set[int] = set()  # against frozen docs, mid-merge
+        self.counters = {"acked_ops": 0, "replayed_ops": 0, "merges": 0,
+                         "rolled_forward": 0, "wal_bytes_truncated": 0}
+        os.makedirs(os.path.join(self.dir, SEGMENTS_DIR), exist_ok=True)
+        self._recover(n_docs=n_docs, block_size=block_size, format=format,
+                      impact_bits=impact_bits, checksum=checksum,
+                      replay_hook=replay_hook)
+        self.state = "serving"
+
+    # -- recovery ----------------------------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, MANIFEST_NAME)
+
+    def _seg_dir(self, name: str) -> str:
+        return os.path.join(self.dir, SEGMENTS_DIR, name)
+
+    def _write_manifest(self, man: dict) -> None:
+        atomic_write_json(self._manifest_path(), man, fsync=self.fsync)
+
+    def _recover(self, *, n_docs, block_size, format, impact_bits,
+                 checksum, replay_hook):
+        seg_parent = os.path.join(self.dir, SEGMENTS_DIR)
+        clean_tmp(self.dir)
+        clean_tmp(seg_parent)
+
+        man = None
+        if os.path.exists(self._manifest_path()):
+            try:
+                with open(self._manifest_path()) as f:
+                    man = json.load(f)
+            except (OSError, ValueError) as e:
+                # the manifest is the commit point: if it is garbage we
+                # cannot know which epoch was acknowledged — detect.
+                raise SegmentError(f"manifest unreadable ({e})") from e
+
+        present = {e: nm for nm in os.listdir(seg_parent)
+                   if (e := _parse_seg_name(nm)) is not None}
+        wal_ids = sorted(i for nm in os.listdir(self.dir)
+                         if (i := parse_wal_name(nm)) is not None)
+        man_epoch = int(man["epoch"]) if man else 0
+        man_merged = int(man["merged_wal"]) if man else 0
+
+        orphans = sorted(e for e in present if e > man_epoch)
+        if orphans:
+            # a segment newer than the manifest: either an uncommitted
+            # merge (crash before the manifest replace — its WALs replay
+            # it, discard) or a committed merge whose manifest write we
+            # can no longer see (stale/rolled-back manifest) with the
+            # drained WALs already cleaned — adopt it (roll forward).
+            e = max(orphans)
+            try:
+                ometa = read_segment_meta(self._seg_dir(present[e]))
+            except SegmentError:
+                ometa = None
+            covered = int(ometa["merged_wal"]) if ometa else None
+            needed = (set(range(man_merged + 1, covered + 1))
+                      if covered is not None else set())
+            wals_ok = covered is not None and needed <= set(wal_ids)
+            # even with the orphan's own metadata unreadable, a WAL chain
+            # that is contiguous from the manifest's watermark reproduces
+            # every acknowledged op — a committed merge never changes the
+            # logical state, so replaying past it is harmless
+            full_history = bool(wal_ids) and wal_ids[0] == man_merged + 1 \
+                and wal_ids == list(range(wal_ids[0], wal_ids[-1] + 1))
+            if wals_ok or (ometa is None and full_history):
+                # WAL history fully reproduces the orphan: plain replay
+                for eo in orphans:
+                    shutil.rmtree(self._seg_dir(present.pop(eo)))
+            elif ometa is not None:
+                man = {"version": 1, "epoch": e, "segments": [present[e]],
+                       "merged_wal": covered, "n_docs": ometa["n_docs"],
+                       "block_size": ometa["block_size"],
+                       "format": ometa["format"],
+                       "impact_bits": ometa["impact_bits"],
+                       "checksum": man["checksum"] if man else bool(checksum)}
+                self._write_manifest(man)
+                self.counters["rolled_forward"] = 1
+                man_epoch, man_merged = e, covered
+                for eo in orphans[:-1]:
+                    shutil.rmtree(self._seg_dir(present.pop(eo)))
+            else:
+                raise SegmentError(
+                    f"segment epoch {e} is newer than the manifest "
+                    f"(epoch {man_epoch}) but corrupt, and the WALs that "
+                    "produced it are gone — history unrecoverable")
+
+        if man is None:
+            if n_docs is None:
+                raise ValueError(
+                    "creating a new LiveIndex requires n_docs (the fixed "
+                    "docid universe — impacts depend on it)")
+            man = {"version": 1, "epoch": 0, "segments": [],
+                   "merged_wal": 0, "n_docs": int(n_docs),
+                   "block_size": int(block_size), "format": format,
+                   "impact_bits": int(impact_bits),
+                   "checksum": bool(checksum)}
+            self._write_manifest(man)
+
+        self.manifest = man
+        self.epoch = int(man["epoch"])
+        self.n_docs = int(man["n_docs"])
+        self.block_size = int(man["block_size"])
+        self.format = man["format"]
+        self.impact_bits = int(man["impact_bits"])
+        self.checksum = bool(man["checksum"])
+        merged_wal = int(man["merged_wal"])
+
+        for nm in man["segments"]:
+            if _parse_seg_name(nm) not in present:
+                raise SegmentError(
+                    f"manifest names segment {nm!r} which does not exist")
+        listed = {_parse_seg_name(nm) for nm in man["segments"]}
+        for e, nm in list(present.items()):
+            if e not in listed:  # cleanup crashed mid-way: finish it
+                shutil.rmtree(self._seg_dir(nm))
+
+        if man["segments"]:
+            self.main, self.main_tfs, self._main_docs = load_segment(
+                self._seg_dir(man["segments"][0]))
+            if self.main.n_docs != self.n_docs:
+                raise SegmentError(
+                    f"segment n_docs {self.main.n_docs} != manifest "
+                    f"{self.n_docs}")
+        else:
+            self.main = build_index({}, format=self.format,
+                                    block_size=self.block_size,
+                                    n_docs=self.n_docs,
+                                    impact_bits=self.impact_bits)
+            self.main_tfs = {}
+            self._main_docs = np.zeros(0, np.int64)
+
+        # stale WALs (≤ merged watermark) are already baked into the
+        # segment — a crash during post-commit cleanup leaves them behind
+        for i in [i for i in wal_ids if i <= merged_wal]:
+            os.remove(wal_path(self.dir, i))
+        wal_ids = [i for i in wal_ids if i > merged_wal]
+        if wal_ids and wal_ids != list(range(wal_ids[0], wal_ids[-1] + 1)):
+            raise WalError(f"WAL sequence has gaps: {wal_ids}", format="wal")
+        if wal_ids and wal_ids[0] != merged_wal + 1:
+            raise WalError(
+                f"oldest unmerged WAL is {wal_ids[0]}, expected "
+                f"{merged_wal + 1} — history lost", format="wal")
+
+        replayed: list[dict] = []
+        for i in wal_ids[:-1] if wal_ids else []:
+            p = wal_path(self.dir, i)
+            ops, valid = read_wal(p)
+            if valid != os.path.getsize(p):
+                # only the *newest* WAL can have a torn tail: this one was
+                # rotated away, meaning every record in it was acked
+                raise WalError(
+                    f"rotated WAL {i} has a torn tail — acknowledged "
+                    "records lost", format="wal")
+            replayed.extend(ops)
+        active_id = wal_ids[-1] if wal_ids else merged_wal + 1
+        before = (os.path.getsize(wal_path(self.dir, active_id))
+                  if os.path.exists(wal_path(self.dir, active_id)) else 0)
+        tail_ops, self.wal = open_wal(wal_path(self.dir, active_id),
+                                      fsync=self.fsync)
+        self.counters["wal_bytes_truncated"] = before - self.wal.tell()
+        replayed.extend(tail_ops)
+        self.wal_id = active_id
+
+        for i, op in enumerate(replayed):
+            self._apply(op, replay=True)
+            if replay_hook is not None:
+                # hook gets the half-open index: queries already work
+                # (state == "replaying" marks them degraded)
+                replay_hook(self, i, op)
+        self.counters["replayed_ops"] = len(replayed)
+
+    # -- membership --------------------------------------------------------
+    def _in_main(self, doc: int) -> bool:
+        i = int(np.searchsorted(self._main_docs, doc))
+        return i < self._main_docs.size and int(self._main_docs[i]) == doc
+
+    def _exists(self, doc: int) -> bool:
+        if doc in self._delta:
+            return True
+        if self._frozen is not None and doc in self._frozen \
+                and doc not in self._frozen_tomb:
+            return True
+        return doc not in self._tombstones and self._in_main(doc)
+
+    def __contains__(self, doc: int) -> bool:
+        return self._exists(int(doc))
+
+    @property
+    def n_delta_docs(self) -> int:
+        return len(self._delta) + (len(self._frozen) if self._frozen else 0)
+
+    @property
+    def n_pending(self) -> int:
+        """Ops not yet drained into a segment (delta docs + tombstones)."""
+        return self.n_delta_docs + len(self._tombstones) \
+            + len(self._frozen_tomb)
+
+    def doc_count(self) -> int:
+        n = int(self._main_docs.size) - len(self._tombstones) + \
+            len(self._delta)
+        if self._frozen is not None:
+            n += len(self._frozen) - len(self._frozen_tomb)
+        return n
+
+    # -- mutation (WAL-append before ack) ----------------------------------
+    def add(self, doc: int, terms) -> None:
+        """Add document ``doc`` with ``{term: tf}`` postings. Durable (WAL
+        appended + fsynced) before this returns. The doc must not
+        currently exist — delete first to replace."""
+        doc = int(doc)
+        if not (0 <= doc < self.n_docs):
+            raise ValueError(f"doc {doc} outside universe [0, {self.n_docs})")
+        tmap = {int(t): int(tf) for t, tf in dict(terms).items()}
+        if not tmap:
+            raise ValueError("a document needs ≥1 term")
+        for t, tf in tmap.items():
+            if t < 0 or tf < 1:
+                raise ValueError(f"bad posting term={t} tf={tf}")
+        if self._exists(doc):
+            raise ValueError(f"doc {doc} already exists — delete it first")
+        op = {"op": "add", "doc": doc,
+              "terms": {str(t): tf for t, tf in sorted(tmap.items())}}
+        self.wal.append(op)  # durability point: ack only after this
+        self._apply(op, replay=False)
+        self.counters["acked_ops"] += 1
+
+    def delete(self, doc: int) -> None:
+        """Delete document ``doc``. Durable before this returns."""
+        doc = int(doc)
+        if not self._exists(doc):
+            raise KeyError(f"doc {doc} does not exist")
+        op = {"op": "del", "doc": doc}
+        self.wal.append(op)
+        self._apply(op, replay=False)
+        self.counters["acked_ops"] += 1
+
+    def _apply(self, op: dict, *, replay: bool) -> None:
+        """Apply one (already durable) op to the in-memory delta state.
+        Replay uses the same code path as live application — that is the
+        identity the crash oracle depends on. A replayed op that
+        contradicts the index means the log and segments diverged:
+        typed ``WalError``, never a silent wrong answer."""
+        doc = int(op["doc"])
+        if op["op"] == "add":
+            tmap = {int(t): int(tf) for t, tf in op["terms"].items()}
+            if replay and (self._exists(doc) or not tmap):
+                raise WalError(
+                    f"replayed add of existing doc {doc} — WAL/segment "
+                    "divergence", format="wal")
+            with self._lock:
+                self._delta[doc] = tmap
+        else:
+            with self._lock:
+                if doc in self._delta:
+                    del self._delta[doc]
+                elif self._frozen is not None and doc in self._frozen \
+                        and doc not in self._frozen_tomb:
+                    self._frozen_tomb.add(doc)
+                elif doc not in self._tombstones and self._in_main(doc):
+                    self._tombstones.add(doc)
+                else:
+                    raise WalError(
+                        f"replayed delete of absent doc {doc} — "
+                        "WAL/segment divergence", format="wal")
+
+    # -- snapshots ---------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        """Refcounted consistent read view (release when done)."""
+        with self._lock:
+            tomb = np.fromiter(sorted(self._tombstones), dtype=np.int64,
+                               count=len(self._tombstones))
+            snap = Snapshot(
+                epoch=self.epoch, state=self.state, main=self.main,
+                main_tfs=self.main_tfs, tombstones=tomb,
+                delta_docs=dict(self._delta),
+                frozen_docs=dict(self._frozen) if self._frozen else {},
+                frozen_tomb=frozenset(self._frozen_tomb))
+            self._refs[snap.epoch] = self._refs.get(snap.epoch, 0) + 1
+        return snap
+
+    def release(self, snap: Snapshot) -> None:
+        with self._lock:
+            self._refs[snap.epoch] -= 1
+            if self._refs[snap.epoch] == 0:
+                del self._refs[snap.epoch]
+
+    def readers(self) -> dict[int, int]:
+        """Epoch → live reader count (old epochs drain after a swap)."""
+        with self._lock:
+            return dict(self._refs)
+
+    # -- queries -----------------------------------------------------------
+    def _term_merged(self, snap: Snapshot, term: int, stats):
+        """One term's logical postings under ``snap``: sorted
+        ``(docs int64, tfs int64, delta_docs int64)`` merging the decoded
+        main blocks (− tombstones) with the delta layers."""
+        tp = snap.main.terms.get(term)
+        if tp is not None and tp.df:
+            docs_m = _decode_blocks(tp, 0, tp.n_blocks, plan=self.plan,
+                                    stats=stats,
+                                    use_skip=True).astype(np.int64)
+            tfs_m = snap.main_tfs[term]
+            if snap.tombstones.size:
+                pos = np.searchsorted(snap.tombstones, docs_m)
+                pos = np.minimum(pos, snap.tombstones.size - 1)
+                dead = snap.tombstones[pos] == docs_m
+                if stats is not None:
+                    stats.tombstones_applied += int(dead.sum())
+                docs_m, tfs_m = docs_m[~dead], tfs_m[~dead]
+        else:
+            docs_m = np.zeros(0, np.int64)
+            tfs_m = np.zeros(0, np.int64)
+        d_docs, d_tfs = snap.delta_term(term)
+        if stats is not None:
+            stats.delta_postings += int(d_docs.size)
+        if d_docs.size:
+            docs = np.concatenate([docs_m, d_docs])
+            tfs = np.concatenate([tfs_m, d_tfs])
+            order = np.argsort(docs, kind="stable")
+            docs, tfs = docs[order], tfs[order]
+        else:
+            docs, tfs = docs_m, tfs_m
+        return docs, tfs, d_docs
+
+    def search(self, terms, *, mode: str = "or", k: int = 10,
+               stats: QueryStats | None = None, snap: Snapshot | None = None):
+        """Query the live logical state: ``mode`` "and"/"or" return sorted
+        uint32 docids; "topk" returns ``(docids uint32 [≤k], scores int32
+        [≤k])`` — each bit-identical to ``repro.index.query`` on an index
+        rebuilt from scratch from the same logical state (the fuzz
+        oracle's definition of correct)."""
+        own = snap is None
+        if own:
+            snap = self.snapshot()
+        try:
+            if stats is not None and snap.state == "replaying":
+                stats.mark_degraded("replaying")
+            terms = list(dict.fromkeys(terms))
+            if not terms:
+                raise ValueError("query needs ≥1 term")
+            merged = [self._term_merged(snap, t, stats) for t in terms]
+            if mode == "and":
+                live = [docs for docs, _, _ in merged]
+                if any(d.size == 0 for d in live):
+                    out = np.zeros(0, np.int64)
+                else:
+                    out = live[0]
+                    for d in live[1:]:
+                        out = np.intersect1d(out, d, assume_unique=True)
+                self._count_delta_hits(snap, out, merged, stats)
+                return out.astype(np.uint32)
+            if mode == "or":
+                parts = [docs for docs, _, _ in merged if docs.size]
+                out = (np.unique(np.concatenate(parts)) if parts
+                       else np.zeros(0, np.int64))
+                self._count_delta_hits(snap, out, merged, stats)
+                return out.astype(np.uint32)
+            if mode == "topk":
+                parts = [docs for docs, _, _ in merged if docs.size]
+                cand = (np.unique(np.concatenate(parts)) if parts
+                        else np.zeros(0, np.int64))
+                scores = np.zeros(cand.size, np.int64)
+                for t, (docs, tfs, _d) in zip(terms, merged):
+                    if docs.size == 0:
+                        continue
+                    base = impact_value(self.n_docs, int(docs.size),
+                                        self.impact_bits)
+                    q = quantize_impacts(base, tfs, self.impact_bits)
+                    scores[np.searchsorted(cand, docs)] += q
+                order = np.lexsort((cand, -scores))[:int(k)]
+                top = cand[order]
+                self._count_delta_hits(snap, top, merged, stats)
+                return (top.astype(np.uint32),
+                        scores[order].astype(np.int32))
+            raise ValueError(f"unknown mode {mode!r}; expected "
+                             "'and'/'or'/'topk'")
+        finally:
+            if own:
+                self.release(snap)
+
+    @staticmethod
+    def _count_delta_hits(snap, result, merged, stats):
+        if stats is None or len(result) == 0:
+            return
+        dd = np.unique(np.concatenate(
+            [d for _, _, d in merged if d.size] or [np.zeros(0, np.int64)]))
+        if dd.size:
+            stats.delta_hits += int(
+                np.isin(np.asarray(result, dtype=np.int64), dd).sum())
+
+    # -- materialization (merge drain + test oracle) -----------------------
+    def _merged_lists(self, *, frozen: dict, tombstones: set,
+                      frozen_tomb: set = frozenset(),
+                      extra: dict | None = None):
+        """Term-major logical postings: main (− ``tombstones``) merged with
+        ``frozen`` (− ``frozen_tomb``) and ``extra``. Returns
+        ``(lists {term: int64 docs}, tfs {term: int64})`` with empty terms
+        omitted — exactly what ``build_index`` (or the rebuild oracle)
+        consumes."""
+        extra = extra or {}
+        delta_terms: dict[int, list] = {}
+        for src, tomb in ((frozen, frozen_tomb), (extra, frozenset())):
+            for d, tmap in src.items():
+                if d in tomb:
+                    continue
+                for t, tf in tmap.items():
+                    delta_terms.setdefault(t, []).append((d, tf))
+        tomb_arr = np.fromiter(sorted(tombstones), dtype=np.int64,
+                               count=len(tombstones))
+        lists: dict[int, np.ndarray] = {}
+        tfs: dict[int, np.ndarray] = {}
+        for t in sorted(set(self.main.terms) | set(delta_terms)):
+            tp = self.main.terms.get(t)
+            if tp is not None and tp.df:
+                docs_m = tp.arr.decode(plan=self.plan).astype(np.int64)
+                tfs_m = self.main_tfs[t]
+                if tomb_arr.size:
+                    pos = np.minimum(np.searchsorted(tomb_arr, docs_m),
+                                     tomb_arr.size - 1)
+                    keep = tomb_arr[pos] != docs_m
+                    docs_m, tfs_m = docs_m[keep], tfs_m[keep]
+            else:
+                docs_m = np.zeros(0, np.int64)
+                tfs_m = np.zeros(0, np.int64)
+            rows = sorted(delta_terms.get(t, []))
+            if rows:
+                a = np.asarray(rows, dtype=np.int64)
+                docs = np.concatenate([docs_m, a[:, 0]])
+                tfv = np.concatenate([tfs_m, a[:, 1]])
+                order = np.argsort(docs, kind="stable")
+                docs, tfv = docs[order], tfv[order]
+            else:
+                docs, tfv = docs_m, tfs_m
+            if docs.size:
+                lists[t] = docs
+                tfs[t] = tfv
+        return lists, tfs
+
+    def materialize(self):
+        """Current *logical* state as ``(lists, tfs)`` — what a rebuilt-
+        from-scratch index would be built from (the fuzz oracle)."""
+        with self._lock:
+            frozen = dict(self._frozen) if self._frozen else {}
+            ftomb = set(self._frozen_tomb)
+            tomb = set(self._tombstones)
+            extra = dict(self._delta)
+        return self._merged_lists(frozen=frozen, tombstones=tomb,
+                                  frozen_tomb=ftomb, extra=extra)
+
+    # -- merge (the 8-crash-point sequence) --------------------------------
+    def merge(self, *, crash_at: str | None = None, step_hook=None) -> dict:
+        """Drain the delta into a fresh compressed segment and commit it.
+
+        Writes stay live throughout (they land in the rotated WAL + active
+        delta) and queries never block — the manifest replace is the
+        single commit point, after which the in-memory epoch swaps.
+        ``crash_at`` raises :class:`CrashPoint` at the named point
+        (tests); ``step_hook(name)`` runs at every point (mid-merge query
+        parity checks). See :data:`CRASH_POINTS`.
+        """
+        if crash_at is not None and crash_at not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {crash_at!r}")
+        if self.state == "merge_in_progress":
+            raise RuntimeError("merge already in progress")
+
+        def point(name: str) -> None:
+            if step_hook is not None:
+                step_hook(name)
+            if crash_at == name:
+                raise CrashPoint(name)
+
+        self.state = "merge_in_progress"
+        ok = False
+        try:
+            point("before_rotate")
+            old_wal_id = self.wal_id
+            new_id = old_wal_id + 1
+            _, new_writer = open_wal(wal_path(self.dir, new_id),
+                                     fsync=self.fsync)
+            with self._lock:
+                self.wal.close()
+                self.wal, self.wal_id = new_writer, new_id
+                self._frozen = self._delta
+                self._delta = {}
+                rot_tomb = set(self._tombstones)
+                self._frozen_tomb = set()
+            point("after_rotate")
+
+            frozen = self._frozen
+            lists, tfs = self._merged_lists(frozen=frozen,
+                                            tombstones=rot_tomb)
+            new_index = build_index(
+                lists, tfs=tfs, format=self.format,
+                block_size=self.block_size, n_docs=self.n_docs,
+                impact_bits=self.impact_bits, checksum=self.checksum)
+            all_docs = np.unique(np.concatenate(
+                list(lists.values()) or [np.zeros(0, np.int64)]))
+            point("after_build")
+
+            new_epoch = self.epoch + 1
+            seg_nm = _seg_name(new_epoch)
+            seg_parent = os.path.join(self.dir, SEGMENTS_DIR)
+            seg_final = self._seg_dir(seg_nm)
+            tmp = os.path.join(
+                seg_parent, f"{TMP_PREFIX}{seg_nm}_{os.getpid()}")
+            os.makedirs(tmp)
+            _write_segment_files(tmp, new_index, tfs, all_docs,
+                                 epoch=new_epoch, merged_wal=old_wal_id,
+                                 fsync=self.fsync)
+            point("segment_tmp_written")
+            os.rename(tmp, seg_final)
+            if self.fsync:
+                fsync_dir(seg_parent)
+            point("after_segment_rename")
+
+            man = dict(self.manifest)
+            man.update(epoch=new_epoch, segments=[seg_nm],
+                       merged_wal=old_wal_id)
+            mtmp = os.path.join(
+                self.dir, f"{TMP_PREFIX}{MANIFEST_NAME}_{os.getpid()}")
+            with open(mtmp, "w") as f:
+                json.dump(man, f, indent=1)
+                f.flush()
+                if self.fsync:
+                    os.fsync(f.fileno())
+            point("manifest_tmp_written")
+            os.replace(mtmp, self._manifest_path())  # THE commit point
+            if self.fsync:
+                fsync_dir(self.dir)
+            point("after_manifest")
+
+            tfs_np = {t: np.asarray(v, dtype=np.int64)
+                      for t, v in tfs.items()}
+            with self._lock:
+                self.main = new_index
+                self.main_tfs = tfs_np
+                self._main_docs = all_docs.astype(np.int64)
+                self.manifest = man
+                self.epoch = new_epoch
+                # tombstones drained into the segment retire; deletes that
+                # raced the merge (incl. of frozen docs, now in main) stay
+                self._tombstones = (self._tombstones - rot_tomb) \
+                    | self._frozen_tomb
+                self._frozen = None
+                self._frozen_tomb = set()
+
+            for nm in os.listdir(self.dir):
+                i = parse_wal_name(nm)
+                if i is not None and i <= old_wal_id:
+                    os.remove(os.path.join(self.dir, nm))
+            for nm in os.listdir(seg_parent):
+                e = _parse_seg_name(nm)
+                if e is not None and e != new_epoch:
+                    shutil.rmtree(self._seg_dir(nm))
+            point("after_cleanup")
+            self.counters["merges"] += 1
+            ok = True
+            return {"epoch": new_epoch, "drained_docs": len(frozen),
+                    "drained_tombstones": len(rot_tomb),
+                    "n_postings": int(new_index.n_postings),
+                    "bits_per_int": (round(new_index.bits_per_int, 2)
+                                     if new_index.n_postings else 0.0)}
+        finally:
+            if ok:
+                self.state = "serving"
+            # on a crash the object is dead by contract: recovery reopens
+            # the directory. Leave state at merge_in_progress so misuse of
+            # the carcass is loud.
+
+    def close(self) -> None:
+        self.wal.close()

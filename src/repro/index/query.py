@@ -133,6 +133,12 @@ class QueryStats:
     retries: int = 0  # transient-failure retries that succeeded
     quarantined_blocks: int = 0  # blocks of quarantined segments not served
     bound_fallbacks: int = 0  # maxscore→TAAT fallbacks (unsafe bounds)
+    # live-index accounting (repro.index.ingest): postings served from the
+    # uncompressed delta layer, result docs sourced from it, and main-
+    # segment postings suppressed by the tombstone set at query time
+    delta_postings: int = 0
+    delta_hits: int = 0
+    tombstones_applied: int = 0
     degraded: bool = False
     degraded_reasons: list = field(default_factory=list)
 
@@ -149,7 +155,8 @@ class QueryStats:
                   "rows_gathered", "ints_decoded", "impact_ints_decoded",
                   "postings_pruned", "probes_pruned", "decode_calls",
                   "errors", "retries", "quarantined_blocks",
-                  "bound_fallbacks"):
+                  "bound_fallbacks", "delta_postings", "delta_hits",
+                  "tombstones_applied"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for t, v in other.per_term_decoded.items():
             self.per_term_decoded[t] = self.per_term_decoded.get(t, 0) + v

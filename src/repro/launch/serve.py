@@ -10,6 +10,8 @@ search engine (:class:`SearchEngine`).
     PYTHONPATH=src python -m repro.launch.serve --arch search --devices 8
     PYTHONPATH=src python -m repro.launch.serve --arch search --devices 8 \
         --degraded-smoke    # kill 1 of 8 shards, assert flagged partials
+    PYTHONPATH=src python -m repro.launch.serve --arch search \
+        --ingest-smoke      # WAL ingest, crash a merge, recover, parity
 
 The two-tower arch runs the ``ServingEngine``: a compressed candidate
 corpus resident on the mesh (``CompressedIntArray.shard`` — block dim over
@@ -822,6 +824,245 @@ def serve_search_degraded(*, queries: int = 32, group_k: int = 8,
     return stats
 
 
+class LiveSearchEngine:
+    """Serving facade over a mutable :class:`repro.index.ingest.LiveIndex`.
+
+    The static ``SearchEngine`` above serves one immutable index; this one
+    serves the live logical state (main segment − tombstones ∪ delta) and
+    surfaces the ingestion layer's degraded states the same way the rest
+    of the serving stack does (docs/ingestion.md):
+
+    * ``replaying`` — the index is still replaying its WAL after a
+      restart; answers are correct for the replayed prefix and flagged
+      degraded via ``QueryStats``.
+    * ``merge_in_progress`` — a background merge is draining the delta;
+      queries keep full fidelity (bit-identical to quiescent — the fuzz
+      suite proves it), the flag is reported in workload stats for
+      capacity planning.
+
+    Mutations (``add``/``delete``) proxy to the live index and are durable
+    (WAL-appended + fsynced) before they return.
+    """
+
+    def __init__(self, live, *, top_k: int = 10):
+        self.live = live
+        self.top_k = top_k
+        self._stats: list[dict] = []
+
+    def add(self, doc, terms):
+        self.live.add(doc, terms)
+
+    def delete(self, doc):
+        self.live.delete(doc)
+
+    def search(self, terms, mode: str = "and", *, stats=None):
+        if mode == "topk":
+            return self.live.search(terms, mode="topk", k=self.top_k,
+                                    stats=stats)
+        return self.live.search(terms, mode=mode, stats=stats)
+
+    def run_workload(self, queries) -> dict:
+        """Drive (mode, terms) queries; aggregate QPS/latency plus the
+        live-index accounting (delta-sourced hits, tombstone suppressions,
+        merge/replay states)."""
+        from repro.index import QueryStats
+
+        st = QueryStats()
+        lat = []
+        n_results = 0
+        degraded = 0
+        merging = 0
+        t_start = time.perf_counter()
+        for mode, terms in queries:
+            q = QueryStats()
+            t0 = time.perf_counter()
+            out = self.search(terms, mode, stats=q)
+            lat.append(time.perf_counter() - t0)
+            n_results += len(out[0] if isinstance(out, tuple) else out)
+            degraded += int(q.degraded)
+            merging += int(self.live.state == "merge_in_progress")
+            st.merge(q)
+        wall = time.perf_counter() - t_start
+        stats = {
+            "n_queries": len(queries),
+            **latency_summary(lat, wall, len(queries)),
+            "n_results": int(n_results),
+            "epoch": self.live.epoch,
+            "state": self.live.state,
+            "merge_in_progress_queries": merging,
+            "n_delta_docs": self.live.n_delta_docs,
+            "pending_ops": self.live.n_pending,
+            "doc_count": self.live.doc_count(),
+            "blocks_decoded": st.blocks_decoded,
+            "ints_decoded": st.ints_decoded,
+            "delta_postings": st.delta_postings,
+            "delta_hits": st.delta_hits,
+            "tombstones_applied": st.tombstones_applied,
+            "degraded_responses": degraded,
+        }
+        self._stats.append(stats)
+        return stats
+
+
+def _ingest_ops(rng, *, n_ops: int, universe: int, n_terms: int):
+    """A seeded add/delete op stream plus the resulting logical state."""
+    state: dict[int, dict[int, int]] = {}
+    ops = []
+    for _ in range(n_ops):
+        if state and rng.random() < 0.25:
+            doc = int(rng.choice(sorted(state)))
+            ops.append(("del", doc, None))
+            del state[doc]
+        else:
+            doc = int(rng.integers(universe))
+            if doc in state:
+                continue
+            k = int(rng.integers(1, 5))
+            terms = {int(t): int(rng.integers(1, 5))
+                     for t in rng.choice(n_terms, size=k, replace=False)}
+            ops.append(("add", doc, terms))
+            state[doc] = terms
+    return ops, state
+
+
+def _rebuild_oracle(state: dict, *, universe: int, block_size: int = 128):
+    """Rebuilt-from-scratch index over a logical doc→terms state — the
+    definition of correct the live index is compared against."""
+    import numpy as np
+
+    from repro.index import build_index
+
+    lists: dict[int, list] = {}
+    tfs: dict[int, list] = {}
+    for doc in sorted(state):
+        for t, tf in state[doc].items():
+            lists.setdefault(t, []).append(doc)
+            tfs.setdefault(t, []).append(tf)
+    return build_index(
+        {t: np.asarray(v, np.int64) for t, v in lists.items()},
+        tfs={t: np.asarray(v, np.int64) for t, v in tfs.items()},
+        format="auto", n_docs=universe, block_size=block_size,
+        checksum=True)
+
+
+def serve_ingest_smoke(*, ops: int = 200, queries: int = 24,
+                       top_k: int = 10, record: bool = True,
+                       seed: int = 0) -> dict:
+    """CI end-to-end ingestion smoke (docs/ingestion.md).
+
+    Ingest a seeded add/delete stream into a WAL-backed ``LiveIndex``,
+    **crash** the background merge at a seeded-random named crash point,
+    recover by reopening the directory, and assert query parity —
+    AND/OR/top-k bit-identical to an index rebuilt from scratch from the
+    acknowledged logical state — before and after the crash, during the
+    (retried) merge at every crash point, and after it commits. Raises
+    ``AssertionError`` on any divergence.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.index import CRASH_POINTS, CrashPoint, LiveIndex, QueryStats
+    from repro.index import query as iq
+
+    rng = np.random.default_rng(seed)
+    universe = 50_000
+    n_terms = 12
+    workdir = tempfile.mkdtemp(prefix="ingest_smoke_")
+    try:
+        live = LiveIndex(workdir, n_docs=universe, fsync=False)
+        stream, state = _ingest_ops(rng, n_ops=ops, universe=universe,
+                                    n_terms=n_terms)
+        for kind, doc, terms in stream:
+            (live.add(doc, terms) if kind == "add" else live.delete(doc))
+
+        qs = []
+        for _ in range(queries):
+            k = int(rng.integers(1, 4))
+            terms = [int(t) for t in rng.choice(n_terms, size=k,
+                                                replace=False)]
+            qs.append((("and", "or", "topk")[int(rng.integers(3))], terms))
+
+        def assert_parity(ix, tag):
+            oracle = _rebuild_oracle(state, universe=universe)
+            for mode, terms in qs:
+                if mode == "and":
+                    a, b = ix.search(terms, mode="and"), \
+                        iq.conjunctive(oracle, terms)
+                elif mode == "or":
+                    a, b = ix.search(terms, mode="or"), \
+                        iq.disjunctive(oracle, terms)
+                else:
+                    a = ix.search(terms, mode="topk", k=top_k)
+                    b = iq.topk(oracle, terms, top_k, mode="or")
+                aa = a if isinstance(a, tuple) else (a,)
+                bb = b if isinstance(b, tuple) else (b,)
+                assert all(np.array_equal(x, y) for x, y in zip(aa, bb)), \
+                    (tag, mode, terms)
+
+        assert_parity(live, "pre-crash")
+        crash_at = str(rng.choice(CRASH_POINTS))
+        try:
+            live.merge(crash_at=crash_at)
+            raise AssertionError("injected crash did not fire")
+        except CrashPoint:
+            pass
+        live.close()
+        print(f"ingested {len(stream)} ops ({live.counters['acked_ops']} "
+              f"acked), crashed merge at {crash_at!r}")
+
+        live = LiveIndex(workdir, fsync=False)  # recovery IS the reopen
+        assert_parity(live, f"recovered({crash_at})")
+        # retry the merge; queries at every named point stay bit-identical
+        live.merge(step_hook=lambda name: assert_parity(
+            live, f"mid-merge({name})"))
+        assert_parity(live, "post-merge")
+
+        engine = LiveSearchEngine(live, top_k=top_k)
+        wl = engine.run_workload(qs)
+        # a couple of live writes + a degraded replay check
+        doc = int(rng.integers(universe))
+        while doc in state:
+            doc = int(rng.integers(universe))
+        engine.add(doc, {0: 1})
+        state[doc] = {0: 1}
+        assert_parity(live, "post-workload-write")
+        # a plain restart replays the unmerged write and serves it; a
+        # query issued *during* replay is flagged degraded("replaying")
+        live.close()
+        replay_flags = []
+
+        def replay_probe(ix, i, op):
+            q = QueryStats()
+            ix.search([0], mode="or", stats=q)
+            replay_flags.append((q.degraded, list(q.degraded_reasons)))
+
+        live = LiveIndex(workdir, fsync=False, replay_hook=replay_probe)
+        assert replay_flags and all(
+            d and r == ["replaying"] for d, r in replay_flags), replay_flags
+        assert_parity(live, "post-restart")
+        stats = {
+            "n_ops": len(stream),
+            "n_queries": len(qs),
+            "crash_point": crash_at,
+            "recovered_replayed_ops": live.counters["replayed_ops"],
+            "rolled_forward": live.counters["rolled_forward"],
+            **{k: wl[k] for k in ("qps", "p50_ms", "p99_ms", "delta_hits",
+                                  "tombstones_applied", "doc_count",
+                                  "epoch") if k in wl},
+        }
+        live.close()
+        print(f"recovery parity OK at {crash_at!r} + all "
+              f"{len(CRASH_POINTS)} mid-merge points — ingest smoke OK")
+        if record:
+            path = record_benchmark("ingest_smoke", stats)
+            print(f"recorded -> {path}")
+        return stats
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def _repo_benchmarks_path() -> str:
     src = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))  # <repo>/src
@@ -909,6 +1150,10 @@ def main():
     ap.add_argument("--degraded-smoke", action="store_true",
                     help="search arch: kill one logical shard mid-workload "
                          "and assert flagged partial results + healing")
+    ap.add_argument("--ingest-smoke", action="store_true",
+                    help="search arch: ingest a WAL-backed live index, "
+                         "crash the merge at a random point, recover, and "
+                         "assert query parity vs a rebuilt index")
     args = ap.parse_args()
 
     if args.devices:
@@ -921,6 +1166,11 @@ def main():
 
     # jax must initialize AFTER the device-count flag is set
     if args.arch == "search":
+        if args.ingest_smoke:
+            serve_ingest_smoke(ops=max(args.requests, 50),
+                               top_k=args.top_k,
+                               record=not args.no_record)
+            return
         if args.degraded_smoke:
             serve_search_degraded(queries=args.requests, top_k=args.top_k,
                                   record=not args.no_record)

@@ -8,19 +8,33 @@ Three layers (docs/robustness.md):
   (:func:`decode_checked`) riding the fused ``checksum`` epilogue.
 * :mod:`repro.robustness.faultgen` — the seeded corruption generator driving
   the detect-or-defined-value property tests (tests/test_robustness.py).
+* :mod:`repro.robustness.atomic_io` — the one crash-consistent write
+  protocol (tmp + fsync + rename) shared by checkpoints and index
+  segments, so durability is tested in a single place.
 * degraded-mode serving lives with the engines in ``repro.launch.serve``
   (quarantine, deadlines, retry, shard loss), built on these validators.
 """
+from .atomic_io import (  # noqa: F401
+    atomic_write_bytes,
+    atomic_write_dir,
+    atomic_write_json,
+    clean_tmp,
+    crc32_file,
+    fsync_dir,
+)
 from .validate import (  # noqa: F401
     BlockMetaError,
     BoundViolationError,
+    CheckpointError,
     ChecksumError,
     ControlMismatchError,
     Deadline,
     DecodeError,
     NonCanonicalError,
     OverlongRunError,
+    SegmentError,
     TruncatedPayloadError,
+    WalError,
     decode_checked,
     validate_array,
     validate_meta,

@@ -96,6 +96,30 @@ class ChecksumError(DecodeError):
     """Decoded values disagree with the stored per-block checksum column."""
 
 
+class WalError(DecodeError):
+    """A write-ahead-log record is structurally invalid *mid-log*: a CRC or
+    framing failure on a record that has durable data after it, or a
+    replayed operation that contradicts index state. A torn *tail* (the
+    one unacknowledged record a crash can legitimately shear) is not an
+    error — the reader truncates it and recovers the acked prefix
+    (docs/ingestion.md §WAL format)."""
+
+
+class SegmentError(DecodeError):
+    """A persisted index segment — or the manifest naming it — is missing,
+    truncated, corrupt, or stale. Raised by :mod:`repro.index.ingest` at
+    load when the whole-file CRC or per-term metadata disagrees with the
+    bytes on disk, and when recovery cannot reconstruct a consistent
+    segment set (an adopted-orphan candidate that is itself corrupt)."""
+
+
+class CheckpointError(DecodeError):
+    """A checkpoint step's ``manifest.json``/``leaves.npz`` is unreadable
+    or internally inconsistent. ``restore_latest`` treats this as
+    skip-to-previous-intact-step, not a crash
+    (repro.checkpoint.manager)."""
+
+
 # ---------------------------------------------------------------------------
 # deadlines (used by repro.index.query and repro.launch.serve)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,732 @@
+"""Crash-safe streaming ingestion: WAL, LiveIndex, recovery fuzzing.
+
+The contract under test (docs/ingestion.md):
+
+* every acknowledged add/delete survives any crash (WAL-append-before-ack),
+* recovery reopens to query results **bit-identical** to an index rebuilt
+  from scratch from the acknowledged logical state (the oracle),
+* every named crash point in the merge sequence recovers,
+* every durability fault class is detect-or-recover — never a silent
+  wrong answer,
+* queries served during a background merge equal quiescent results.
+
+The interleaving oracle's seed count scales with ``INGEST_ORACLE_SEEDS``
+(default keeps tier-1 fast; the CI ingestion job sets 200+ to meet the
+acceptance bar ≥200 interleavings × every crash point).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.index import (CRASH_POINTS, CrashPoint, LiveIndex, QueryStats,
+                         build_index, conjunctive, disjunctive, topk)
+from repro.index.wal import WalWriter, open_wal, read_wal
+from repro.robustness import (CheckpointError, SegmentError, WalError,
+                              atomic_write_bytes, atomic_write_dir,
+                              atomic_write_json, clean_tmp, crc32_file)
+from repro.robustness.faultgen import DURABILITY_CLASSES, corrupt_dir
+
+ORACLE_SEEDS = int(os.environ.get("INGEST_ORACLE_SEEDS", "12"))
+UNIVERSE = 5000
+N_TERMS = 8
+
+
+# ---------------------------------------------------------------------------
+# helpers: op streams and the rebuilt-from-scratch oracle
+# ---------------------------------------------------------------------------
+def rand_terms(rng):
+    k = int(rng.integers(1, 4))
+    return {int(t): int(rng.integers(1, 5))
+            for t in rng.choice(N_TERMS, size=k, replace=False)}
+
+
+def apply_stream(rng, live, state, n_ops, *, p_del=0.3):
+    """Drive random acked ops into ``live``, mirroring them in ``state``."""
+    for _ in range(n_ops):
+        if state and rng.random() < p_del:
+            doc = int(rng.choice(sorted(state)))
+            live.delete(doc)
+            del state[doc]
+        else:
+            doc = int(rng.integers(UNIVERSE))
+            if doc in state:
+                continue
+            terms = rand_terms(rng)
+            live.add(doc, terms)
+            state[doc] = terms
+
+
+def oracle_index(state):
+    lists, tfs = {}, {}
+    for doc in sorted(state):
+        for t, tf in state[doc].items():
+            lists.setdefault(t, []).append(doc)
+            tfs.setdefault(t, []).append(tf)
+    return build_index(
+        {t: np.asarray(v, np.int64) for t, v in lists.items()},
+        tfs={t: np.asarray(v, np.int64) for t, v in tfs.items()},
+        format="auto", n_docs=UNIVERSE, checksum=True)
+
+
+QUERY_SETS = ([0, 3], [1], [2, 5, 7], [4, 6], [0, 1, 2])
+
+
+def assert_parity(live, state, *, tag="", queries=QUERY_SETS, k=5):
+    """live results == rebuilt-from-scratch results, bit for bit, for
+    AND / OR / top-k over the given query term sets."""
+    idx = oracle_index(state)
+    for q in queries:
+        a = live.search(q, mode="and")
+        b = conjunctive(idx, q)
+        assert np.array_equal(a, b) and a.dtype == b.dtype, (tag, "and", q)
+        a = live.search(q, mode="or")
+        b = disjunctive(idx, q)
+        assert np.array_equal(a, b) and a.dtype == b.dtype, (tag, "or", q)
+        ad, asc = live.search(q, mode="topk", k=k)
+        bd, bsc = topk(idx, q, k, mode="or")
+        assert np.array_equal(ad, bd) and np.array_equal(asc, bsc), \
+            (tag, "topk", q, (ad, asc), (bd, bsc))
+
+
+def fresh_live(path, **kw):
+    kw.setdefault("n_docs", UNIVERSE)
+    kw.setdefault("fsync", False)  # tests hammer the disk; torn-tail
+    #   semantics are injected explicitly, not left to the page cache
+    return LiveIndex(str(path), **kw)
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+# ---------------------------------------------------------------------------
+class TestWal:
+    def test_roundtrip(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        ops = [{"op": "add", "doc": i, "terms": {"0": 1}} for i in range(7)]
+        ops.append({"op": "del", "doc": 3})
+        for op in ops:
+            w.append(op)
+        w.close()
+        got, valid = read_wal(p)
+        assert got == ops and valid == os.path.getsize(p)
+
+    def test_torn_tail_truncated_on_open(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        w.append({"op": "add", "doc": 1, "terms": {"0": 1}})
+        w.append({"op": "add", "doc": 2, "terms": {"0": 1}})
+        w.close()
+        size = os.path.getsize(p)
+        with open(p, "ab") as f:  # half-written header
+            f.write(b"\x99\x01")
+        ops, valid = read_wal(p)
+        assert len(ops) == 2 and valid == size
+        ops2, w2 = open_wal(p, fsync=False)
+        w2.close()
+        assert ops2 == ops and os.path.getsize(p) == size  # tail gone
+
+    def test_tail_cut_inside_final_record_recovers_prefix(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        w.append({"op": "add", "doc": 1, "terms": {"0": 1}})
+        end1 = w.append({"op": "add", "doc": 2, "terms": {"0": 1}})
+        w.close()
+        with open(p, "r+b") as f:
+            f.truncate(end1 - 3)
+        ops, valid = read_wal(p)
+        assert [op["doc"] for op in ops] == [1]
+        assert valid < end1 - 3  # the sheared record doesn't count
+
+    def test_midlog_corruption_detected(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        w.append({"op": "add", "doc": 1, "terms": {"0": 1}})
+        w.append({"op": "add", "doc": 2, "terms": {"0": 1}})
+        w.close()
+        with open(p, "r+b") as f:  # flip a payload byte of record 0
+            f.seek(10)
+            b = f.read(1)[0]
+            f.seek(10)
+            f.write(bytes([b ^ 0x40]))
+        with pytest.raises(WalError):
+            read_wal(p)
+
+    def test_final_record_crc_garbage_is_torn(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        w.append({"op": "add", "doc": 1, "terms": {"0": 1}})
+        w.append({"op": "add", "doc": 2, "terms": {"0": 1}})
+        w.close()
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:  # corrupt the FINAL record's payload
+            f.seek(size - 1)
+            b = f.read(1)[0]
+            f.seek(size - 1)
+            f.write(bytes([b ^ 1]))
+        ops, valid = read_wal(p)  # final record = possibly-torn append
+        assert [op["doc"] for op in ops] == [1] and valid < size
+
+    def test_bad_length_midlog_detected(self, tmp_path):
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        for i in range(40):  # enough bytes after record 0
+            w.append({"op": "add", "doc": i,
+                      "terms": {str(j): 1 for j in range(8)}})
+        w.close()
+        with open(p, "r+b") as f:  # misframe record 0: wrong in-file length
+            f.write((2000).to_bytes(4, "little"))
+        with pytest.raises(WalError):
+            read_wal(p)
+
+    def test_oversize_length_past_eof_is_torn(self, tmp_path):
+        # documented limitation (wal.py): a bogus length claiming an
+        # extent past EOF is indistinguishable from a torn append — the
+        # reader recovers the shorter prefix instead of erroring
+        p = str(tmp_path / "w.log")
+        w = WalWriter(p, fsync=False)
+        w.append({"op": "add", "doc": 1, "terms": {"0": 1}})
+        end1 = w.tell()
+        w.append({"op": "add", "doc": 2, "terms": {"0": 1}})
+        w.close()
+        with open(p, "r+b") as f:
+            f.seek(end1)
+            f.write((1 << 24).to_bytes(4, "little"))
+        ops, valid = read_wal(p)
+        assert [op["doc"] for op in ops] == [1] and valid == end1
+
+
+# ---------------------------------------------------------------------------
+# atomic_io
+# ---------------------------------------------------------------------------
+class TestAtomicIO:
+    def test_atomic_write_bytes_replaces(self, tmp_path):
+        p = str(tmp_path / "f.bin")
+        atomic_write_bytes(p, b"one", fsync=False)
+        atomic_write_bytes(p, b"two", fsync=False)
+        assert open(p, "rb").read() == b"two"
+        assert os.listdir(tmp_path) == ["f.bin"]  # no tmp leftovers
+
+    def test_atomic_write_json(self, tmp_path):
+        p = str(tmp_path / "m.json")
+        atomic_write_json(p, {"a": 1}, fsync=False)
+        assert json.load(open(p)) == {"a": 1}
+
+    def test_atomic_write_dir_fill_failure_leaves_old(self, tmp_path):
+        d = str(tmp_path / "seg")
+
+        def ok(t):
+            open(os.path.join(t, "x"), "w").write("v1")
+
+        atomic_write_dir(d, ok, fsync=False)
+
+        def boom(t):
+            open(os.path.join(t, "x"), "w").write("v2")
+            raise RuntimeError("die mid-fill")
+
+        with pytest.raises(RuntimeError):
+            atomic_write_dir(d, boom, fsync=False)
+        assert open(os.path.join(d, "x")).read() == "v1"
+        assert [e for e in os.listdir(tmp_path)
+                if e.startswith(".tmp_")] == []
+
+    def test_clean_tmp(self, tmp_path):
+        os.makedirs(tmp_path / ".tmp_seg_1_2")
+        open(tmp_path / ".tmp_f", "w").write("x")
+        open(tmp_path / "keep", "w").write("x")
+        assert clean_tmp(str(tmp_path)) == 2
+        assert sorted(os.listdir(tmp_path)) == ["keep"]
+
+    def test_crc32_file_detects_any_change(self, tmp_path):
+        p = str(tmp_path / "f")
+        open(p, "wb").write(b"hello world" * 100)
+        c0 = crc32_file(p)
+        with open(p, "r+b") as f:
+            f.seek(500)
+            f.write(b"\x00")
+        assert crc32_file(p) != c0
+
+
+# ---------------------------------------------------------------------------
+# LiveIndex basics
+# ---------------------------------------------------------------------------
+class TestLiveIndexBasics:
+    def test_ops_and_query_parity(self, tmp_path):
+        rng = np.random.default_rng(0)
+        live = fresh_live(tmp_path / "ix")
+        state = {}
+        apply_stream(rng, live, state, 80)
+        assert_parity(live, state, tag="pre-merge")
+        assert live.doc_count() == len(state)
+        live.merge()
+        assert_parity(live, state, tag="post-merge")
+        apply_stream(rng, live, state, 40)
+        assert_parity(live, state, tag="delta-over-segment")
+        live.close()
+
+    def test_wal_before_ack_add_validation(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        live.add(5, {0: 2})
+        with pytest.raises(ValueError):
+            live.add(5, {1: 1})  # exists
+        with pytest.raises(ValueError):
+            live.add(UNIVERSE + 1, {0: 1})  # out of universe
+        with pytest.raises(ValueError):
+            live.add(7, {})  # no terms
+        with pytest.raises(ValueError):
+            live.add(7, {0: 0})  # tf < 1
+        with pytest.raises(KeyError):
+            live.delete(999)  # absent
+        # failed ops were never logged: replay sees exactly one add
+        live.close()
+        live2 = fresh_live(tmp_path / "ix")
+        assert live2.counters["replayed_ops"] == 1 and 5 in live2
+        live2.close()
+
+    def test_delete_then_readd(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        live.add(10, {0: 1})
+        live.merge()  # 10 now lives in the main segment
+        live.delete(10)  # tombstone
+        assert 10 not in live
+        live.add(10, {1: 3})  # re-add: delta copy shadows the tombstone
+        assert 10 in live
+        assert_parity(live, {10: {1: 3}}, tag="readd")
+        live.merge()
+        assert_parity(live, {10: {1: 3}}, tag="readd-merged")
+        live.close()
+
+    def test_restart_replays_to_identical_results(self, tmp_path):
+        rng = np.random.default_rng(1)
+        live = fresh_live(tmp_path / "ix")
+        state = {}
+        apply_stream(rng, live, state, 60)
+        live.close()
+        live2 = fresh_live(tmp_path / "ix")
+        assert live2.counters["replayed_ops"] == live.counters["acked_ops"]
+        assert_parity(live2, state, tag="restart")
+        live2.close()
+
+    def test_replaying_state_flags_queries_degraded(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        for i in range(5):
+            live.add(i, {0: 1})
+        live.close()
+        seen = []
+
+        def hook(ix, i, op):
+            st = QueryStats()
+            ix.search([0], mode="or", stats=st)
+            seen.append((ix.state, st.degraded, tuple(st.degraded_reasons)))
+
+        live2 = fresh_live(tmp_path / "ix", replay_hook=hook)
+        assert len(seen) == 5
+        assert all(s == ("replaying", True, ("replaying",)) for s in seen)
+        st = QueryStats()
+        live2.search([0], mode="or", stats=st)
+        assert live2.state == "serving" and not st.degraded
+        live2.close()
+
+    def test_delta_stats_accounting(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        for i in range(20):
+            live.add(i, {0: 1})
+        live.merge()
+        live.delete(3)  # tombstone against main
+        live.add(1000, {0: 2})  # delta doc
+        st = QueryStats()
+        out = live.search([0], mode="or", stats=st)
+        assert 3 not in out and 1000 in out
+        assert st.tombstones_applied == 1
+        assert st.delta_postings == 1 and st.delta_hits == 1
+        assert st.blocks_decoded > 0  # main postings went through decode
+        live.close()
+
+    def test_snapshot_isolation_across_merge(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        for i in range(10):
+            live.add(i, {0: i % 3 + 1})
+        snap = live.snapshot()
+        assert live.readers() == {0: 1}
+        live.merge()  # epoch swap while a reader is out
+        assert live.epoch == 1
+        # the old snapshot still answers from epoch-0 state
+        docs, tfs, _ = live._term_merged(snap, 0, None)
+        assert list(docs) == list(range(10))
+        live.add(2000, {0: 1})
+        docs2, _, _ = live._term_merged(snap, 0, None)
+        assert 2000 not in docs2  # invisible to the old snapshot
+        live.release(snap)
+        assert 0 not in live.readers()
+        live.close()
+
+    def test_writes_during_merge_stay_live(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        state = {}
+        for i in range(30):
+            live.add(i, {int(i % N_TERMS): 1})
+            state[i] = {int(i % N_TERMS): 1}
+
+        def hook(name):
+            # mutate mid-merge: ops land in the rotated WAL + active delta
+            if name == "after_build":
+                live.add(4000, {0: 9})
+                state[4000] = {0: 9}
+                live.delete(7)
+                del state[7]
+                assert_parity(live, state, tag="mid-merge-writes")
+
+        live.merge(step_hook=hook)
+        assert_parity(live, state, tag="post-merge-writes")
+        # and they survive a restart (they were WAL-acked, not merged)
+        live.close()
+        live2 = fresh_live(tmp_path / "ix")
+        assert live2.counters["replayed_ops"] == 2
+        assert_parity(live2, state, tag="post-merge-writes-restart")
+        live2.close()
+
+    def test_merge_during_merge_rejected(self, tmp_path):
+        live = fresh_live(tmp_path / "ix")
+        live.add(1, {0: 1})
+
+        def hook(name):
+            if name == "after_rotate":
+                with pytest.raises(RuntimeError):
+                    live.merge()
+
+        live.merge(step_hook=hook)
+        live.close()
+
+
+# ---------------------------------------------------------------------------
+# crash-point recovery + the randomized interleaving oracle
+# ---------------------------------------------------------------------------
+def crash_and_recover(src_dir, tmp_path, cp, state, *, tag):
+    """Copy the closed index dir, crash a merge at ``cp``, reopen, check
+    parity, then complete the merge and check again."""
+    dd = str(tmp_path / f"crash_{tag}_{cp}")
+    shutil.copytree(src_dir, dd)
+    lc = LiveIndex(dd, fsync=False)
+    with pytest.raises(CrashPoint):
+        lc.merge(crash_at=cp)
+    assert lc.state == "merge_in_progress"  # the carcass stays poisoned
+    lc.close()
+    lr = LiveIndex(dd, fsync=False)
+    assert_parity(lr, state, tag=f"{tag}:{cp}:recovered")
+    lr.merge()
+    assert_parity(lr, state, tag=f"{tag}:{cp}:post-retry-merge")
+    lr.close()
+    shutil.rmtree(dd)
+
+
+@pytest.mark.parametrize("seed", range(ORACLE_SEEDS))
+def test_interleaving_oracle(seed, tmp_path):
+    """≥N seeded add/delete/query interleavings; each checked against the
+    rebuilt-from-scratch oracle at every query step, then crashed at EVERY
+    named crash point and recovered to bit-identical results — including
+    interleavings that already contain a committed merge."""
+    rng = np.random.default_rng(1000 + seed)
+    base = str(tmp_path / "ix")
+    live = LiveIndex(base, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    # op stream with interleaved queries; some seeds merge mid-stream so
+    # the crash sweep below exercises delta-over-segment states
+    n_rounds = int(rng.integers(3, 6))
+    for r in range(n_rounds):
+        apply_stream(rng, live, state, int(rng.integers(8, 20)))
+        qs = [sorted(int(t) for t in
+                     rng.choice(N_TERMS, size=rng.integers(1, 4),
+                                replace=False))]
+        assert_parity(live, state, tag=f"seed{seed}:round{r}", queries=qs)
+        if r == 1 and rng.random() < 0.5:
+            live.merge()
+            assert_parity(live, state, tag=f"seed{seed}:merged{r}",
+                          queries=qs)
+    live.close()
+
+    for cp in CRASH_POINTS:
+        crash_and_recover(base, tmp_path, cp, state, tag=f"seed{seed}")
+
+
+@pytest.mark.parametrize("cp", CRASH_POINTS)
+def test_mid_merge_queries_bit_identical(cp, tmp_path):
+    """Queries served at every point of an in-flight merge equal the
+    quiescent (pre- and post-merge) results bit-for-bit."""
+    rng = np.random.default_rng(7)
+    live = fresh_live(tmp_path / "ix")
+    state = {}
+    apply_stream(rng, live, state, 50)
+    live.merge()
+    apply_stream(rng, live, state, 30)  # delta over segment
+    ran = []
+
+    def hook(name):
+        if name == cp:
+            assert_parity(live, state, tag=f"at:{name}")
+            ran.append(name)
+
+    live.merge(step_hook=hook)
+    assert ran == [cp]
+    assert_parity(live, state, tag="quiescent-after")
+    live.close()
+
+
+def test_double_crash_then_recover(tmp_path):
+    """Crash a merge, then crash the RETRY at a later point; recovery must
+    still replay to the oracle (crashes compose)."""
+    rng = np.random.default_rng(11)
+    live = fresh_live(tmp_path / "ix")
+    state = {}
+    apply_stream(rng, live, state, 40)
+    with pytest.raises(CrashPoint):
+        live.merge(crash_at="after_rotate")
+    live.close()
+    live = fresh_live(tmp_path / "ix")
+    with pytest.raises(CrashPoint):
+        live.merge(crash_at="manifest_tmp_written")
+    live.close()
+    live = fresh_live(tmp_path / "ix")
+    assert_parity(live, state, tag="double-crash")
+    live.merge()
+    assert_parity(live, state, tag="double-crash-merged")
+    live.close()
+
+
+# ---------------------------------------------------------------------------
+# durability fault classes: detect-or-recover, never silent wrong answers
+# ---------------------------------------------------------------------------
+def _prepped_dir(tmp_path, seed, *, merged: bool):
+    """A closed LiveIndex dir with a committed segment + unmerged WAL."""
+    rng = np.random.default_rng(seed)
+    d = str(tmp_path / f"ix{seed}{int(merged)}")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    apply_stream(rng, live, state, 40)
+    if merged:
+        live.merge()
+        apply_stream(rng, live, state, 25)
+    live.close()
+    return d, state
+
+
+@pytest.mark.parametrize("cls", sorted(DURABILITY_CLASSES))
+@pytest.mark.parametrize("seed", range(3))
+def test_durability_class_detect_or_recover(cls, seed, tmp_path):
+    d, state = _prepped_dir(tmp_path, seed, merged=True)
+    fault = corrupt_dir(d, cls, seed=seed * 7 + 1)
+    assert fault is not None, (cls, "did not apply to a merged dir")
+    if fault.expect == "detect":
+        with pytest.raises((WalError, SegmentError)):
+            LiveIndex(d, fsync=False)
+        return
+    live = LiveIndex(d, fsync=False)
+    if fault.ops_lost:
+        # the sheared trailing record is treated as an in-flight append
+        # that was never acknowledged: recovery serves the acked prefix
+        # (at most ops_lost trailing ops rolled back, never more)
+        assert abs(live.doc_count() - len(state)) <= fault.ops_lost
+        assert live.counters["wal_bytes_truncated"] > 0
+    else:
+        assert_parity(live, state, tag=cls)
+    if cls in ("manifest_stale", "manifest_missing"):
+        assert live.counters["rolled_forward"] == 1
+    live.close()
+
+
+def test_wal_faults_apply_premerge(tmp_path):
+    """The WAL classes also apply before any merge exists (epoch 0)."""
+    d, state = _prepped_dir(tmp_path, 5, merged=False)
+    fault = corrupt_dir(d, "wal_record_flip", seed=3)
+    assert fault is not None and fault.expect == "detect"
+    with pytest.raises(WalError):
+        LiveIndex(d, fsync=False)
+
+
+def test_torn_tail_recovers_acked_prefix_exactly(tmp_path):
+    """wal_tail_shear: the one in-flight op rolls back; every *acked* op
+    before it survives bit-exactly."""
+    d = str(tmp_path / "ix")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    rng = np.random.default_rng(21)
+    apply_stream(rng, live, state, 30, p_del=0.0)
+    last_doc = sorted(state)[-1]
+    # make the final record a known add so the expected prefix is state
+    # minus that doc
+    probe = next(D for D in range(4900, UNIVERSE) if D not in state)
+    live.add(probe, {0: 1})
+    live.close()
+    fault = corrupt_dir(d, "wal_tail_shear", seed=1)
+    assert fault is not None and fault.ops_lost == 1
+    live2 = LiveIndex(d, fsync=False)
+    assert probe not in live2 and last_doc in live2
+    assert_parity(live2, state, tag="shear-prefix")
+    live2.close()
+
+
+def test_stale_manifest_rolls_forward(tmp_path):
+    """The named 'stale manifest' fault class end to end: manifest rolled
+    back + drained WALs gone → recovery adopts the newer segment and
+    serves the acknowledged state."""
+    d, state = _prepped_dir(tmp_path, 9, merged=True)
+    fault = corrupt_dir(d, "manifest_stale", seed=2)
+    assert fault is not None and fault.expect == "recover"
+    live = LiveIndex(d, fsync=False)
+    assert live.counters["rolled_forward"] == 1
+    assert_parity(live, state, tag="rolled-forward")
+    # and the adopted manifest is durable: a second reopen is clean
+    live.close()
+    live2 = LiveIndex(d, fsync=False)
+    assert live2.counters["rolled_forward"] == 0
+    assert_parity(live2, state, tag="rolled-forward-reopen")
+    live2.close()
+
+
+def test_uncommitted_segment_discarded_when_wals_present(tmp_path):
+    """The mirror case of roll-forward: an orphan segment whose WALs are
+    all still present is an *uncommitted* merge — replay wins, the orphan
+    is discarded (no double-apply)."""
+    rng = np.random.default_rng(13)
+    d = str(tmp_path / "ix")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    apply_stream(rng, live, state, 30)
+    with pytest.raises(CrashPoint):
+        live.merge(crash_at="after_segment_rename")
+    live.close()
+    seg_dirs = os.listdir(os.path.join(d, "segments"))
+    assert any(nm.startswith("seg_") for nm in seg_dirs)  # orphan exists
+    live2 = LiveIndex(d, fsync=False)
+    assert live2.epoch == 0 and live2.counters["rolled_forward"] == 0
+    assert not os.listdir(os.path.join(d, "segments"))  # orphan discarded
+    assert_parity(live2, state, tag="orphan-discarded")
+    live2.close()
+
+
+def test_corrupt_orphan_with_wals_present_still_recovers(tmp_path):
+    """A crash tore the uncommitted segment AND storage mangled it: with
+    the WALs intact, replay recovers; the broken orphan is garbage."""
+    rng = np.random.default_rng(17)
+    d = str(tmp_path / "ix")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    apply_stream(rng, live, state, 25)
+    with pytest.raises(CrashPoint):
+        live.merge(crash_at="after_segment_rename")
+    live.close()
+    seg = os.path.join(d, "segments", os.listdir(
+        os.path.join(d, "segments"))[0])
+    with open(os.path.join(seg, "segment.json"), "w") as f:
+        f.write("garbage{")
+    live2 = LiveIndex(d, fsync=False)
+    assert_parity(live2, state, tag="corrupt-orphan")
+    live2.close()
+
+
+def test_corrupt_orphan_with_wals_gone_detects(tmp_path):
+    """Roll-forward candidate is itself corrupt and its WALs are gone:
+    history is unrecoverable — typed error, not silent loss."""
+    d, state = _prepped_dir(tmp_path, 19, merged=True)
+    # stale the manifest (so the committed segment becomes an orphan)...
+    assert corrupt_dir(d, "manifest_stale", seed=4) is not None
+    # ...and corrupt the orphan segment too
+    seg = os.path.join(d, "segments", sorted(os.listdir(
+        os.path.join(d, "segments")))[-1])
+    with open(os.path.join(seg, "segment.json"), "w") as f:
+        f.write("not json")
+    with pytest.raises(SegmentError):
+        LiveIndex(d, fsync=False)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening (satellite: typed error + skip to intact step)
+# ---------------------------------------------------------------------------
+class TestCheckpointHardening:
+    def _mgr(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        return CheckpointManager(str(tmp_path / "ckpt"), keep=5)
+
+    def _state(self, i):
+        return {"w": np.arange(10, dtype=np.int32) + i,
+                "b": np.float32(i) * np.ones(3, np.float32)}
+
+    def test_truncated_leaves_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        mgr.save(1, self._state(1))
+        mgr.save(2, self._state(2))
+        npz = os.path.join(mgr.dir, "step_00000002", "leaves.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(os.path.getsize(npz) // 2)
+        with pytest.raises(CheckpointError):
+            mgr.restore(2, self._state(0))
+        state, step = mgr.restore_latest(self._state(0))
+        assert step == 1
+        assert np.array_equal(state["w"], self._state(1)["w"])
+
+    def test_corrupt_manifest_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        mgr.save(1, self._state(1))
+        mgr.save(2, self._state(2))
+        with open(os.path.join(mgr.dir, "step_00000002",
+                               "manifest.json"), "w") as f:
+            f.write("{broken")
+        state, step = mgr.restore_latest(self._state(0))
+        assert step == 1
+        assert np.array_equal(state["b"], self._state(1)["b"])
+
+    def test_all_steps_corrupt_returns_none(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        mgr.save(1, self._state(1))
+        npz = os.path.join(mgr.dir, "step_00000001", "leaves.npz")
+        with open(npz, "wb") as f:
+            f.write(b"junk")
+        state, step = mgr.restore_latest(self._state(0))
+        assert state is None and step == -1
+
+    def test_atomic_write_no_partial_step_dirs(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        mgr.save(3, self._state(3))
+        entries = os.listdir(mgr.dir)
+        assert entries == ["step_00000003"]
+        state, step = mgr.restore_latest(self._state(0))
+        assert step == 3
+
+
+# ---------------------------------------------------------------------------
+# segment loader typed errors
+# ---------------------------------------------------------------------------
+def test_segment_loader_errors_are_typed(tmp_path):
+    from repro.index.ingest import load_segment
+    rng = np.random.default_rng(3)
+    d = str(tmp_path / "ix")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    state = {}
+    apply_stream(rng, live, state, 30)
+    live.merge()
+    live.close()
+    seg = os.path.join(d, "segments", sorted(os.listdir(
+        os.path.join(d, "segments")))[0])
+    # clean load works and round-trips the index
+    idx, tfs, docs = load_segment(seg)
+    assert idx.n_postings > 0 and set(tfs) == set(idx.terms)
+    # truncation → SegmentError (whole-file CRC)
+    npz = os.path.join(seg, "postings.npz")
+    blob = open(npz, "rb").read()
+    with open(npz, "wb") as f:
+        f.write(blob[:-7])
+    with pytest.raises(SegmentError):
+        load_segment(seg)
+    with open(npz, "wb") as f:  # restore, then flip one byte
+        f.write(blob)
+    mid = len(blob) // 2
+    with open(npz, "r+b") as f:
+        f.seek(mid)
+        b = f.read(1)[0]
+        f.seek(mid)
+        f.write(bytes([b ^ 0x10]))
+    with pytest.raises(SegmentError):
+        load_segment(seg)

@@ -453,3 +453,78 @@ class TestHardenedEngine:
         agg.merge(one)
         assert agg.blocks_decoded == 4 and agg.retries == 4
         assert agg.degraded and agg.degraded_reasons == ["deadline:test"]
+
+
+# ---------------------------------------------------------------------------
+# SearchEngine over a LiveIndex-merged segment (format="auto", DP-partitioned)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def merged_segment(tmp_path_factory):
+    """An index produced by the ingestion path: stream docs into a
+    LiveIndex, background-merge into a ``format="auto"`` segment, reload
+    it from disk — the exact artifact serving sees after a merge."""
+    import os
+
+    from repro.index import LiveIndex
+    from repro.index.ingest import load_segment
+
+    d = str(tmp_path_factory.mktemp("live") / "ix")
+    rng = np.random.default_rng(4)
+    live = LiveIndex(d, n_docs=1 << 16, fsync=False)
+    for doc in np.unique(rng.integers(0, 1 << 16, 500)):
+        live.add(int(doc), {int(t): int(rng.integers(1, 5))
+                            for t in rng.choice(8, rng.integers(1, 4),
+                                                replace=False)})
+    live.merge()
+    seg = os.path.join(d, "segments", sorted(os.listdir(
+        os.path.join(d, "segments")))[0])
+    index, _tfs, _docs = load_segment(seg)
+    live.close()
+    return index
+
+
+class TestEngineOnMergedSegment:
+    def _mk(self, index, **kw):
+        from repro.launch.serve import SearchEngine
+
+        return SearchEngine(index, **kw)
+
+    def test_startup_validation_passes_clean_merged_segment(self, merged_segment):
+        assert merged_segment.format == "auto"
+        # the DP partitioner assigned real per-term codecs round-tripped
+        # through segment persistence
+        fmts = {tp.arr.format for tp in merged_segment.terms.values()}
+        assert fmts and fmts <= set(FORMATS)
+        eng = self._mk(merged_segment, validate=True, deep_validate=True)
+        assert not eng.quarantined and not eng.bound_unsafe
+        st = QueryStats()
+        out = eng.search([0, 1, 2], "topk_maxscore", stats=st)
+        ref = topk(merged_segment, [0, 1, 2], 10, mode="or")
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a, b)
+        assert not st.degraded
+
+    def test_startup_quarantine_on_corrupt_merged_term(self, merged_segment):
+        terms = dict(merged_segment.terms)
+        bad = faultgen.corrupt(terms[5].arr, "bit_flip", 11)
+        terms[5] = dataclasses.replace(terms[5], arr=bad.arr)
+        index = dataclasses.replace(merged_segment, terms=terms)
+        eng = self._mk(index, validate=True)
+        assert 5 in eng.quarantined
+        st = QueryStats()
+        out = eng.search([5, 6], "or", stats=st)
+        np.testing.assert_array_equal(
+            out, self._mk(merged_segment).search([6], "or"))
+        assert st.degraded
+
+    def test_heal_after_shard_loss_on_merged_segment(self, merged_segment):
+        eng = self._mk(merged_segment, n_shards=3)
+        all_terms = list(merged_segment.terms)
+        clean = eng.search(all_terms, "or")
+        eng.kill_shard(0)
+        st = QueryStats()
+        partial = eng.search(all_terms, "or", stats=st)
+        assert st.degraded and partial.size < clean.size
+        eng.heal()
+        assert not eng.dead_shards
+        np.testing.assert_array_equal(eng.search(all_terms, "or"), clean)
