@@ -286,14 +286,20 @@ class LiveIndex:
     """
 
     def __init__(self, directory: str, *, n_docs: int | None = None,
-                 block_size: int = 128, format: str = "auto",
-                 impact_bits: int = 8, checksum: bool = True,
+                 block_size: int | None = None, format: str | None = None,
+                 impact_bits: int | None = None, checksum: bool | None = None,
                  fsync: bool = True, plan="auto", replay_hook=None):
         self.dir = os.path.abspath(directory)
         self.plan = plan
         self.fsync = fsync
         self.state = "replaying"
         self._lock = threading.Lock()
+        # Writer lock, ordered strictly before self._lock. Held across one
+        # mutation's exists-check + WAL append + in-memory apply, and by
+        # merge()'s rotate and commit sections — so an op's WAL record and
+        # its delta placement always land on the same side of a rotation,
+        # and two adds of the same doc serialize (second one rejected).
+        self._wlock = threading.Lock()
         self._refs: dict[int, int] = {}
         self._delta: dict[int, dict[int, int]] = {}
         self._tombstones: set[int] = set()  # against the main segment
@@ -305,7 +311,8 @@ class LiveIndex:
         self._recover(n_docs=n_docs, block_size=block_size, format=format,
                       impact_bits=impact_bits, checksum=checksum,
                       replay_hook=replay_hook)
-        self.state = "serving"
+        with self._lock:
+            self.state = "serving"
 
     # -- recovery ----------------------------------------------------------
     def _manifest_path(self) -> str:
@@ -372,7 +379,8 @@ class LiveIndex:
                        "block_size": ometa["block_size"],
                        "format": ometa["format"],
                        "impact_bits": ometa["impact_bits"],
-                       "checksum": man["checksum"] if man else bool(checksum)}
+                       "checksum": (man["checksum"] if man
+                                    else checksum is None or bool(checksum))}
                 self._write_manifest(man)
                 self.counters["rolled_forward"] = 1
                 man_epoch, man_merged = e, covered
@@ -391,10 +399,30 @@ class LiveIndex:
                     "docid universe — impacts depend on it)")
             man = {"version": 1, "epoch": 0, "segments": [],
                    "merged_wal": 0, "n_docs": int(n_docs),
-                   "block_size": int(block_size), "format": format,
-                   "impact_bits": int(impact_bits),
-                   "checksum": bool(checksum)}
+                   "block_size": 128 if block_size is None else int(block_size),
+                   "format": "auto" if format is None else format,
+                   "impact_bits": (8 if impact_bits is None
+                                   else int(impact_bits)),
+                   "checksum": checksum is None or bool(checksum)}
             self._write_manifest(man)
+        else:
+            # a recovered manifest is authoritative for the index geometry;
+            # an explicit constructor argument that disagrees is a caller
+            # bug (a different n_docs is a different docid universe) —
+            # never silently reopen with parameters other than requested
+            given = {"n_docs": n_docs, "block_size": block_size,
+                     "format": format, "impact_bits": impact_bits,
+                     "checksum": checksum}
+            norm = {"checksum": bool, "format": str}
+            clash = {k: (v, man[k]) for k, v in given.items()
+                     if v is not None
+                     and norm.get(k, int)(v) != norm.get(k, int)(man[k])}
+            if clash:
+                raise ValueError(
+                    "constructor arguments conflict with the recovered "
+                    "manifest: " + ", ".join(
+                        f"{k}={v!r} != manifest {m!r}"
+                        for k, (v, m) in sorted(clash.items())))
 
         self.manifest = man
         self.epoch = int(man["epoch"])
@@ -516,23 +544,30 @@ class LiveIndex:
         for t, tf in tmap.items():
             if t < 0 or tf < 1:
                 raise ValueError(f"bad posting term={t} tf={tf}")
-        if self._exists(doc):
-            raise ValueError(f"doc {doc} already exists — delete it first")
         op = {"op": "add", "doc": doc,
               "terms": {str(t): tf for t, tf in sorted(tmap.items())}}
-        self.wal.append(op)  # durability point: ack only after this
-        self._apply(op, replay=False)
-        self.counters["acked_ops"] += 1
+        # one critical section per mutation: the exists-check, the WAL
+        # append and the delta placement must all see the same WAL/delta
+        # generation, or a concurrent rotation could strand the op's only
+        # durable record in a WAL the merge is about to retire
+        with self._wlock:
+            if self._exists(doc):
+                raise ValueError(
+                    f"doc {doc} already exists — delete it first")
+            self.wal.append(op)  # durability point: ack only after this
+            self._apply(op, replay=False)
+            self.counters["acked_ops"] += 1
 
     def delete(self, doc: int) -> None:
         """Delete document ``doc``. Durable before this returns."""
         doc = int(doc)
-        if not self._exists(doc):
-            raise KeyError(f"doc {doc} does not exist")
         op = {"op": "del", "doc": doc}
-        self.wal.append(op)
-        self._apply(op, replay=False)
-        self.counters["acked_ops"] += 1
+        with self._wlock:
+            if not self._exists(doc):
+                raise KeyError(f"doc {doc} does not exist")
+            self.wal.append(op)
+            self._apply(op, replay=False)
+            self.counters["acked_ops"] += 1
 
     def _apply(self, op: dict, *, replay: bool) -> None:
         """Apply one (already durable) op to the in-memory delta state.
@@ -760,8 +795,10 @@ class LiveIndex:
         """
         if crash_at is not None and crash_at not in CRASH_POINTS:
             raise ValueError(f"unknown crash point {crash_at!r}")
-        if self.state == "merge_in_progress":
-            raise RuntimeError("merge already in progress")
+        with self._lock:
+            if self.state == "merge_in_progress":
+                raise RuntimeError("merge already in progress")
+            self.state = "merge_in_progress"
 
         def point(name: str) -> None:
             if step_hook is not None:
@@ -769,21 +806,22 @@ class LiveIndex:
             if crash_at == name:
                 raise CrashPoint(name)
 
-        self.state = "merge_in_progress"
-        ok = False
+        rotated = committed = False
         try:
             point("before_rotate")
             old_wal_id = self.wal_id
             new_id = old_wal_id + 1
             _, new_writer = open_wal(wal_path(self.dir, new_id),
                                      fsync=self.fsync)
-            with self._lock:
-                self.wal.close()
-                self.wal, self.wal_id = new_writer, new_id
-                self._frozen = self._delta
-                self._delta = {}
-                rot_tomb = set(self._tombstones)
-                self._frozen_tomb = set()
+            with self._wlock:  # no writer mid-append while the WAL swaps
+                with self._lock:
+                    self.wal.close()
+                    self.wal, self.wal_id = new_writer, new_id
+                    self._frozen = self._delta
+                    self._delta = {}
+                    rot_tomb = set(self._tombstones)
+                    self._frozen_tomb = set()
+            rotated = True
             point("after_rotate")
 
             frozen = self._frozen
@@ -825,24 +863,27 @@ class LiveIndex:
                     os.fsync(f.fileno())
             point("manifest_tmp_written")
             os.replace(mtmp, self._manifest_path())  # THE commit point
+            committed = True
             if self.fsync:
                 fsync_dir(self.dir)
             point("after_manifest")
 
             tfs_np = {t: np.asarray(v, dtype=np.int64)
                       for t, v in tfs.items()}
-            with self._lock:
-                self.main = new_index
-                self.main_tfs = tfs_np
-                self._main_docs = all_docs.astype(np.int64)
-                self.manifest = man
-                self.epoch = new_epoch
-                # tombstones drained into the segment retire; deletes that
-                # raced the merge (incl. of frozen docs, now in main) stay
-                self._tombstones = (self._tombstones - rot_tomb) \
-                    | self._frozen_tomb
-                self._frozen = None
-                self._frozen_tomb = set()
+            with self._wlock:  # writers' _exists must see main+tombstones
+                with self._lock:  # swap atomically with the epoch
+                    self.main = new_index
+                    self.main_tfs = tfs_np
+                    self._main_docs = all_docs.astype(np.int64)
+                    self.manifest = man
+                    self.epoch = new_epoch
+                    # tombstones drained into the segment retire; deletes
+                    # that raced the merge (incl. of frozen docs, now in
+                    # main) stay
+                    self._tombstones = (self._tombstones - rot_tomb) \
+                        | self._frozen_tomb
+                    self._frozen = None
+                    self._frozen_tomb = set()
 
             for nm in os.listdir(self.dir):
                 i = parse_wal_name(nm)
@@ -854,18 +895,54 @@ class LiveIndex:
                     shutil.rmtree(self._seg_dir(nm))
             point("after_cleanup")
             self.counters["merges"] += 1
-            ok = True
+            with self._lock:
+                self.state = "serving"
             return {"epoch": new_epoch, "drained_docs": len(frozen),
                     "drained_tombstones": len(rot_tomb),
                     "n_postings": int(new_index.n_postings),
                     "bits_per_int": (round(new_index.bits_per_int, 2)
                                      if new_index.n_postings else 0.0)}
-        finally:
-            if ok:
+        except CrashPoint:
+            # injected crash: the object is dead by contract — recovery
+            # reopens the directory. Leave state at merge_in_progress so
+            # misuse of the carcass is loud.
+            raise
+        except BaseException:
+            # a real pre-commit failure (build error, disk full, step_hook
+            # raise) committed nothing: un-rotate so the in-memory state is
+            # exactly what serving + a retried merge expect, and discard
+            # the attempt's on-disk leftovers (tmp dirs, an uncommitted
+            # final-named segment) so the retry's names are free — the
+            # same sweep recovery performs on reopen. Post-commit the
+            # epochs may have half-swapped — stay loud like a crash.
+            if not committed:
+                self._rollback_merge(rotated)
+                seg_parent = os.path.join(self.dir, SEGMENTS_DIR)
+                clean_tmp(self.dir)
+                clean_tmp(seg_parent)
+                for nm in os.listdir(seg_parent):
+                    e = _parse_seg_name(nm)
+                    if e is not None and e > self.epoch:
+                        shutil.rmtree(self._seg_dir(nm), ignore_errors=True)
+            raise
+
+    def _rollback_merge(self, rotated: bool) -> None:
+        """Restore ``serving`` after a merge failed before its commit
+        point. Frozen delta docs fold back into the active delta (a
+        concurrent add of a frozen doc was rejected, so no collisions) and
+        frozen tombstones simply erase their docs — the logical state is
+        untouched. The rotated WAL stays active: the op history is split
+        across old + new WALs, both above the unchanged ``merged_wal``
+        watermark, so recovery and the next rotation handle it as usual."""
+        with self._wlock:
+            with self._lock:
+                if rotated and self._frozen is not None:
+                    for d, tmap in self._frozen.items():
+                        if d not in self._frozen_tomb:
+                            self._delta[d] = tmap
+                    self._frozen = None
+                    self._frozen_tomb = set()
                 self.state = "serving"
-            # on a crash the object is dead by contract: recovery reopens
-            # the directory. Leave state at merge_in_progress so misuse of
-            # the carcass is loud.
 
     def close(self) -> None:
         self.wal.close()

@@ -73,9 +73,16 @@ def atomic_write_json(path: str, obj, *, fsync: bool = True) -> None:
 def atomic_write_dir(final_dir: str, fill, *, fsync: bool = True) -> None:
     """Atomically materialize a directory: ``fill(tmp_dir)`` writes the
     complete content, then the tmp dir is fsynced file-by-file and renamed
-    onto ``final_dir`` (replacing any previous version). Used for
-    checkpoint steps and index segments — partial writes never carry the
-    final name."""
+    onto ``final_dir``. Used for checkpoint steps and index segments —
+    partial writes never carry the final name.
+
+    When ``final_dir`` already exists, POSIX offers no atomic non-empty
+    directory swap: the old version is first renamed *away* to a tmp name,
+    the new one renamed in, and only then is the old tree deleted. A crash
+    in the (two-rename) window leaves no final name — readers that replace
+    a live directory must tolerate its momentary absence by falling back
+    to an older step (``CheckpointManager.restore_latest`` does); the old
+    content is never deleted before the new name is durably in place."""
     tmp = _tmp_name(final_dir)
     os.makedirs(tmp)
     try:
@@ -85,14 +92,24 @@ def atomic_write_dir(final_dir: str, fill, *, fsync: bool = True) -> None:
                 for f in files:
                     fsync_file(os.path.join(root, f))
                 fsync_dir(root)
-        if os.path.exists(final_dir):
-            shutil.rmtree(final_dir)
-        os.rename(tmp, final_dir)
-        if fsync:
-            fsync_dir(os.path.dirname(os.path.abspath(final_dir)))
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    old = None
+    if os.path.exists(final_dir):
+        old = _tmp_name(final_dir)
+        os.rename(final_dir, old)
+    try:
+        os.rename(tmp, final_dir)
+    except BaseException:
+        if old is not None:  # put the previous version back under its name
+            os.rename(old, final_dir)
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if fsync:
+        fsync_dir(os.path.dirname(os.path.abspath(final_dir)))
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
 
 
 def clean_tmp(directory: str) -> int:

@@ -234,6 +234,43 @@ class TestAtomicIO:
         assert [e for e in os.listdir(tmp_path)
                 if e.startswith(".tmp_")] == []
 
+    def test_atomic_write_dir_replaces(self, tmp_path):
+        d = str(tmp_path / "seg")
+        atomic_write_dir(
+            d, lambda t: open(os.path.join(t, "x"), "w").write("v1"),
+            fsync=False)
+        atomic_write_dir(
+            d, lambda t: open(os.path.join(t, "x"), "w").write("v2"),
+            fsync=False)
+        assert open(os.path.join(d, "x")).read() == "v2"
+        assert [e for e in os.listdir(tmp_path)
+                if e.startswith(".tmp_")] == []
+
+    def test_atomic_write_dir_replace_never_drops_old_first(
+            self, tmp_path, monkeypatch):
+        """Replacing an existing dir renames the old version away (it is
+        deleted only after the new one carries the final name); a failed
+        rename-in restores the old version under its name."""
+        d = str(tmp_path / "seg")
+        atomic_write_dir(
+            d, lambda t: open(os.path.join(t, "x"), "w").write("v1"),
+            fsync=False)
+        real, hits = os.rename, []
+
+        def flaky(src, dst):
+            if os.path.abspath(dst) == os.path.abspath(d):
+                hits.append(dst)
+                if len(hits) == 1:  # fail the first rename-in only
+                    raise OSError("injected rename failure")
+            return real(src, dst)
+
+        monkeypatch.setattr(os, "rename", flaky)
+        with pytest.raises(OSError):
+            atomic_write_dir(
+                d, lambda t: open(os.path.join(t, "x"), "w").write("v2"),
+                fsync=False)
+        assert open(os.path.join(d, "x")).read() == "v1"  # old restored
+
     def test_clean_tmp(self, tmp_path):
         os.makedirs(tmp_path / ".tmp_seg_1_2")
         open(tmp_path / ".tmp_f", "w").write("x")
@@ -493,6 +530,153 @@ def test_double_crash_then_recover(tmp_path):
     assert_parity(live, state, tag="double-crash")
     live.merge()
     assert_parity(live, state, tag="double-crash-merged")
+    live.close()
+
+
+# ---------------------------------------------------------------------------
+# writer/rotation atomicity and merge-failure rollback
+# ---------------------------------------------------------------------------
+def test_merge_precommit_failure_rolls_back_to_serving(tmp_path):
+    """A real (non-injected) failure before the commit point must not
+    poison the index: state returns to ``serving``, the frozen delta folds
+    back, parity holds, and a retried merge succeeds."""
+
+    class Boom(RuntimeError):
+        pass
+
+    rng = np.random.default_rng(23)
+    live = fresh_live(tmp_path / "ix")
+    state = {}
+    apply_stream(rng, live, state, 40)
+
+    def hook(name):
+        if name == "segment_tmp_written":
+            # ops racing the doomed merge: a fresh add plus a delete of a
+            # frozen doc — both must survive the rollback
+            live.add(4100, {0: 3})
+            state[4100] = {0: 3}
+            victim = next(d for d in sorted(state) if d != 4100)
+            live.delete(victim)
+            del state[victim]
+            raise Boom("transient disk error")
+
+    with pytest.raises(Boom):
+        live.merge(step_hook=hook)
+    assert live.state == "serving"
+    assert_parity(live, state, tag="post-failed-merge")
+    live.merge()  # retry is allowed and drains everything
+    assert live.state == "serving" and live.epoch == 1
+    assert_parity(live, state, tag="post-retried-merge")
+
+    # failure before anything rotated: plain state restore, retry works
+    def hook2(name):
+        if name == "before_rotate":
+            raise Boom("hook failure")
+
+    with pytest.raises(Boom):
+        live.merge(step_hook=hook2)
+    assert live.state == "serving"
+    live.merge()
+    assert_parity(live, state, tag="post-unrotated-failure")
+
+    # every acked op (incl. those racing the failed merge) survives restart
+    live.close()
+    live2 = fresh_live(tmp_path / "ix")
+    assert_parity(live2, state, tag="post-failure-restart")
+    live2.close()
+
+
+def test_concurrent_writers_during_merge(tmp_path):
+    """Writer threads racing background merges: every acked op lands on
+    the same side of the WAL rotation as its delta placement, so restart
+    replay reproduces exactly the acked state (no stranded/lost ops, no
+    append-after-close errors)."""
+    import threading
+
+    live = fresh_live(tmp_path / "ix")
+    state = {}
+    for i in range(40):
+        live.add(i, {int(i % N_TERMS): 1})
+        state[i] = {int(i % N_TERMS): 1}
+    acked, errs = [], []
+
+    def writer(base):
+        rng = np.random.default_rng(base)
+        try:
+            for doc in range(1000 * (base + 1), 1000 * (base + 1) + 200):
+                terms = {int(rng.integers(N_TERMS)): int(rng.integers(1, 4))}
+                live.add(doc, terms)
+                acked.append((doc, terms))
+        except Exception as e:  # pragma: no cover - failure detail
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(b,)) for b in range(3)]
+    for t in threads:
+        t.start()
+    for _ in range(3):
+        live.merge()
+    for t in threads:
+        t.join()
+    assert errs == []
+    for doc, terms in acked:
+        state[doc] = terms
+    assert_parity(live, state, tag="concurrent-writers-quiescent")
+    live.close()
+    live2 = fresh_live(tmp_path / "ix")
+    assert_parity(live2, state, tag="concurrent-writers-restart")
+    live2.close()
+
+
+def test_concurrent_duplicate_adds_one_wins(tmp_path):
+    """Two racing adds of the same doc: exactly one is acked and exactly
+    one WAL record exists — recovery must replay cleanly, not detect a
+    duplicate-add divergence."""
+    import threading
+
+    live = fresh_live(tmp_path / "ix")
+    for doc in range(50):
+        barrier = threading.Barrier(2)
+        outcomes = []
+
+        def attempt(d=doc):
+            barrier.wait()
+            try:
+                live.add(d, {0: 1})
+                outcomes.append("ok")
+            except ValueError:
+                outcomes.append("dup")
+
+        ts = [threading.Thread(target=attempt) for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert sorted(outcomes) == ["dup", "ok"], (doc, outcomes)
+    live.close()
+    live2 = fresh_live(tmp_path / "ix")
+    assert live2.counters["replayed_ops"] == 50
+    live2.close()
+
+
+def test_reopen_conflicting_args_rejected(tmp_path):
+    """Explicit constructor arguments that disagree with a recovered
+    manifest raise instead of being silently ignored."""
+    d = str(tmp_path / "ix")
+    live = LiveIndex(d, n_docs=UNIVERSE, fsync=False)
+    live.add(1, {0: 1})
+    live.close()
+    for kw in ({"n_docs": UNIVERSE + 1}, {"block_size": 64},
+               {"impact_bits": 4}, {"format": "vbyte"},
+               {"checksum": False}):
+        with pytest.raises(ValueError, match="conflict"):
+            LiveIndex(d, fsync=False, **kw)
+    # matching explicit args — and no args — both reopen fine
+    live = LiveIndex(d, n_docs=UNIVERSE, block_size=128, format="auto",
+                     impact_bits=8, checksum=True, fsync=False)
+    assert 1 in live
+    live.close()
+    live = LiveIndex(d, fsync=False)
+    assert 1 in live
     live.close()
 
 
