@@ -20,24 +20,36 @@ import time
 def _bench_queries(engine, queries, *, plan, use_skip, reps=3):
     """Time one query workload (best of ``reps`` passes — shared-host
     noise swamps single small samples); returns a stats row with qps,
-    decoded-Mints/s, and the skip / threshold-pruned block rates."""
+    p50/p99 per-query latency (same percentile semantics as the serving
+    engine: ``repro.obs.stats``), decoded-Mints/s, and the skip /
+    threshold-pruned block rates."""
     from repro.index import QueryStats
+    from repro.obs.stats import percentile
 
     engine.plan = plan
     engine.use_skip = use_skip
     for mode, terms in queries:  # compile every query's shapes (steady state)
         engine.search(terms, mode)
     wall = float("inf")
+    best_lat = []
     for _ in range(reps):
         st = QueryStats()
+        lat = []
         t0 = time.perf_counter()
         for mode, terms in queries:
+            q0 = time.perf_counter()
             engine.search(terms, mode, stats=st)
-        wall = min(wall, time.perf_counter() - t0)
+            lat.append(time.perf_counter() - q0)
+        w = time.perf_counter() - t0
+        if w < wall:
+            wall, best_lat = w, lat
     total = st.blocks_decoded + st.blocks_skipped + st.blocks_pruned
     postings = st.ints_decoded + st.postings_pruned
+    lat_ms = [s * 1e3 for s in best_lat]
     return {
         "qps": round(len(queries) / wall, 2),
+        "p50_ms": round(percentile(lat_ms, 50), 3),
+        "p99_ms": round(percentile(lat_ms, 99), 3),
         "decoded_mis": round(st.ints_decoded / wall / 1e6, 3),
         "block_skip_rate": (round(st.blocks_skipped / total, 3)
                             if total else 0.0),

@@ -26,15 +26,15 @@ import time
 import numpy as np
 
 
-def _pctl(samples, q):
-    return float(np.percentile(np.asarray(samples, dtype=np.float64), q))
-
-
 def _lat_row(samples_s):
-    a = np.asarray(samples_s, dtype=np.float64)
-    return {"p50_us": round(_pctl(a, 50) * 1e6, 1),
-            "p99_us": round(_pctl(a, 99) * 1e6, 1),
-            "mean_us": round(float(a.mean()) * 1e6, 1)}
+    # repro.obs.stats.percentile: the one percentile implementation every
+    # latency table shares (matches numpy's linear method bit-for-bit)
+    from repro.obs.stats import percentile
+
+    us = [s * 1e6 for s in samples_s]
+    return {"p50_us": round(percentile(us, 50), 1),
+            "p99_us": round(percentile(us, 99), 1),
+            "mean_us": round(sum(us) / len(us), 1)}
 
 
 def _make_ops(rng, n_ops, universe, n_terms=16, p_del=0.2):

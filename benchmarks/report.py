@@ -218,6 +218,22 @@ def ingestion_table(d: dict) -> str:
     return out
 
 
+def observability_table(d: dict) -> str:
+    """Per-stage latency headline from the ``observability`` section the
+    ``--metrics-out`` serving smoke records: where a topk query's wall
+    time goes (decode vs gallop vs score vs merge vs select)."""
+    out = (f"Span capture over {d.get('n_queries', '?')} queries "
+           f"({d.get('n_traces', '?')} span trees).\n\n"
+           "| stage | spans | p50 ms | p99 ms | mean ms |\n"
+           + "|" + "---|" * 5 + "\n")
+    stages = d.get("stages", {})
+    for name, s in sorted(stages.items(),
+                          key=lambda kv: -kv[1]["count"] * kv[1]["mean_ms"]):
+        out += (f"| {name} | {s['count']} | {s['p50_ms']} | {s['p99_ms']} "
+                f"| {s['mean_ms']} |\n")
+    return out
+
+
 def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     """Render the headline perf tables from the tracked benchmarks JSON."""
     try:
@@ -249,6 +265,9 @@ def benchmarks_headline(path: str = "experiments/benchmarks.json") -> str:
     if "ingestion" in d:
         out += ("\n## Streaming ingestion (WAL / recovery / live merge)\n\n"
                 + ingestion_table(d["ingestion"]))
+    if "observability" in d:
+        out += ("\n## Observability (per-stage query latency)\n\n"
+                + observability_table(d["observability"]))
     if "updated_at" in d:
         out += f"\n(benchmarks.json updated {d['updated_at']})\n"
     return out

@@ -298,7 +298,28 @@ def main():
                   f"single={vb['single_device_mis']} Mis{sharded}  "
                   f"engine {eng['qps']} QPS p50={eng['p50_ms']}ms "
                   f"p99={eng['p99_ms']}ms")
+            if "obs_overhead" in r:
+                ov = r["obs_overhead"]
+                print(f"    telemetry: null-path "
+                      f"{ov['null_path_overhead_pct']}% of p50 "
+                      f"({ov['sites_per_query']} sites/query @ "
+                      f"{ov['null_site_us']}us)  instrumented-on "
+                      f"{ov['overhead_pct']:+.2f}% "
+                      f"(p50 {ov['null_p50_ms']} -> "
+                      f"{ov['instrumented_p50_ms']} ms)")
         assert not any("error" in r for r in rows), "serving bench failed"
+        ov = next((r["obs_overhead"] for r in rows if "obs_overhead" in r),
+                  None)
+        # the observability fast-path contract (docs/observability.md):
+        # with no registry installed the instrumentation sites must cost
+        # < 3% of serving p50, and a full capture (every span of every
+        # request traced — the worst case, not the default) must stay
+        # small too
+        assert ov is not None, "serving bench measured no telemetry overhead"
+        assert ov["null_path_overhead_pct"] < 3.0, \
+            f"null-path cost {ov['null_path_overhead_pct']}% >= 3% budget"
+        assert ov["overhead_pct"] < 15.0, \
+            f"instrumented-on overhead {ov['overhead_pct']}% >= 15%"
         results["serving"] = rows
 
     if want("index"):

@@ -40,9 +40,14 @@ import json
 import os
 import shutil
 import threading
+import time
 from dataclasses import dataclass, replace as dc_replace
 
 import numpy as np
+
+from repro.obs import (counter_inc as _obs_counter_inc,
+                       histogram_observe as _obs_histogram_observe,
+                       installed as _obs_installed)
 
 from repro.core.compressed_array import CompressedIntArray, FORMAT_LEAVES
 from repro.robustness.atomic_io import (
@@ -496,6 +501,19 @@ class LiveIndex:
                 # (state == "replaying" marks them degraded)
                 replay_hook(self, i, op)
         self.counters["replayed_ops"] = len(replayed)
+        tele = _obs_installed()
+        if tele is not None:
+            # one structured crash-recovery record per reopen: what the WAL
+            # replay found is capacity/incident data, not a counter
+            tele.registry.record_event(
+                "ingest_recovery", epoch=self.epoch,
+                replayed_ops=len(replayed),
+                rolled_forward=self.counters["rolled_forward"],
+                wal_bytes_truncated=self.counters["wal_bytes_truncated"])
+            reg = tele.registry
+            reg.counter("ingest_replayed_ops_total").inc(len(replayed))
+            if self.counters["rolled_forward"]:
+                reg.counter("ingest_rolled_forward_total").inc()
 
     # -- membership --------------------------------------------------------
     def _in_main(self, doc: int) -> bool:
@@ -799,8 +817,18 @@ class LiveIndex:
             if self.state == "merge_in_progress":
                 raise RuntimeError("merge already in progress")
             self.state = "merge_in_progress"
+        t_merge0 = time.perf_counter()
+
+        # merge-phase duration histograms: the crash points already name
+        # the phase boundaries, so each point() observes the time since the
+        # previous one under the phase that just finished
+        _phase = {"t0": time.perf_counter(), "prev": "merge_start"}
 
         def point(name: str) -> None:
+            now = time.perf_counter()
+            _obs_histogram_observe("ingest_merge_phase_seconds",
+                                   now - _phase["t0"], phase=name)
+            _phase["t0"], _phase["prev"] = now, name
             if step_hook is not None:
                 step_hook(name)
             if crash_at == name:
@@ -895,6 +923,9 @@ class LiveIndex:
                     shutil.rmtree(self._seg_dir(nm))
             point("after_cleanup")
             self.counters["merges"] += 1
+            _obs_counter_inc("ingest_merges_total")
+            _obs_histogram_observe("ingest_merge_seconds",
+                                   time.perf_counter() - t_merge0)
             with self._lock:
                 self.state = "serving"
             return {"epoch": new_epoch, "drained_docs": len(frozen),

@@ -61,6 +61,7 @@ non-overlapping — or beaten — blocks.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -69,6 +70,7 @@ import jax.numpy as jnp
 
 from repro.kernels.vbyte_decode import dispatch
 from repro.kernels.vbyte_decode.ops import normalize_probe
+from repro.obs import trace as _trace
 from repro.robustness.validate import Deadline  # noqa: F401  (re-exported)
 
 from .builder import InvertedIndex, TermPostings
@@ -150,25 +152,58 @@ class QueryStats:
     def merge(self, other: "QueryStats"):
         """Fold a per-query stats object into this aggregate — how
         ``SearchEngine``/``run_workload`` keep one per-call degraded flag
-        while still reporting workload-wide decode accounting."""
-        for f in ("blocks_decoded", "blocks_skipped", "blocks_pruned",
-                  "rows_gathered", "ints_decoded", "impact_ints_decoded",
-                  "postings_pruned", "probes_pruned", "decode_calls",
-                  "errors", "retries", "quarantined_blocks",
-                  "bound_fallbacks", "delta_postings", "delta_hits",
-                  "tombstones_applied"):
-            setattr(self, f, getattr(self, f) + getattr(other, f))
-        for t, v in other.per_term_decoded.items():
-            self.per_term_decoded[t] = self.per_term_decoded.get(t, 0) + v
-        for t, v in other.per_term_pruned.items():
-            self.per_term_pruned[t] = self.per_term_pruned.get(t, 0) + v
-        for t, v in other.per_term_blocks.items():
-            self.per_term_blocks.setdefault(t, set()).update(v)
-        if other.degraded:
-            self.degraded = True
-            for r in other.degraded_reasons:
-                if r not in self.degraded_reasons:
-                    self.degraded_reasons.append(r)
+        while still reporting workload-wide decode accounting.
+
+        Iterates ``dataclasses.fields`` so a newly added counter merges by
+        its type instead of being silently dropped; a field with no merge
+        rule (unsupported type) raises at the first merge, which is the
+        test-enforced contract for extending this class.
+        """
+        for f in dataclasses.fields(self):
+            mine = getattr(self, f.name)
+            theirs = getattr(other, f.name)
+            if isinstance(mine, bool):
+                setattr(self, f.name, mine or theirs)
+            elif isinstance(mine, (int, float)):
+                setattr(self, f.name, mine + theirs)
+            elif isinstance(mine, dict):
+                for t, v in theirs.items():
+                    if isinstance(v, (set, frozenset)):
+                        mine.setdefault(t, set()).update(v)
+                    elif isinstance(v, (int, float)):
+                        mine[t] = mine.get(t, 0) + v
+                    else:
+                        raise TypeError(
+                            f"QueryStats.merge: no merge rule for dict "
+                            f"field {f.name!r} value of type "
+                            f"{type(v).__name__}")
+            elif isinstance(mine, list):
+                for r in theirs:  # dedup-append (degraded_reasons order)
+                    if r not in mine:
+                        mine.append(r)
+            elif isinstance(mine, set):
+                mine.update(theirs)
+            else:
+                raise TypeError(
+                    f"QueryStats.merge: no merge rule for field "
+                    f"{f.name!r} of type {type(mine).__name__} — add one "
+                    f"here before adding the field")
+
+    def span_attrs(self) -> dict:
+        """Flat attribute dict for trace spans: every scalar counter plus
+        the degraded flag/reasons (the per-term dicts summarize as sizes —
+        span attributes stay JSON-scalar-ish; the dataclass remains the
+        full-fidelity API)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, (bool, int, float)):
+                out[f.name] = v
+            elif isinstance(v, dict):
+                out[f"{f.name}_terms"] = len(v)
+            elif isinstance(v, list):
+                out[f.name] = list(v)
+        return out
 
     def count(self, term: int, decoded: int, skipped: int, ints: int):
         self.blocks_decoded += decoded
@@ -276,6 +311,23 @@ def _route_probes(tp: TermPostings, chunk: np.ndarray):
 def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
                 probe_width: int, plan, stats, use_skip: bool,
                 weights=None, touched=None) -> np.ndarray:
+    """Skip-gallop stage span around :func:`_probe_pass_impl`."""
+    with _trace("gallop", term=tp.term, probes=len(chunk)) as sp:
+        if sp and stats is not None:
+            b0, i0 = stats.blocks_decoded, stats.ints_decoded
+        out = _probe_pass_impl(tp, chunk, impact=impact,
+                               probe_width=probe_width, plan=plan,
+                               stats=stats, use_skip=use_skip,
+                               weights=weights, touched=touched)
+        if sp and stats is not None:
+            sp.set(blocks_decoded=stats.blocks_decoded - b0,
+                   ints_decoded=stats.ints_decoded - i0)
+        return out
+
+
+def _probe_pass_impl(tp: TermPostings, chunk: np.ndarray, *, impact: int,
+                     probe_width: int, plan, stats, use_skip: bool,
+                     weights=None, touched=None) -> np.ndarray:
     """One (term, candidate-chunk) pass: int32 [len(chunk)] per-candidate
     result — the membership bitmap (``impact=0``), the constant bm25
     impact contribution (``impact>0``), or the exact per-posting impact
@@ -381,6 +433,21 @@ def _probe_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
 
 def _merge_pass(tp: TermPostings, chunk: np.ndarray, *, impact: int,
                 plan, stats, weights=None, touched=None) -> np.ndarray:
+    """Merge stage span around :func:`_merge_pass_impl`."""
+    with _trace("merge", term=tp.term, candidates=len(chunk)) as sp:
+        if sp and stats is not None:
+            b0, i0 = stats.blocks_decoded, stats.ints_decoded
+        out = _merge_pass_impl(tp, chunk, impact=impact, plan=plan,
+                               stats=stats, weights=weights,
+                               touched=touched)
+        if sp and stats is not None:
+            sp.set(blocks_decoded=stats.blocks_decoded - b0,
+                   ints_decoded=stats.ints_decoded - i0)
+        return out
+
+
+def _merge_pass_impl(tp: TermPostings, chunk: np.ndarray, *, impact: int,
+                     plan, stats, weights=None, touched=None) -> np.ndarray:
     """Bulk variant of :func:`_probe_pass` for candidate sets too large to
     probe: int64 [len(chunk)] per-candidate contribution.
 
@@ -440,6 +507,20 @@ def _score_term(tp: TermPostings, base_impact: int, cand: np.ndarray,
     ``touched`` (a set) collects the block rows actually gathered, so
     MaxScore's exit accounting never books a probe-decoded block as
     threshold-pruned."""
+    with _trace("score", term=tp.term, candidates=int(sel.size)) as sp:
+        if sp and stats is not None:
+            b0, i0 = stats.blocks_decoded, stats.ints_decoded
+        _score_term_impl(tp, base_impact, cand, sel, scores, has_tf=has_tf,
+                         probe_width=probe_width, plan=plan, stats=stats,
+                         touched=touched)
+        if sp and stats is not None:
+            sp.set(blocks_decoded=stats.blocks_decoded - b0,
+                   ints_decoded=stats.ints_decoded - i0)
+
+
+def _score_term_impl(tp: TermPostings, base_impact: int, cand: np.ndarray,
+                     sel: np.ndarray, scores: np.ndarray, *, has_tf: bool,
+                     probe_width: int, plan, stats, touched=None):
     wts = tp.impacts if has_tf else None
     if sel.size > MERGE_MIN_PROBES:
         scores[sel] += _merge_pass(
@@ -566,17 +647,19 @@ def _taat_scores(index: InvertedIndex, terms, *, plan, stats, use_skip,
                                   stats=stats, use_skip=use_skip)
     if not parts:
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    cand = np.unique(np.concatenate(list(parts.values()))).astype(np.int64)
-    scores = np.zeros(cand.size, np.int64)
-    for t, docs in parts.items():
-        tp = index.terms[t]
-        if index.has_tf:
-            # per-posting impacts: decode the aligned weight stream
-            imps = _decode_impact_stream(tp, plan=plan, stats=stats)
-            scores[np.searchsorted(cand, docs.astype(np.int64))] += imps
-        else:
-            scores[np.searchsorted(cand, docs.astype(np.int64))] \
-                += index.impact(t)
+    with _trace("score", terms=len(parts)):
+        cand = np.unique(
+            np.concatenate(list(parts.values()))).astype(np.int64)
+        scores = np.zeros(cand.size, np.int64)
+        for t, docs in parts.items():
+            tp = index.terms[t]
+            if index.has_tf:
+                # per-posting impacts: decode the aligned weight stream
+                imps = _decode_impact_stream(tp, plan=plan, stats=stats)
+                scores[np.searchsorted(cand, docs.astype(np.int64))] += imps
+            else:
+                scores[np.searchsorted(cand, docs.astype(np.int64))] \
+                    += index.impact(t)
     return cand, scores
 
 
@@ -726,31 +809,32 @@ def _maxscore(index: InvertedIndex, terms, k: int, *, plan, probe_width,
     # accounting subtracts these so "pruned" means never decoded anywhere
     touched: dict[int, set] = {}
     if max(tp.n_blocks for tp in tps) > 4 * strip_blocks:
-        seeds = [c for c in cursors if c.tp.n_blocks <= strip_blocks]
-        parts = []
-        for c in seeds:
-            docs, imps = c.pull(int(c.tp.last_doc[-1]), None, 0,
-                                plan=plan, stats=st)
-            if docs.size:
-                parts.append((docs, imps))
-                seed_docs.append((c, docs))
-        if parts:
-            cand = np.unique(np.concatenate([p[0] for p in parts]))
-            scores = np.zeros(cand.size, np.int64)
-            for docs, imps in parts:
-                scores[np.searchsorted(cand, docs)] += imps
-            for c in cursors:
-                if c not in seeds:
-                    _score_term(c.tp, c.base_impact, cand,
-                                np.arange(cand.size), scores,
-                                has_tf=index.has_tf,
-                                probe_width=probe_width, plan=plan,
-                                stats=st,
-                                touched=touched.setdefault(c.tp.term,
-                                                           set()))
-            order = np.lexsort((cand, -scores))[:k]
-            top_d, top_s = cand[order], scores[order]
-            seeded = cand
+        with _trace("seed"):
+            seeds = [c for c in cursors if c.tp.n_blocks <= strip_blocks]
+            parts = []
+            for c in seeds:
+                docs, imps = c.pull(int(c.tp.last_doc[-1]), None, 0,
+                                    plan=plan, stats=st)
+                if docs.size:
+                    parts.append((docs, imps))
+                    seed_docs.append((c, docs))
+            if parts:
+                cand = np.unique(np.concatenate([p[0] for p in parts]))
+                scores = np.zeros(cand.size, np.int64)
+                for docs, imps in parts:
+                    scores[np.searchsorted(cand, docs)] += imps
+                for c in cursors:
+                    if c not in seeds:
+                        _score_term(c.tp, c.base_impact, cand,
+                                    np.arange(cand.size), scores,
+                                    has_tf=index.has_tf,
+                                    probe_width=probe_width, plan=plan,
+                                    stats=st,
+                                    touched=touched.setdefault(c.tp.term,
+                                                               set()))
+                order = np.lexsort((cand, -scores))[:k]
+                top_d, top_s = cand[order], scores[order]
+                seeded = cand
 
     timed_out = False
     while True:
@@ -889,6 +973,17 @@ def topk(
     if isinstance(k, bool) or not isinstance(k, (int, np.integer)) or k < 1:
         raise ValueError(f"k must be a positive integer, got {k!r}")
     k = int(k)
+    with _trace("topk", mode=mode, k=k) as sp:
+        out = _topk_impl(index, terms, k, mode=mode, plan=plan,
+                         probe_width=probe_width, stats=stats,
+                         use_skip=use_skip, deadline=deadline)
+        if sp and stats is not None:
+            sp.set(**stats.span_attrs())
+        return out
+
+
+def _topk_impl(index: InvertedIndex, terms, k: int, *, mode, plan,
+               probe_width, stats, use_skip, deadline):
     if mode == "or" or (mode == "maxscore" and not use_skip):
         cand, scores = _taat_scores(index, terms, plan=plan, stats=stats,
                                     use_skip=use_skip, deadline=deadline)
@@ -956,5 +1051,6 @@ def topk(
         raise ValueError(
             f"unknown topk mode {mode!r}; expected "
             "'or'/'maxscore'/'and'/'driver'")
-    order = np.lexsort((cand, -scores))[:k]
-    return cand[order].astype(np.uint32), scores[order].astype(np.int32)
+    with _trace("topk-select", candidates=int(cand.size)):
+        order = np.lexsort((cand, -scores))[:k]
+        return cand[order].astype(np.uint32), scores[order].astype(np.int32)

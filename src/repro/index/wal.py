@@ -39,8 +39,10 @@ from __future__ import annotations
 import json
 import os
 import struct
+import time
 import zlib
 
+from repro.obs import histogram_observe as _obs_histogram_observe
 from repro.robustness.atomic_io import fsync_dir
 from repro.robustness.validate import WalError
 
@@ -86,10 +88,16 @@ class WalWriter:
 
     def append(self, op: dict) -> int:
         """Durably append one op; returns the byte offset after it."""
-        self._f.write(encode_record(op))
+        rec = encode_record(op)
+        t0 = time.perf_counter()
+        self._f.write(rec)
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+        _obs_histogram_observe("wal_append_seconds",
+                               time.perf_counter() - t0,
+                               fsync=self.fsync)
+        _obs_histogram_observe("wal_record_bytes", len(rec))
         return self._f.tell()
 
     def tell(self) -> int:

@@ -52,6 +52,8 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.obs import counter_inc as _obs_counter_inc, trace as _obs_trace
+
 from repro.core.vbyte import binpack_masked as bpk_masked
 from repro.core.vbyte import masked as vmasked
 from repro.core.vbyte import stream_masked as svb_masked
@@ -191,9 +193,11 @@ def resolve_plan(plan, *, format: str, epilogue: str,
     if plan in (None, "auto"):
         entry = load_cache().get(cache_key(format, epilogue, block_size))
         if entry and "plan" in entry:
+            _obs_counter_inc("plan_cache_total", result="hit")
             p = entry["plan"]
             return DecodePlan(p["path"], p["fused"], p.get("block_tile", 8),
                               p.get("chunk"))
+        _obs_counter_inc("plan_cache_total", result="miss")
         d = default_plan(epilogue, format)
         return replace(d, chunk=_clamp_chunk(d.chunk, block_size))
     if plan in ("kernel", "pallas"):
@@ -460,17 +464,22 @@ def decode(
             "plan='sharded' requires operands whose block dimension is "
             "sharded over a >1-device mesh axis — use "
             "CompressedIntArray.shard(mesh, axis=...) first")
-    if mesh_axes is not None:
-        mesh, axes = mesh_axes
-        q = extras["query"] if epilogue == "dot_score" else None
-        multi_query = bool(q is not None and q.size // q.shape[-1] > 1)
-        fn = _build_sharded_fn(mesh, axes, format, epilogue, block_size,
-                               differential, p, interpret, multi_query,
-                               tuple(sorted(extras)))
-        return fn(operands, extras)
-    return _execute(operands, extras, format=format, epilogue=epilogue,
-                    block_size=block_size, differential=differential,
-                    plan=p, interpret=interpret)
+    _obs_counter_inc("decode_calls_total", plan=p.label, format=format,
+                     epilogue=epilogue)
+    with _obs_trace("decode", format=format, plan=p.label, epilogue=epilogue,
+                    blocks=int(nb), chunk=p.chunk,
+                    sharded=mesh_axes is not None):
+        if mesh_axes is not None:
+            mesh, axes = mesh_axes
+            q = extras["query"] if epilogue == "dot_score" else None
+            multi_query = bool(q is not None and q.size // q.shape[-1] > 1)
+            fn = _build_sharded_fn(mesh, axes, format, epilogue, block_size,
+                                   differential, p, interpret, multi_query,
+                                   tuple(sorted(extras)))
+            return fn(operands, extras)
+        return _execute(operands, extras, format=format, epilogue=epilogue,
+                        block_size=block_size, differential=differential,
+                        plan=p, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

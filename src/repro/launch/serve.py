@@ -31,6 +31,12 @@ import json
 import os
 import time
 
+from repro.obs import counter_inc as _obs_counter_inc, trace as _obs_trace
+# moved to repro.obs.stats (one percentile definition repo-wide);
+# re-exported here because engines and benchmarks historically import it
+# from this module
+from repro.obs.stats import latency_summary  # noqa: F401
+
 
 def serve_lm(cfg, tokens_to_gen: int, batch: int):
     import numpy as np
@@ -95,19 +101,6 @@ def serve_recsys(cfg, batch: int):
     dt = (time.time() - t0) / 10
     print(f"scored batch {batch}: {dt*1e3:.2f} ms/request "
           f"(scores shape {scores.shape})")
-
-
-def latency_summary(lat_s, wall_s: float, n_requests: int) -> dict:
-    """Shared QPS + percentile block for the engines' workload reports."""
-    import numpy as np
-
-    lat_ms = np.sort(np.asarray(lat_s)) * 1e3
-    return {
-        "qps": round(n_requests / wall_s, 1),
-        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
-        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
-        "mean_ms": round(float(lat_ms.mean()), 3),
-    }
 
 
 # ---------------------------------------------------------------------------
@@ -278,13 +271,16 @@ class ServingEngine:
             b = self.bucket_of(take)
             chunk = requests[i:i + take]
             t0 = time.perf_counter()
-            uid = np.full(b, 1, np.int32)
-            hist = np.ones((b, self.cfg.seq_len), np.int32)
-            for j, (u, h) in enumerate(chunk):
-                uid[j] = u
-                hist[j] = h
-            top_s, top_i = self.retrieve(jnp.asarray(uid), jnp.asarray(hist))
-            jax.block_until_ready((top_s, top_i))
+            with _obs_trace("microbatch", bucket=int(b), requests=int(take)):
+                uid = np.full(b, 1, np.int32)
+                hist = np.ones((b, self.cfg.seq_len), np.int32)
+                for j, (u, h) in enumerate(chunk):
+                    uid[j] = u
+                    hist[j] = h
+                top_s, top_i = self.retrieve(jnp.asarray(uid),
+                                             jnp.asarray(hist))
+                jax.block_until_ready((top_s, top_i))
+            _obs_counter_inc("serve_requests_total", take, engine="serving")
             dt = time.perf_counter() - t0
             lat.extend([dt] * take)  # whole microbatch completes together
             self.detector.heartbeat("serve-host", self._step)
@@ -440,14 +436,22 @@ class SearchEngine:
             except DecodeError as e:
                 self._quarantine(t, str(e))
 
+    def _bump(self, key: str, n: int = 1, **labels):
+        """Increment one robustness counter: the ``serve_stats`` dict (the
+        stable in-process API benchmarks/tests read and reset) and, when
+        telemetry is installed, the ``serve_<key>_total`` labeled counter
+        in the metrics registry (docs/observability.md)."""
+        self.serve_stats[key] += n
+        _obs_counter_inc(f"serve_{key}_total", n, engine="search", **labels)
+
     def _quarantine(self, term, reason: str):
         if term in self.quarantined:
             return
         self.quarantined[term] = reason
-        self.serve_stats["quarantined_terms"] += 1
+        self._bump("quarantined_terms")
         tp = self.index.terms.get(term)
         if tp is not None:
-            self.serve_stats["quarantined_blocks"] += tp.n_blocks
+            self._bump("quarantined_blocks", tp.n_blocks)
 
     # -- logical-shard health (ft.heartbeat + ft.elastic) ------------------
     def _assign_shards(self, intervals):
@@ -539,57 +543,74 @@ class SearchEngine:
         from repro.index import QueryStats
         from repro.robustness import Deadline, DecodeError
 
-        qst = QueryStats()  # per-call: the degraded flag must be per query
-        if deadline is None and self.deadline_s is not None:
-            deadline = Deadline(self.deadline_s, clock=self.clock)
-        live = []
-        for t in dict.fromkeys(terms):
-            if t in self.quarantined:
-                qst.mark_degraded(f"quarantined-term:{t}")
-                tp = self.index.terms.get(t)
-                qst.quarantined_blocks += tp.n_blocks if tp else 0
-            elif self.shard_of.get(t) in self.dead_shards:
-                qst.mark_degraded(f"dead-shard:{self.shard_of[t]}")
-            else:
-                live.append(t)
-        eff = mode
-        if mode == "topk_maxscore" and any(t in self.bound_unsafe
-                                           for t in live):
-            eff = "topk"  # exhaustive TAAT: exact without the bounds
-            qst.bound_fallbacks += 1
-            self.serve_stats["bound_fallbacks"] += 1
-        attempt = 0
-        while True:
-            try:
-                if self.fault_hook is not None:
-                    self.fault_hook(attempt, live, eff)
-                out = self._run_query(live, eff, qst, deadline)
-                break
-            except DecodeError as e:
-                qst.errors += 1
-                self.serve_stats["errors"] += 1
-                term = getattr(e, "term", None)
-                if term is not None and term in live:
-                    # the segment itself is bad — quarantine it and answer
-                    # the query from the remaining terms
-                    self._quarantine(term, str(e))
-                    live = [t for t in live if t != term]
-                    qst.mark_degraded(f"quarantined-term:{term}")
-                elif attempt >= self.max_retries:
-                    qst.mark_degraded("retries-exhausted")
-                    out = self._run_query([], eff, qst, deadline)
-                    break
-                else:
-                    attempt += 1
-                    qst.retries += 1
-                    self.serve_stats["retries"] += 1
-                    if self.backoff_s:
-                        time.sleep(self.backoff_s * attempt)
-        if qst.degraded:
-            self.serve_stats["degraded_responses"] += 1
-        if stats is not None:
-            stats.merge(qst)
-        return out
+        with _obs_trace("request", mode=mode, terms=len(terms)) as rspan:
+            with _obs_trace("admission"):
+                qst = QueryStats()  # per-call: degraded flag is per query
+                if deadline is None and self.deadline_s is not None:
+                    deadline = Deadline(self.deadline_s, clock=self.clock)
+                live = []
+                for t in dict.fromkeys(terms):
+                    if t in self.quarantined:
+                        qst.mark_degraded(f"quarantined-term:{t}")
+                        tp = self.index.terms.get(t)
+                        qst.quarantined_blocks += tp.n_blocks if tp else 0
+                    elif self.shard_of.get(t) in self.dead_shards:
+                        qst.mark_degraded(f"dead-shard:{self.shard_of[t]}")
+                    else:
+                        live.append(t)
+                eff = mode
+                if mode == "topk_maxscore" and any(t in self.bound_unsafe
+                                                   for t in live):
+                    eff = "topk"  # exhaustive TAAT: exact without bounds
+                    qst.bound_fallbacks += 1
+                    self._bump("bound_fallbacks")
+            with _obs_trace("execute", mode=eff):
+                attempt = 0
+                while True:
+                    try:
+                        if self.fault_hook is not None:
+                            self.fault_hook(attempt, live, eff)
+                        out = self._run_query(live, eff, qst, deadline)
+                        break
+                    except DecodeError as e:
+                        qst.errors += 1
+                        self._bump("errors", error=type(e).__name__)
+                        term = getattr(e, "term", None)
+                        if term is not None and term in live:
+                            # the segment itself is bad — quarantine it and
+                            # answer the query from the remaining terms
+                            self._quarantine(term, str(e))
+                            live = [t for t in live if t != term]
+                            qst.mark_degraded(f"quarantined-term:{term}")
+                        elif attempt >= self.max_retries:
+                            qst.mark_degraded("retries-exhausted")
+                            out = self._run_query([], eff, qst, deadline)
+                            break
+                        else:
+                            attempt += 1
+                            qst.retries += 1
+                            self._bump("retries")
+                            if self.backoff_s:
+                                time.sleep(self.backoff_s * attempt)
+            with _obs_trace("finalize"):
+                _obs_counter_inc("serve_requests_total", mode=mode,
+                                 engine="search")
+                if qst.degraded:
+                    self._bump("degraded_responses")
+                    for r in qst.degraded_reasons:
+                        cat, _, where = r.partition(":")
+                        _obs_counter_inc("serve_degraded_total", reason=cat,
+                                         engine="search")
+                        if cat == "deadline":
+                            _obs_counter_inc("serve_deadline_hits_total",
+                                             where=where, engine="search")
+                if rspan:
+                    rspan.set(mode_effective=eff, degraded=qst.degraded,
+                              n_results=int(len(out[0]) if isinstance(
+                                  out, tuple) else len(out)))
+                if stats is not None:
+                    stats.merge(qst)
+            return out
 
     def warmup(self, queries):
         """Run each (mode, terms) query once to compile its shapes."""
@@ -675,9 +696,51 @@ def search_queries(rng, index, n_queries: int, *,
     return out
 
 
+def stage_latency_summary(tracer, stages=("decode", "gallop", "merge",
+                                          "score", "topk", "topk-select",
+                                          "seed", "request", "admission",
+                                          "execute")) -> dict:
+    """Per-stage latency block from a tracer's finished spans: for each
+    stage name with ≥1 span, count + p50/p99/mean milliseconds. This is the
+    ``observability`` benchmarks.json section and the report headline."""
+    from repro.obs.stats import percentile
+
+    out = {}
+    for name in stages:
+        ds = [d * 1e3 for d in tracer.durations(name)]
+        if ds:
+            out[name] = {"count": len(ds),
+                         "p50_ms": round(percentile(ds, 50), 3),
+                         "p99_ms": round(percentile(ds, 99), 3),
+                         "mean_ms": round(sum(ds) / len(ds), 3)}
+    return out
+
+
+def write_metrics_out(tele, out_dir: str) -> dict:
+    """Export one telemetry capture: Prometheus exposition
+    (``metrics.prom``), the JSONL span log (``trace.jsonl``), and the
+    Chrome/Perfetto trace (``trace-chrome.json``). Returns the paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {"prometheus": os.path.join(out_dir, "metrics.prom"),
+             "jsonl": os.path.join(out_dir, "trace.jsonl"),
+             "chrome": os.path.join(out_dir, "trace-chrome.json")}
+    with open(paths["prometheus"], "w") as f:
+        f.write(tele.registry.to_prometheus())
+    tele.tracer.write_jsonl(paths["jsonl"])
+    tele.tracer.write_chrome_trace(paths["chrome"])
+    return paths
+
+
 def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
-                 top_k: int = 10, record: bool = True, seed: int = 0) -> dict:
-    """Build a synthetic posting-list index and drive a query workload."""
+                 top_k: int = 10, record: bool = True, seed: int = 0,
+                 metrics_out: str | None = None) -> dict:
+    """Build a synthetic posting-list index and drive a query workload.
+
+    ``metrics_out=DIR`` installs a telemetry capture around the measured
+    workload and writes the three exports there (see
+    :func:`write_metrics_out`); the per-stage latency breakdown is merged
+    into benchmarks.json as the ``observability`` section.
+    """
     import numpy as np
 
     import jax
@@ -699,14 +762,41 @@ def serve_search(*, queries: int, group_k: int = 10, n_lists: int = 16,
     engine = SearchEngine(index, mesh=mesh, top_k=top_k)
     qs = search_queries(rng, index, queries)
     engine.warmup(qs)  # compile every query's shapes; timing is steady-state
-    stats = engine.run_workload(qs)
+    tele = None
+    if metrics_out:
+        from repro import obs
+
+        tele = obs.Telemetry()
+        obs.install(tele)
+    try:
+        stats = engine.run_workload(qs)
+    finally:
+        if tele is not None:
+            from repro import obs
+
+            obs.uninstall()
     print(f"served {stats['n_queries']} queries on {stats['n_devices']} "
           f"device(s): {stats['qps']} QPS, p50 {stats['p50_ms']} ms, "
           f"p99 {stats['p99_ms']} ms, block skip rate "
           f"{stats['block_skip_rate']}, pruned block rate "
           f"{stats['pruned_block_rate']}")
+    if tele is not None:
+        paths = write_metrics_out(tele, metrics_out)
+        obs_stats = {
+            "n_queries": len(qs),
+            "n_traces": len(tele.tracer.trees()),
+            "stages": stage_latency_summary(tele.tracer),
+        }
+        print(f"telemetry capture -> {metrics_out} "
+              f"({obs_stats['n_traces']} span trees)")
+        if record:
+            record_benchmark("observability", obs_stats)
+        stats = dict(stats, observability=obs_stats, metrics_paths=paths)
     if record:
-        path = record_benchmark("search_engine", stats)
+        path = record_benchmark("search_engine",
+                                {k: v for k, v in stats.items()
+                                 if k not in ("observability",
+                                              "metrics_paths")})
         print(f"recorded -> {path}")
     return stats
 
@@ -856,10 +946,19 @@ class LiveSearchEngine:
         self.live.delete(doc)
 
     def search(self, terms, mode: str = "and", *, stats=None):
-        if mode == "topk":
-            return self.live.search(terms, mode="topk", k=self.top_k,
-                                    stats=stats)
-        return self.live.search(terms, mode=mode, stats=stats)
+        with _obs_trace("request", mode=mode, terms=len(terms),
+                        engine="live") as rspan:
+            _obs_counter_inc("serve_requests_total", mode=mode,
+                             engine="live")
+            if mode == "topk":
+                out = self.live.search(terms, mode="topk", k=self.top_k,
+                                       stats=stats)
+            else:
+                out = self.live.search(terms, mode=mode, stats=stats)
+            if rspan and stats is not None:
+                rspan.set(degraded=stats.degraded,
+                          state=self.live.state)
+            return out
 
     def run_workload(self, queries) -> dict:
         """Drive (mode, terms) queries; aggregate QPS/latency plus the
@@ -1147,6 +1246,10 @@ def main():
     ap.add_argument("--top-k", type=int, default=10)
     ap.add_argument("--no-record", action="store_true",
                     help="skip merging engine stats into benchmarks.json")
+    ap.add_argument("--metrics-out", default=None, metavar="DIR",
+                    help="search arch: capture telemetry over the workload "
+                         "and write metrics.prom / trace.jsonl / "
+                         "trace-chrome.json to DIR (docs/observability.md)")
     ap.add_argument("--degraded-smoke", action="store_true",
                     help="search arch: kill one logical shard mid-workload "
                          "and assert flagged partial results + healing")
@@ -1176,7 +1279,8 @@ def main():
                                   record=not args.no_record)
         else:
             serve_search(queries=args.requests, top_k=args.top_k,
-                         record=not args.no_record)
+                         record=not args.no_record,
+                         metrics_out=args.metrics_out)
         return
 
     from repro.distributed.api import activate_mesh

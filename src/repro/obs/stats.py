@@ -1,0 +1,46 @@
+"""Shared percentile / latency-summary math.
+
+One definition of p50/p99 for the whole repo: the serving engines
+(``launch/serve.py``), ``benchmarks/serving.py``, ``benchmarks/index_query.py``
+and ``benchmarks/ingestion.py`` all report through here, so every table uses
+identical percentile semantics (linear interpolation between closest ranks,
+matching ``numpy.percentile``'s default) instead of four private copies.
+
+Pure stdlib so ``repro.obs`` stays importable without numpy.
+"""
+from __future__ import annotations
+
+
+def percentile(samples, q: float) -> float:
+    """q-th percentile (``q`` in [0, 100]) with linear interpolation.
+
+    Matches ``numpy.percentile(samples, q)`` (default ``linear`` method)
+    bit-for-bit on float inputs. Raises on an empty sample set — a summary
+    over zero requests is a caller bug, not a zero.
+    """
+    xs = sorted(float(v) for v in samples)
+    if not xs:
+        raise ValueError("percentile() of empty sample set")
+    if len(xs) == 1:
+        return xs[0]
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def latency_summary(lat_s, wall_s: float, n_requests: int) -> dict:
+    """Shared QPS + percentile block for workload reports.
+
+    ``lat_s`` is per-request latencies in seconds; the summary reports
+    milliseconds. Same keys/rounding the serving engines have always
+    emitted: ``{"qps", "p50_ms", "p99_ms", "mean_ms"}``.
+    """
+    lat_ms = [float(v) * 1e3 for v in lat_s]
+    return {
+        "qps": round(n_requests / wall_s, 1),
+        "p50_ms": round(percentile(lat_ms, 50), 3),
+        "p99_ms": round(percentile(lat_ms, 99), 3),
+        "mean_ms": round(sum(lat_ms) / len(lat_ms), 3),
+    }
